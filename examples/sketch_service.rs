@@ -1,0 +1,105 @@
+//! The L3 coordinator in action: start the sketch service (XLA-backed when
+//! artifacts exist), hammer it from concurrent clients, print the serving
+//! stats (throughput, latency percentiles, batch fill, rejections).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example sketch_service -- \
+//!     --clients 8 --requests 500
+//! ```
+
+use fcs::coordinator::{Request, Response, Service, ServiceConfig, ServiceError, SketchMethod};
+use fcs::tensor::Tensor;
+use fcs::util::cli::Args;
+use fcs::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let clients = args.get_usize("clients", 8);
+    let per_client = args.get_usize("requests", 500);
+
+    let runtime = match fcs::runtime::spawn_runtime(None) {
+        Ok(rt) => {
+            println!("XLA runtime up: artifacts at {}", rt.dir.display());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("no artifacts ({e}); running on the pure-Rust path");
+            None
+        }
+    };
+    let svc = Service::start(ServiceConfig::default(), runtime)?;
+    let h = svc.handle();
+    println!(
+        "service up: cs_vec dim {} → {}, {} clients × {} requests",
+        h.cs_in_dim, h.cs_out_dim, clients, per_client
+    );
+
+    let sw = fcs::util::timing::Stopwatch::start();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(c as u64);
+                let mut done = 0usize;
+                let mut busy = 0usize;
+                for i in 0..per_client {
+                    // Mix of ops: mostly batched cs_vec, some tensor sketches
+                    // and estimates through the worker pool.
+                    let req = match i % 10 {
+                        0 => {
+                            let t = Tensor::randn(&mut rng, &[8, 8, 8]);
+                            Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 64 }
+                        }
+                        1 => {
+                            let a = Tensor::randn(&mut rng, &[6, 6, 6]);
+                            Request::InnerEstimate {
+                                b: a.clone(),
+                                a,
+                                method: SketchMethod::Fcs,
+                                j: 512,
+                                d: 5,
+                            }
+                        }
+                        _ => Request::CsVec { x: rng.normal_vec(h.cs_in_dim) },
+                    };
+                    loop {
+                        match h.call(req.clone()) {
+                            Ok(Response::Sketch(_)) | Ok(Response::Scalar(_)) => {
+                                done += 1;
+                                break;
+                            }
+                            Err(ServiceError::Busy) => {
+                                busy += 1;
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                }
+                (done, busy)
+            })
+        })
+        .collect();
+    let mut total = 0;
+    let mut retries = 0;
+    for t in threads {
+        let (d, b) = t.join().unwrap();
+        total += d;
+        retries += b;
+    }
+    let secs = sw.elapsed_secs();
+
+    let report = svc.stats();
+    println!("\n{total} requests served in {secs:.2}s → {:.0} req/s ({retries} busy-retries)",
+        total as f64 / secs);
+    println!("batches: {} (mean fill {:.1}/32), rejected: {}", report.batches,
+        report.mean_batch_fill, report.rejected_busy);
+    for op in &report.per_op {
+        println!(
+            "  {:<15} n={:<6} p50 {:>8.0}µs  p95 {:>8.0}µs  p99 {:>8.0}µs",
+            op.op, op.completed, op.p50_us, op.p95_us, op.p99_us
+        );
+    }
+    svc.shutdown();
+    Ok(())
+}

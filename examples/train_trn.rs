@@ -1,0 +1,66 @@
+//! **End-to-end driver** (DESIGN.md §4, EXPERIMENTS.md §E2E): train the
+//! sketched CP tensor-regression network on the FMNIST-like dataset, fully
+//! through the three-layer stack — Rust owns the training loop and data,
+//! the AOT-compiled XLA train-step (JAX fwd/bwd calling the Pallas
+//! count-sketch kernel) does the math. Python is not running.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_trn -- \
+//!     --method fcs --cr 20 --steps 300
+//! ```
+
+use fcs::runtime::spawn_runtime;
+use fcs::trn::{train_and_eval, TrnMethod, TrnRunConfig};
+use fcs::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let method = TrnMethod::parse(&args.get_or("method", "fcs"))
+        .expect("--method must be cs|ts|fcs");
+    let cr_tag = args.get_or("cr", "20").replace('.', "p");
+    let steps = args.get_usize("steps", 300);
+
+    let rt = spawn_runtime(None)?;
+    println!(
+        "artifacts: {} ({} compiled graphs available)",
+        rt.dir.display(),
+        rt.manifest().entries.len()
+    );
+
+    let cfg = TrnRunConfig {
+        method,
+        cr_tag: cr_tag.clone(),
+        steps,
+        lr: args.get_f64("lr", 0.05) as f32,
+        train_size: args.get_usize("train-size", 6400),
+        test_size: args.get_usize("test-size", 1024),
+        seed: args.get_usize("seed", 1234) as u64,
+        log_every: args.get_usize("log-every", 20),
+    };
+    println!(
+        "training sketched CP-TRL: method={} CR tag={} steps={} lr={}",
+        method.name(),
+        cr_tag,
+        steps,
+        cfg.lr
+    );
+    let res = train_and_eval(&rt, &cfg)?;
+
+    // Loss curve (downsampled ASCII log).
+    println!("\nloss curve (every ~{} steps):", (res.losses.len() / 20).max(1));
+    let stride = (res.losses.len() / 20).max(1);
+    for (i, chunk) in res.losses.chunks(stride).enumerate() {
+        let mean = chunk.iter().sum::<f64>() / chunk.len() as f64;
+        let bars = ((mean / res.losses[0]).min(1.0) * 50.0) as usize;
+        println!("  step {:4}  loss {:.4}  {}", i * stride, mean, "#".repeat(bars));
+    }
+    println!(
+        "\nfinal loss {:.4} (from {:.4}); test accuracy {:.2}% (chance = 10%); \
+         train time {:.1}s",
+        res.losses.last().unwrap(),
+        res.losses[0],
+        res.accuracy * 100.0,
+        res.train_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO **text** artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--full]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Table-4 compression ratios. The default subset keeps `make artifacts`
+# fast; --full emits every CR from the paper.
+CR_SUBSET = [20.0, 50.0, 100.0, 200.0]
+CR_FULL = [20.0, 22.22, 25.0, 28.57, 33.33, 40.0, 50.0, 66.67, 100.0, 200.0]
+
+TRN_BATCH = 64
+CS_BATCH = 32
+CS_IN_DIM = model.ACT_DIM
+CS_OUT_DIM = 256
+FCS_RANK1_DIM = 64
+FCS_RANK1_RANK = 8
+FCS_RANK1_J = 128
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def j_for_cr(cr):
+    """Per-mode hash length J s.t. the FCS sketch length 3J−2 ≈ ACT_DIM/cr."""
+    target = max(4, round(model.ACT_DIM / cr))
+    return max(2, (target + 2) // 3)
+
+
+def table_specs():
+    """Hash-table inputs shared by every TRN artifact."""
+    i1, i2, i3 = model.ACT_SHAPE
+    return [
+        spec((i1,), jnp.int32), spec((i1,)),
+        spec((i2,), jnp.int32), spec((i2,)),
+        spec((i3,), jnp.int32), spec((i3,)),
+        spec((model.ACT_DIM,), jnp.int32), spec((model.ACT_DIM,)),
+    ]
+
+
+def emit(out_dir, name, fn, arg_specs, manifest, meta=None):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest[name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in arg_specs
+        ],
+        "meta": meta or {},
+    }
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="emit all Table-4 CRs")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+
+    # --- coordinator-served sketch graphs -------------------------------
+    emit(
+        args.out_dir,
+        "cs_batch",
+        lambda x, h, s: model.cs_batch_graph(x, h, s, out_dim=CS_OUT_DIM),
+        [
+            spec((CS_BATCH, CS_IN_DIM)),
+            spec((CS_IN_DIM,), jnp.int32),
+            spec((CS_IN_DIM,)),
+        ],
+        manifest,
+        meta={"batch": CS_BATCH, "in_dim": CS_IN_DIM, "out_dim": CS_OUT_DIM},
+    )
+
+    i, r, j = FCS_RANK1_DIM, FCS_RANK1_RANK, FCS_RANK1_J
+    emit(
+        args.out_dir,
+        "fcs_rank1",
+        model.fcs_rank1_graph(j),
+        [
+            spec((i, r)), spec((i, r)), spec((i, r)), spec((r,)),
+            spec((i,), jnp.int32), spec((i,)),
+            spec((i,), jnp.int32), spec((i,)),
+            spec((i,), jnp.int32), spec((i,)),
+        ],
+        manifest,
+        meta={"dim": i, "rank": r, "j": j, "j_tilde": 3 * j - 2},
+    )
+
+    # --- TRN train/infer artifacts (Table 4) ----------------------------
+    crs = CR_FULL if args.full else CR_SUBSET
+    pshapes = [spec(s) for _, s in model.param_shapes()]
+    for method in ("cs", "ts", "fcs"):
+        for cr in crs:
+            j = j_for_cr(cr)
+            s_dim = model.sketch_dim(method, j)
+            # cs/ts use sketch length == fcs's 3J−2 so all methods share the
+            # exact same CR (the paper equalizes sketched dims).
+            if method in ("cs", "ts"):
+                jj = 3 * j - 2
+            else:
+                jj = j
+            s_dim = model.sketch_dim(method, jj)
+            cr_tag = f"{cr:g}".replace(".", "p")
+            train_args = (
+                pshapes
+                + [spec((TRN_BATCH, 28, 28, 1)), spec((TRN_BATCH,), jnp.int32), spec(())]
+                + table_specs()
+            )
+            emit(
+                args.out_dir,
+                f"trn_train_{method}_cr{cr_tag}",
+                model.make_train_step(method, jj),
+                train_args,
+                manifest,
+                meta={
+                    "method": method, "cr": cr, "j": jj, "sketch_dim": s_dim,
+                    "batch": TRN_BATCH, "rank": model.CP_RANK,
+                },
+            )
+            infer_args = pshapes + [spec((TRN_BATCH, 28, 28, 1))] + table_specs()
+            emit(
+                args.out_dir,
+                f"trn_infer_{method}_cr{cr_tag}",
+                model.make_infer(method, jj),
+                infer_args,
+                manifest,
+                meta={
+                    "method": method, "cr": cr, "j": jj, "sketch_dim": s_dim,
+                    "batch": TRN_BATCH,
+                },
+            )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

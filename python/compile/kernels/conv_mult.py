@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: FFT-domain Hadamard product.
+
+The spectral multiply at the heart of Eq. 8 (`F(CS₁)·F(CS₂)·…`): elementwise
+complex multiplication over `[R, n]` spectra. Pure VPU map kernel; the FFTs
+themselves stay at Layer 2 (XLA's FFT is already optimal). Complex numbers
+are carried as separate re/im planes because Pallas TPU tiling is over real
+dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmul_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    or_ref[...] = ar * br - ai * bi
+    oi_ref[...] = ar * bi + ai * br
+
+
+@jax.custom_vjp
+def complex_mult(ar, ai, br, bi):
+    """Elementwise complex product of two spectra given as re/im planes.
+
+    All four inputs share one shape (typically ``f32[R, n]``).
+    Returns ``(re, im)``.
+    """
+    return _complex_mult_impl(ar, ai, br, bi)
+
+
+def _complex_mult_fwd(ar, ai, br, bi):
+    return _complex_mult_impl(ar, ai, br, bi), (ar, ai, br, bi)
+
+
+def _complex_mult_bwd(res, g):
+    # c = a·b  ⇒  ā += ḡ·conj(b), b̄ += ḡ·conj(a) (Wirtinger calculus on
+    # the real/imag planes).
+    ar, ai, br, bi = res
+    gr, gi = g
+    dar = gr * br + gi * bi
+    dai = gi * br - gr * bi
+    dbr = gr * ar + gi * ai
+    dbi = gi * ar - gr * ai
+    return dar, dai, dbr, dbi
+
+
+complex_mult.defvjp(_complex_mult_fwd, _complex_mult_bwd)
+
+
+@jax.jit
+def _complex_mult_impl(ar, ai, br, bi):
+    assert ar.shape == ai.shape == br.shape == bi.shape
+    shape = ar.shape
+    out_shape = (
+        jax.ShapeDtypeStruct(shape, ar.dtype),
+        jax.ShapeDtypeStruct(shape, ar.dtype),
+    )
+    return pl.pallas_call(
+        _cmul_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(ar, ai, br, bi)
+
+
+def spectra_product(specs):
+    """Fold ``complex_mult`` over a list of (re, im) spectra."""
+    acc_r, acc_i = specs[0]
+    for r, i in specs[1:]:
+        acc_r, acc_i = complex_mult(acc_r, acc_i, r, i)
+    return acc_r, acc_i

@@ -1,0 +1,143 @@
+"""Layer-1 Pallas kernel: batched count sketch.
+
+The paper's `O(nnz)` primitive (Definition 1): for each row `x` of a batch,
+``out[h[i]] += s[i] * x[i]``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch dimension is the
+Pallas grid; each program keeps its length-`J` accumulator resident in VMEM
+and streams its `x` row HBM→VMEM via BlockSpec. The sign flip fuses into the
+load. Arbitrary scatter is VPU work — the MXU alternative (one-hot matmul)
+is kept in `ref.py` as `count_sketch_onehot_ref` for comparison.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain
+HLO (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import dtypes
+from jax.experimental import pallas as pl
+
+
+def _cs_kernel(x_ref, h_ref, s_ref, o_ref):
+    """One grid step: count-sketch one row of the batch."""
+    x = x_ref[0, :]  # [I]  f32
+    h = h_ref[...]   # [I]  i32
+    s = s_ref[...]   # [I]  f32 (±1)
+    acc = jnp.zeros((o_ref.shape[-1],), o_ref.dtype)
+    o_ref[0, :] = acc.at[h].add(s * x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cs_batch_vjp(x, h, s, out_dim):
+    return _cs_batch_impl(x, h, s, out_dim)
+
+
+def _cs_batch_fwd(x, h, s, out_dim):
+    return _cs_batch_impl(x, h, s, out_dim), (h, s)
+
+
+def _cs_batch_bwd(out_dim, res, g):
+    # CS is linear in x: the adjoint of scatter-add is a (signed) gather.
+    h, s = res
+    dx = s[None, :] * g[:, h]
+    return dx, np.zeros(h.shape, dtypes.float0), jnp.zeros(s.shape, s.dtype)
+
+
+_cs_batch_vjp.defvjp(_cs_batch_fwd, _cs_batch_bwd)
+
+
+def count_sketch_batch(x, h, s, *, out_dim):
+    """Count sketch of each row of ``x``.
+
+    Args:
+      x: ``f32[B, I]`` batch of vectors.
+      h: ``i32[I]`` bucket table, values in ``[0, out_dim)``.
+      s: ``f32[I]`` sign table (±1).
+      out_dim: ``J`` — sketch length.
+
+    Returns:
+      ``f32[B, out_dim]``.
+    """
+    return _cs_batch_vjp(x, h, s, out_dim)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim",))
+def _cs_batch_impl(x, h, s, out_dim):
+    b, i = x.shape
+    return pl.pallas_call(
+        _cs_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, i), lambda bi: (bi, 0)),
+            pl.BlockSpec((i,), lambda bi: (0,)),
+            pl.BlockSpec((i,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, out_dim), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, out_dim), x.dtype),
+        interpret=True,
+    )(x, h, s)
+
+
+def _cs_cols_kernel(m_ref, h_ref, s_ref, o_ref):
+    """Count-sketch one column of a factor matrix (CS_n(U)(:, r))."""
+    m = m_ref[0, :]  # [I]
+    h = h_ref[...]
+    s = s_ref[...]
+    acc = jnp.zeros((o_ref.shape[-1],), o_ref.dtype)
+    o_ref[0, :] = acc.at[h].add(s * m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cs_cols_vjp(m, h, s, out_dim):
+    return _cs_cols_impl(m, h, s, out_dim)
+
+
+def _cs_cols_fwd(m, h, s, out_dim):
+    return _cs_cols_impl(m, h, s, out_dim), (h, s)
+
+
+def _cs_cols_bwd(out_dim, res, g):
+    h, s = res
+    dm = s[:, None] * g[h, :]
+    return dm, np.zeros(h.shape, dtypes.float0), jnp.zeros(s.shape, s.dtype)
+
+
+_cs_cols_vjp.defvjp(_cs_cols_fwd, _cs_cols_bwd)
+
+
+def count_sketch_cols(m, h, s, *, out_dim):
+    """Column-wise count sketch of a factor matrix.
+
+    Args:
+      m: ``f32[I, R]`` factor matrix.
+      h: ``i32[I]``, s: ``f32[I]``.
+      out_dim: ``J``.
+
+    Returns:
+      ``f32[out_dim, R]`` — ``CS(U)`` column by column (Eqs. 3/5/8).
+    """
+    return _cs_cols_vjp(m, h, s, out_dim)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim",))
+def _cs_cols_impl(m, h, s, out_dim):
+    i, r = m.shape
+    mt = m.T  # grid over R columns
+    out = pl.pallas_call(
+        _cs_cols_kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, i), lambda ri: (ri, 0)),
+            pl.BlockSpec((i,), lambda ri: (0,)),
+            pl.BlockSpec((i,), lambda ri: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, out_dim), lambda ri: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, out_dim), m.dtype),
+        interpret=True,
+    )(mt, h, s)
+    return out.T

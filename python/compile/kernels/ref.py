@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against, and the MXU-alternative formulations discussed in DESIGN.md
+§Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def count_sketch_batch_ref(x, h, s, out_dim):
+    """Reference batched count sketch via segment_sum (Definition 1)."""
+    weighted = x * s[None, :]  # [B, I]
+    return jax.vmap(
+        lambda row: jax.ops.segment_sum(row, h, num_segments=out_dim)
+    )(weighted)
+
+
+def count_sketch_onehot_ref(x, h, s, out_dim):
+    """MXU formulation: CS as a dense sketch-matrix product ``x @ (s·1_h)``."""
+    onehot = jax.nn.one_hot(h, out_dim, dtype=x.dtype)  # [I, J]
+    return x @ (onehot * s[:, None])
+
+
+def count_sketch_cols_ref(m, h, s, out_dim):
+    """Column-wise CS of a factor matrix: ``CS(U)(:, r)``."""
+    return count_sketch_batch_ref(m.T, h, s, out_dim).T
+
+
+def complex_mult_ref(ar, ai, br, bi):
+    """Elementwise complex product on re/im planes."""
+    a = ar + 1j * ai
+    b = br + 1j * bi
+    c = a * b
+    return jnp.real(c).astype(ar.dtype), jnp.imag(c).astype(ar.dtype)
+
+
+def fcs_rank1_ref(factors, hs, ss, j):
+    """FCS of a CP tensor via materialization — oracle for the Eq. 8 path.
+
+    Args:
+      factors: list of ``f32[I_n, R]`` factor matrices.
+      hs/ss: per-mode hash tables (``i32[I_n]`` / ``f32[I_n]``), range ``j``.
+      j: per-mode hash length (uniform).
+
+    Returns:
+      ``f32[N*j - N + 1]``.
+    """
+    n = len(factors)
+    r = factors[0].shape[1]
+    j_tilde = n * j - n + 1
+    out = jnp.zeros((j_tilde,), factors[0].dtype)
+    for rr in range(r):
+        # vec(u1 ∘ u2 ∘ ... ∘ uN), column-major (first mode fastest)
+        vec = factors[0][:, rr]
+        comp_h = hs[0].astype(jnp.int32)
+        comp_s = ss[0]
+        for nn in range(1, n):
+            vec = jnp.reshape(factors[nn][:, rr][:, None] * vec[None, :], (-1,))
+            comp_h = jnp.reshape(hs[nn][:, None] + comp_h[None, :], (-1,))
+            comp_s = jnp.reshape(ss[nn][:, None] * comp_s[None, :], (-1,))
+        out = out + jax.ops.segment_sum(comp_s * vec, comp_h, num_segments=j_tilde)
+    return out

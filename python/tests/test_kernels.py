@@ -1,0 +1,136 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles, swept over
+shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv_mult import complex_mult, spectra_product
+from compile.kernels.count_sketch import count_sketch_batch, count_sketch_cols
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+def make_tables(rng, i, j):
+    h = jnp.asarray(rng.integers(0, j, size=i), jnp.int32)
+    s = jnp.asarray(rng.choice([-1.0, 1.0], size=i), jnp.float32)
+    return h, s
+
+
+@given(
+    b=st.integers(1, 8),
+    i=st.integers(1, 96),
+    j=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cs_batch_matches_ref(b, i, j, seed):
+    rng = rng_for(seed)
+    x = jnp.asarray(rng.normal(size=(b, i)), jnp.float32)
+    h, s = make_tables(rng, i, j)
+    out = count_sketch_batch(x, h, s, out_dim=j)
+    expect = ref.count_sketch_batch_ref(x, h, s, j)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    i=st.integers(1, 64),
+    r=st.integers(1, 6),
+    j=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cs_cols_matches_ref(i, r, j, seed):
+    rng = rng_for(seed)
+    m = jnp.asarray(rng.normal(size=(i, r)), jnp.float32)
+    h, s = make_tables(rng, i, j)
+    out = count_sketch_cols(m, h, s, out_dim=j)
+    expect = ref.count_sketch_cols_ref(m, h, s, j)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    r=st.integers(1, 4),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_complex_mult_matches_ref(r, n, seed):
+    rng = rng_for(seed)
+    planes = [jnp.asarray(rng.normal(size=(r, n)), jnp.float32) for _ in range(4)]
+    cr, ci = complex_mult(*planes)
+    er, ei = ref.complex_mult_ref(*planes)
+    np.testing.assert_allclose(cr, er, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ci, ei, rtol=1e-5, atol=1e-5)
+
+
+def test_cs_kernel_matches_onehot_mxu_formulation():
+    rng = rng_for(0)
+    x = jnp.asarray(rng.normal(size=(4, 50)), jnp.float32)
+    h, s = make_tables(rng, 50, 16)
+    out = count_sketch_batch(x, h, s, out_dim=16)
+    expect = ref.count_sketch_onehot_ref(x, h, s, 16)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_cs_batch_gradient_is_signed_gather():
+    rng = rng_for(1)
+    x = jnp.asarray(rng.normal(size=(3, 20)), jnp.float32)
+    h, s = make_tables(rng, 20, 8)
+
+    def f(x):
+        return count_sketch_batch(x, h, s, out_dim=8).sum()
+
+    g = jax.grad(f)(x)
+    # d/dx_i Σ_j out_j = s_i (each x_i lands in exactly one bucket)
+    expect = jnp.broadcast_to(s[None, :], x.shape)
+    np.testing.assert_allclose(g, expect, rtol=1e-6)
+
+
+def test_cs_cols_gradient():
+    rng = rng_for(2)
+    m = jnp.asarray(rng.normal(size=(20, 3)), jnp.float32)
+    h, s = make_tables(rng, 20, 8)
+    w = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+
+    def f(m):
+        return (count_sketch_cols(m, h, s, out_dim=8) * w).sum()
+
+    g = jax.grad(f)(m)
+    expect = s[:, None] * w[np.asarray(h), :]
+    np.testing.assert_allclose(g, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_spectra_product_three_way():
+    rng = rng_for(3)
+    specs = [
+        (
+            jnp.asarray(rng.normal(size=(2, 9)), jnp.float32),
+            jnp.asarray(rng.normal(size=(2, 9)), jnp.float32),
+        )
+        for _ in range(3)
+    ]
+    pr, pi = spectra_product(specs)
+    acc = (specs[0][0] + 1j * specs[0][1]) * (specs[1][0] + 1j * specs[1][1]) * (
+        specs[2][0] + 1j * specs[2][1]
+    )
+    np.testing.assert_allclose(pr, jnp.real(acc), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(pi, jnp.imag(acc), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("j", [4, 16, 33])
+def test_cs_linearity(j):
+    rng = rng_for(4)
+    x = jnp.asarray(rng.normal(size=(2, 30)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(2, 30)), jnp.float32)
+    h, s = make_tables(rng, 30, j)
+    lhs = count_sketch_batch(x + 2.0 * y, h, s, out_dim=j)
+    rhs = count_sketch_batch(x, h, s, out_dim=j) + 2.0 * count_sketch_batch(
+        y, h, s, out_dim=j
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)

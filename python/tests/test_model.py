@@ -1,0 +1,160 @@
+"""L2 model correctness: FCS graphs vs references, TRN shapes, train-step
+descent, and Eq. 8 ↔ Eq. 13 equivalence inside the lowered graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rng_for(seed=0):
+    return np.random.default_rng(seed)
+
+
+def make_params(rng, scale=0.1):
+    return [
+        jnp.asarray(rng.normal(size=s) * scale, jnp.float32)
+        for _, s in model.param_shapes()
+    ]
+
+
+def make_mode_tables(rng, jm):
+    i1, i2, i3 = model.ACT_SHAPE
+    hs, ss = [], []
+    for i in (i1, i2, i3):
+        hs.append(rng.integers(0, jm, size=i))
+        ss.append(rng.choice([-1.0, 1.0], size=i))
+    return hs, ss
+
+
+def composite_tables(hs, ss, jm, method):
+    """Column-major composite table (Eq. 7) — mirrors the Rust builder."""
+    i1, i2, i3 = model.ACT_SHAPE
+    hx = np.zeros(model.ACT_DIM, np.int64)
+    sx = np.ones(model.ACT_DIM)
+    l = 0
+    for k in range(i3):
+        for j in range(i2):
+            for i in range(i1):
+                tot = hs[0][i] + hs[1][j] + hs[2][k]
+                hx[l] = tot % jm if method == "ts" else tot
+                sx[l] = ss[0][i] * ss[1][j] * ss[2][k]
+                l += 1
+    return hx, sx
+
+
+def full_tables(rng, method, jm):
+    hs, ss = make_mode_tables(rng, jm)
+    if method == "cs":
+        sdim = model.sketch_dim(method, jm)
+        hx = rng.integers(0, sdim, size=model.ACT_DIM)
+        sx = rng.choice([-1.0, 1.0], size=model.ACT_DIM)
+    else:
+        hx, sx = composite_tables(hs, ss, jm, method)
+    out = []
+    for h, s in zip(hs, ss):
+        out += [jnp.asarray(h, jnp.int32), jnp.asarray(s, jnp.float32)]
+    out += [jnp.asarray(hx, jnp.int32), jnp.asarray(sx, jnp.float32)]
+    return out
+
+
+def test_fcs_rank1_graph_matches_materialized_ref():
+    rng = rng_for(1)
+    i, r, j = 12, 3, 10
+    fn = model.fcs_rank1_graph(j)
+    u = [jnp.asarray(rng.normal(size=(i, r)), jnp.float32) for _ in range(3)]
+    lam = jnp.asarray(rng.normal(size=(r,)), jnp.float32)
+    hs = [jnp.asarray(rng.integers(0, j, size=i), jnp.int32) for _ in range(3)]
+    ss = [jnp.asarray(rng.choice([-1.0, 1.0], size=i), jnp.float32) for _ in range(3)]
+    (out,) = fn(u[0], u[1], u[2], lam, hs[0], ss[0], hs[1], ss[1], hs[2], ss[2])
+    expect = ref.fcs_rank1_ref([u[0] * lam[None, :], u[1], u[2]], hs, ss, j)
+    assert out.shape == (3 * j - 2,)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["cs", "ts", "fcs"])
+def test_weight_sketch_equals_composite_cs_of_dense_weight(method):
+    """Eq. 8 / Eq. 3 fast paths inside the model == CS of vec(W) under the
+    composite table (Eq. 6), for each head variant."""
+    rng = rng_for(2)
+    jm = 9
+    params = make_params(rng, scale=0.5)
+    tables = full_tables(rng, method, jm)
+    w_sk = model.sketch_weight(method, params, tables, jm)  # [S, C]
+    # dense W per class, vec'd column-major
+    u1, u2, u3, q = params[4], params[5], params[6], params[7]
+    w = jnp.einsum("ir,jr,kr,cr->ijkc", u1, u2, u3, q)
+    wv = jnp.transpose(w, (3, 2, 1, 0)).reshape(model.NUM_CLASSES, -1)  # [C, ACT_DIM]
+    hx, sx = tables[6], tables[7]
+    sdim = model.sketch_dim(method, jm)
+    expect = ref.count_sketch_batch_ref(wv, hx, sx, sdim).T  # [S, C]
+    np.testing.assert_allclose(w_sk, expect, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("method", ["cs", "ts", "fcs"])
+def test_train_step_decreases_loss(method):
+    rng = rng_for(3)
+    jm = 12
+    params = make_params(rng)
+    tables = full_tables(rng, method, jm)
+    b = 8
+    x = jnp.asarray(rng.normal(size=(b, 28, 28, 1)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, size=b), jnp.int32)
+    step = jax.jit(model.make_train_step(method, jm))
+    lr = jnp.float32(0.05)
+    outs = step(*params, x, y, lr, *tables)
+    first = float(outs[-1])
+    for _ in range(20):
+        outs = step(*outs[:-1], x, y, lr, *tables)
+    last = float(outs[-1])
+    assert last < first, f"{method}: loss {first} -> {last}"
+
+
+def test_infer_shapes():
+    rng = rng_for(4)
+    jm = 8
+    params = make_params(rng)
+    tables = full_tables(rng, "fcs", jm)
+    x = jnp.asarray(rng.normal(size=(5, 28, 28, 1)), jnp.float32)
+    infer = model.make_infer("fcs", jm)
+    (logits,) = infer(*params, x, *tables)
+    assert logits.shape == (5, model.NUM_CLASSES)
+
+
+def test_conv_features_shape():
+    rng = rng_for(5)
+    params = make_params(rng)
+    x = jnp.asarray(rng.normal(size=(3, 28, 28, 1)), jnp.float32)
+    act = model.conv_features(params, x)
+    assert act.shape == (3,) + model.ACT_SHAPE
+
+
+def test_vec_colmajor_order():
+    # [B, i, j, k] with value i + 10 j + 100 k must flatten i-fastest.
+    b = 1
+    act = jnp.zeros((b,) + model.ACT_SHAPE)
+    i1, i2, i3 = model.ACT_SHAPE
+    vals = (
+        jnp.arange(i1)[:, None, None]
+        + 10 * jnp.arange(i2)[None, :, None]
+        + 100 * jnp.arange(i3)[None, None, :]
+    )
+    act = act.at[0].set(vals.astype(jnp.float32))
+    v = model.vec_colmajor(act)[0]
+    assert float(v[0]) == 0.0
+    assert float(v[1]) == 1.0  # i fastest
+    assert float(v[i1]) == 10.0  # then j
+    assert float(v[i1 * i2]) == 100.0  # then k
+
+
+def test_cs_batch_graph_output():
+    rng = rng_for(6)
+    x = jnp.asarray(rng.normal(size=(4, 30)), jnp.float32)
+    h = jnp.asarray(rng.integers(0, 16, size=30), jnp.int32)
+    s = jnp.asarray(rng.choice([-1.0, 1.0], size=30), jnp.float32)
+    (out,) = model.cs_batch_graph(x, h, s, out_dim=16)
+    expect = ref.count_sketch_batch_ref(x, h, s, 16)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,87 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!   (a) linear (FCS) vs circular (TS) convolution at equal hash draws —
+//!       isolates the paper's Proposition-1 variance claim,
+//!   (b) median-of-D vs mean-of-D aggregation,
+//!   (c) hash-length sensitivity of the inner-product estimator.
+
+use fcs::bench::{quick_mode, ResultSink, Table};
+use fcs::hash::ModeHashes;
+use fcs::sketch::{FastCountSketch, TensorSketch};
+use fcs::tensor::Tensor;
+use fcs::util::prng::Rng;
+use fcs::util::timing::median;
+
+fn main() {
+    let trials = if quick_mode() { 100 } else { 600 };
+    let shape = [20usize, 20, 20];
+    let mut rng = Rng::seed_from_u64(0xAB1A);
+    let m = Tensor::randn(&mut rng, &shape);
+    let n = Tensor::randn(&mut rng, &shape);
+    let truth = m.inner(&n);
+
+    let mut sink = ResultSink::new("ablation_hash");
+
+    // (a)+(c): variance of ⟨sketch(M), sketch(N)⟩ under equalized hashes.
+    let mut table = Table::new(
+        "Ablation (a/c) — inner-product estimator variance, TS vs FCS, equalized hashes",
+        &["J", "Var[TS]", "Var[FCS]", "ratio TS/FCS"],
+    );
+    for &j in &[64usize, 256, 1024, 4096] {
+        let mut ts_est = Vec::with_capacity(trials);
+        let mut fcs_est = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, j);
+            let ts = TensorSketch::new(mh.clone());
+            let fc = FastCountSketch::new(mh);
+            ts_est.push(fcs::linalg::dot(&ts.apply_dense(&m), &ts.apply_dense(&n)));
+            fcs_est.push(fcs::linalg::dot(&fc.apply_dense(&m), &fc.apply_dense(&n)));
+        }
+        let var = |xs: &[f64]| {
+            let mu = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / xs.len() as f64
+        };
+        let (vt, vf) = (var(&ts_est), var(&fcs_est));
+        table.row(vec![
+            j.to_string(),
+            format!("{vt:.3}"),
+            format!("{vf:.3}"),
+            format!("{:.2}", vt / vf),
+        ]);
+        sink.record(&[
+            ("j", j.into()),
+            ("var_ts", vt.into()),
+            ("var_fcs", vf.into()),
+        ]);
+        eprintln!("[ablation] J={j}: Var[TS]/Var[FCS] = {:.2}", vt / vf);
+    }
+    table.print();
+
+    // (b) median vs mean aggregation under heavy-tailed estimates
+    let mut table2 = Table::new(
+        "Ablation (b) — |error| of median-of-D vs mean-of-D (FCS, J=256)",
+        &["D", "median agg", "mean agg"],
+    );
+    for &d in &[3usize, 5, 9, 15] {
+        let runs = trials / 2;
+        let mut med_err = Vec::with_capacity(runs);
+        let mut mean_err = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let ests: Vec<f64> = (0..d)
+                .map(|_| {
+                    let mh = ModeHashes::draw_uniform(&mut rng, &shape, 256);
+                    let fc = FastCountSketch::new(mh);
+                    fcs::linalg::dot(&fc.apply_dense(&m), &fc.apply_dense(&n))
+                })
+                .collect();
+            med_err.push((median(&ests) - truth).abs());
+            mean_err.push((ests.iter().sum::<f64>() / d as f64 - truth).abs());
+        }
+        let m1 = med_err.iter().sum::<f64>() / med_err.len() as f64;
+        let m2 = mean_err.iter().sum::<f64>() / mean_err.len() as f64;
+        table2.row(vec![d.to_string(), format!("{m1:.3}"), format!("{m2:.3}")]);
+        sink.record(&[("d", d.into()), ("median_err", m1.into()), ("mean_err", m2.into())]);
+    }
+    table2.print();
+    sink.flush();
+    println!("\nexpected: Var[TS]/Var[FCS] ≥ 1 at every J (Proposition 1).");
+}

@@ -1,0 +1,101 @@
+//! Fig. 1 — plain / CS / TS / FCS RTPM on a synthetic symmetric CP rank-10
+//! tensor `T ∈ R^{100×100×100}`, σ = 0.01, D = 2, L = 15, T = 20.
+//! Residual norm (vs the noisy input (‖noise‖=√σ)) and running time vs hash length
+//! J ∈ [1000, 10000]. TS and FCS share equalized hash draws.
+//!
+//! Modes: FCS_BENCH_QUICK=1 (small sweep), default (paper protocol at
+//! reduced L/T), FCS_BENCH_FULL=1 (paper protocol exactly).
+
+use fcs::bench::{fmt_secs, quick_mode, ResultSink, Table};
+use fcs::cpd::{rtpm_symmetric, RtpmConfig};
+use fcs::data::synthetic_cp;
+use fcs::metrics::residual_norm;
+use fcs::sketch::{build_equalized, ContractionEstimator, CsEstimator, PlainEstimator};
+use fcs::util::prng::Rng;
+use fcs::util::timing::Stopwatch;
+
+fn main() {
+    let full = std::env::var("FCS_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let (dim, rank, d) = (100usize, 10usize, 2usize);
+    let sigma = 0.01;
+    let (lens, n_init, n_iter): (Vec<usize>, usize, usize) = if quick_mode() {
+        (vec![1000, 4000, 10000], 4, 8)
+    } else if full {
+        (vec![1000, 2000, 3000, 4000, 5000, 6000, 7000, 8000, 9000, 10000], 15, 20)
+    } else {
+        (vec![1000, 2500, 5000, 7500, 10000], 8, 12)
+    };
+
+    let mut rng = Rng::seed_from_u64(0xF161);
+    let (t, _clean_cp) = synthetic_cp(&mut rng, &[dim, dim, dim], rank, sigma, true);
+    
+    let cfg = RtpmConfig { rank, n_init, n_iter, seed: 7 };
+
+    let mut table = Table::new(
+        "Fig. 1 — RTPM on synthetic 100³ rank-10 (residual vs noisy input)",
+        &["method", "J", "residual", "time"],
+    );
+    let mut sink = ResultSink::new("fig1_rtpm_synthetic");
+
+    // plain baseline (J-independent)
+    {
+        let sw = Stopwatch::start();
+        let mut est = PlainEstimator::new(t.clone());
+        let cp = rtpm_symmetric(&mut est, dim, &cfg);
+        let secs = sw.elapsed_secs();
+        let res = residual_norm(&cp, &t);
+        table.row(vec!["plain".into(), "-".into(), format!("{res:.4}"), fmt_secs(secs)]);
+        sink.record(&[
+            ("method", "plain".into()),
+            ("j", 0usize.into()),
+            ("residual", res.into()),
+            ("secs", secs.into()),
+        ]);
+    }
+
+    for &j in &lens {
+        // CS (independent long hash)
+        {
+            let sw = Stopwatch::start();
+            let mut est = CsEstimator::build(&t, d, j, &mut rng);
+            let cp = rtpm_symmetric(&mut est, dim, &cfg);
+            let secs = sw.elapsed_secs();
+            let res = residual_norm(&cp, &t);
+            table.row(vec!["cs".into(), j.to_string(), format!("{res:.4}"), fmt_secs(secs)]);
+            sink.record(&[
+                ("method", "cs".into()),
+                ("j", j.into()),
+                ("residual", res.into()),
+                ("secs", secs.into()),
+            ]);
+        }
+        // TS and FCS with equalized hashes
+        let sw = Stopwatch::start();
+        let (mut ts, mut fcs) = build_equalized(&t, d, j, &mut rng);
+        let shared_build = sw.elapsed_secs() / 2.0;
+        for (name, est) in [
+            ("ts", &mut ts as &mut dyn ContractionEstimator),
+            ("fcs", &mut fcs as &mut dyn ContractionEstimator),
+        ] {
+            let sw = Stopwatch::start();
+            let cp = rtpm_symmetric(est, dim, &cfg);
+            let secs = sw.elapsed_secs() + shared_build;
+            let res = residual_norm(&cp, &t);
+            table.row(vec![name.into(), j.to_string(), format!("{res:.4}"), fmt_secs(secs)]);
+            sink.record(&[
+                ("method", name.into()),
+                ("j", j.into()),
+                ("residual", res.into()),
+                ("secs", secs.into()),
+            ]);
+        }
+        eprintln!("[fig1] J={j} done");
+    }
+
+    table.print();
+    sink.flush();
+    println!(
+        "\npaper shape check: FCS residual < TS residual < CS residual at equal J;\n\
+         FCS slower than TS but much faster than CS and plain at small J."
+    );
+}

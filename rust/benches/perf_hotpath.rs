@@ -1,0 +1,147 @@
+//! §Perf — hot-path microbenchmarks used by the optimization pass:
+//!   (i)  FCS dense apply throughput (GB/s) vs a memcpy-style roofline,
+//!   (ii) rank-R FFT path vs the R·J̃·log(J̃) flop model,
+//!   (iii) RTPM t_iuu / t_uuu per-call latency,
+//!   (iv) coordinator throughput / latency percentiles.
+//! Results feed EXPERIMENTS.md §Perf (before/after per iteration).
+
+use fcs::bench::{fmt_secs, measure, quick_mode, ResultSink, Table};
+use fcs::coordinator::{Request, Service, ServiceConfig};
+use fcs::hash::ModeHashes;
+use fcs::sketch::{FastCountSketch, FcsEstimator, TensorSketch};
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+
+fn main() {
+    let reps = if quick_mode() { 5 } else { 20 };
+    let mut table = Table::new("§Perf — hot paths", &["path", "metric", "value"]);
+    let mut sink = ResultSink::new("perf_hotpath");
+
+    // (i) dense FCS apply vs copy roofline
+    {
+        let dim = 200usize;
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tensor::randn(&mut rng, &[dim, dim, dim]);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[dim, dim, dim], 4000);
+        let fcs = FastCountSketch::new(mh);
+        let mut out = vec![0.0; fcs.j_tilde];
+        let s = measure(2, reps, || fcs.apply_dense_into(&t, &mut out));
+        let bytes = t.numel() as f64 * 8.0;
+        let gbps = bytes / s.median / 1e9;
+        // copy roofline
+        let mut dst = vec![0.0f64; t.numel()];
+        let sc = measure(2, reps, || dst.copy_from_slice(&t.data));
+        let roof = bytes / sc.median / 1e9;
+        table.row(vec!["fcs dense apply (200³)".into(), "GB/s".into(), format!("{gbps:.2}")]);
+        table.row(vec!["memcpy roofline".into(), "GB/s".into(), format!("{roof:.2}")]);
+        table.row(vec!["fcs/memcpy".into(), "ratio".into(), format!("{:.2}", gbps / roof)]);
+        sink.record(&[("path", "fcs_dense_apply".into()), ("gbps", gbps.into()), ("roof_gbps", roof.into())]);
+    }
+
+    // (ii) rank-R FFT path
+    {
+        let dim = 100usize;
+        let rank = 10usize;
+        let j = 4000usize;
+        let mut rng = Rng::seed_from_u64(2);
+        let cp = CpTensor::randn(&mut rng, &[dim, dim, dim], rank);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[dim, dim, dim], j);
+        let fcs = FastCountSketch::new(mh.clone());
+        let s = measure(2, reps, || fcs.apply_cp(&cp));
+        let jt = (3 * j - 2) as f64;
+        let flops = rank as f64 * 5.0 * jt * jt.log2() * 2.0; // ~2 fwd+1 inv per rank via pairwise
+        table.row(vec!["fcs rank-R FFT (J=4000,R=10)".into(), "time".into(), fmt_secs(s.median)]);
+        table.row(vec![
+            "fcs rank-R FFT".into(),
+            "GFLOP/s (5N log N model)".into(),
+            format!("{:.2}", flops / s.median / 1e9),
+        ]);
+        let ts = TensorSketch::new(mh);
+        let s2 = measure(2, reps, || ts.apply_cp(&cp));
+        table.row(vec!["ts rank-R FFT (same hashes)".into(), "time".into(), fmt_secs(s2.median)]);
+        sink.record(&[
+            ("path", "fcs_rank_r_fft".into()),
+            ("secs", s.median.into()),
+            ("ts_secs", s2.median.into()),
+        ]);
+    }
+
+    // (iii) estimator query latency
+    {
+        let dim = 100usize;
+        let j = 5000usize;
+        let mut rng = Rng::seed_from_u64(3);
+        let cp = CpTensor::random_orthogonal_symmetric(&mut rng, dim, 10, 3);
+        let mut t = cp.to_dense();
+        t.add_noise(&mut rng, 0.01);
+        use fcs::sketch::ContractionEstimator;
+        let est = FcsEstimator::build(&t, 2, j, &mut rng);
+        let mut u = rng.normal_vec(dim);
+        fcs::linalg::normalize(&mut u);
+        let s_iuu = measure(2, reps, || est.t_iuu(&u));
+        let s_uuu = measure(2, reps, || est.t_uuu(&u));
+        table.row(vec!["fcs t_iuu (I=100,J=5000,D=2)".into(), "time".into(), fmt_secs(s_iuu.median)]);
+        table.row(vec!["fcs t_uuu".into(), "time".into(), fmt_secs(s_uuu.median)]);
+        sink.record(&[
+            ("path", "estimator_query".into()),
+            ("t_iuu_secs", s_iuu.median.into()),
+            ("t_uuu_secs", s_uuu.median.into()),
+        ]);
+    }
+
+    // (iv) coordinator throughput/latency (pure-Rust path + XLA if present)
+    for (label, runtime) in [
+        ("coordinator(rust)", None),
+        ("coordinator(xla)", fcs::runtime::spawn_runtime(None).ok()),
+    ] {
+        if label.contains("xla") && runtime.is_none() {
+            eprintln!("[perf] skipping XLA coordinator (no artifacts)");
+            continue;
+        }
+        let svc = Service::start(ServiceConfig::default(), runtime).unwrap();
+        let h = svc.handle();
+        let n = if quick_mode() { 200 } else { 2000 };
+        let mut rng = Rng::seed_from_u64(4);
+        let reqs: Vec<Vec<f64>> = (0..64).map(|_| rng.normal_vec(h.cs_in_dim)).collect();
+        let sw = fcs::util::timing::Stopwatch::start();
+        let mut pend = Vec::new();
+        for i in 0..n {
+            loop {
+                match h.submit(Request::CsVec { x: reqs[i % reqs.len()].clone() }) {
+                    Ok(rx) => {
+                        pend.push(rx);
+                        break;
+                    }
+                    Err(fcs::coordinator::ServiceError::Busy) => {
+                        // drain a little
+                        if let Some(rx) = pend.pop() {
+                            let _ = rx.recv();
+                        }
+                    }
+                    Err(e) => panic!("{e}"),
+                }
+            }
+        }
+        for rx in pend {
+            let _ = rx.recv();
+        }
+        let secs = sw.elapsed_secs();
+        let report = svc.stats();
+        let cs = report.per_op.iter().find(|o| o.op == "cs_vec").unwrap();
+        table.row(vec![label.into(), "req/s".into(), format!("{:.0}", n as f64 / secs)]);
+        table.row(vec![label.into(), "p50/p95/p99 µs".into(),
+            format!("{:.0}/{:.0}/{:.0}", cs.p50_us, cs.p95_us, cs.p99_us)]);
+        table.row(vec![label.into(), "mean batch fill".into(), format!("{:.1}", report.mean_batch_fill)]);
+        sink.record(&[
+            ("path", label.into()),
+            ("rps", (n as f64 / secs).into()),
+            ("p50_us", cs.p50_us.into()),
+            ("p99_us", cs.p99_us.into()),
+            ("mean_batch_fill", report.mean_batch_fill.into()),
+        ]);
+        svc.shutdown();
+    }
+
+    table.print();
+    sink.flush();
+}

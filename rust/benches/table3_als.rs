@@ -1,0 +1,106 @@
+//! Table 3 — plain / TS / FCS ALS on a synthetic asymmetric CP rank-10
+//! tensor `T ∈ R^{400×400×400}`, σ ∈ {0.01, 0.1}, J ∈ {3000..7000},
+//! D ∈ {10, 15, 20}. Residual norm (vs noisy input) + running time.
+
+use fcs::bench::{fmt_secs, quick_mode, ResultSink, Table};
+use fcs::cpd::{als_plain, als_sketched, AlsConfig};
+use fcs::data::synthetic_cp;
+use fcs::metrics::residual_norm;
+use fcs::sketch::build_equalized;
+use fcs::util::prng::Rng;
+use fcs::util::timing::Stopwatch;
+
+fn main() {
+    let full = std::env::var("FCS_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let rank = 10usize;
+    let (dim, lens, ds, sigmas, n_iter): (usize, Vec<usize>, Vec<usize>, Vec<f64>, usize) =
+        if quick_mode() {
+            (120, vec![3000], vec![10], vec![0.01], 8)
+        } else if full {
+            (
+                400,
+                vec![3000, 4000, 5000, 6000, 7000],
+                vec![10, 15, 20],
+                vec![0.01, 0.1],
+                20,
+            )
+        } else {
+            (256, vec![3000, 5000, 7000], vec![10, 20], vec![0.01, 0.1], 12)
+        };
+
+    let mut table = Table::new(
+        "Table 3 — ALS on synthetic asymmetric rank-10 (residual vs noisy input)",
+        &["sigma", "method", "J", "D", "residual", "time"],
+    );
+    let mut sink = ResultSink::new("table3_als");
+
+    for &sigma in &sigmas {
+        let mut rng = Rng::seed_from_u64(0x7AB3 ^ sigma.to_bits());
+        let (t, _clean_cp) = synthetic_cp(&mut rng, &[dim, dim, dim], rank, sigma, false);
+        
+        let cfg = AlsConfig { rank, n_iter, seed: 11 };
+
+        // plain (J/D-independent, once per sigma)
+        {
+            let sw = Stopwatch::start();
+            let cp = als_plain(&t, &cfg);
+            let secs = sw.elapsed_secs();
+            let res = residual_norm(&cp, &t);
+            table.row(vec![
+                format!("{sigma}"),
+                "plain".into(),
+                "-".into(),
+                "-".into(),
+                format!("{res:.4}"),
+                fmt_secs(secs),
+            ]);
+            sink.record(&[
+                ("sigma", sigma.into()),
+                ("method", "plain".into()),
+                ("j", 0usize.into()),
+                ("d", 0usize.into()),
+                ("residual", res.into()),
+                ("secs", secs.into()),
+            ]);
+            eprintln!("[table3] sigma={sigma} plain done ({})", fmt_secs(secs));
+        }
+
+        for &d in &ds {
+            for &j in &lens {
+                let sw = Stopwatch::start();
+                let (ts, fcs) = build_equalized(&t, d, j, &mut rng);
+                let shared_build = sw.elapsed_secs() / 2.0;
+                for (name, est) in [("ts", &ts as &dyn fcs::sketch::ContractionEstimator), ("fcs", &fcs)] {
+                    let sw = Stopwatch::start();
+                    let cp = als_sketched(&t.shape, est, &t, &cfg);
+                    let secs = sw.elapsed_secs() + shared_build;
+                    let res = residual_norm(&cp, &t);
+                    table.row(vec![
+                        format!("{sigma}"),
+                        name.into(),
+                        j.to_string(),
+                        d.to_string(),
+                        format!("{res:.4}"),
+                        fmt_secs(secs),
+                    ]);
+                    sink.record(&[
+                        ("sigma", sigma.into()),
+                        ("method", name.into()),
+                        ("j", j.into()),
+                        ("d", d.into()),
+                        ("residual", res.into()),
+                        ("secs", secs.into()),
+                    ]);
+                }
+                eprintln!("[table3] sigma={sigma} D={d} J={j} done");
+            }
+        }
+    }
+
+    table.print();
+    sink.flush();
+    println!(
+        "\npaper shape check: FCS residual < TS residual everywhere; the accuracy\n\
+         gap widens as J shrinks; both sketched ALS runs beat plain ALS time."
+    );
+}

@@ -1,0 +1,74 @@
+//! Table 4 — classification accuracy of CS / TS / FCS-sketched CP-TRL on
+//! the FMNIST-like dataset across compression ratios, trained end-to-end
+//! through the AOT XLA train-step artifacts (Rust drives; Python absent).
+//!
+//! Needs `make artifacts` (default CR subset) or `make artifacts-full`
+//! (all 10 paper CRs).
+
+use fcs::bench::{quick_mode, ResultSink, Table};
+use fcs::runtime::spawn_runtime;
+use fcs::trn::{available_cr_tags, train_and_eval, TrnMethod, TrnRunConfig};
+
+fn main() {
+    let rt = match spawn_runtime(None) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("table4_trn: {e}\nrun `make artifacts` first");
+            return;
+        }
+    };
+    let (steps, train_size, test_size) = if quick_mode() {
+        (60usize, 1280usize, 256usize)
+    } else {
+        (300, 6400, 1024)
+    };
+
+    let mut table = Table::new(
+        "Table 4 — sketched CP-TRL accuracy on FMNIST-like data",
+        &["CR", "method", "accuracy", "final_loss", "train_time(s)"],
+    );
+    let mut sink = ResultSink::new("table4_trn");
+
+    let tags = available_cr_tags(&rt, TrnMethod::Fcs);
+    for (cr, tag) in &tags {
+        for method in [TrnMethod::Cs, TrnMethod::Ts, TrnMethod::Fcs] {
+            let cfg = TrnRunConfig {
+                method,
+                cr_tag: tag.clone(),
+                steps,
+                lr: 0.05,
+                train_size,
+                test_size,
+                seed: 1234,
+                log_every: 0,
+            };
+            match train_and_eval(&rt, &cfg) {
+                Ok(res) => {
+                    table.row(vec![
+                        format!("{cr:.2}"),
+                        method.name().into(),
+                        format!("{:.4}", res.accuracy),
+                        format!("{:.4}", res.losses.last().unwrap()),
+                        format!("{:.1}", res.train_secs),
+                    ]);
+                    sink.record(&[
+                        ("cr", (*cr).into()),
+                        ("method", method.name().into()),
+                        ("accuracy", res.accuracy.into()),
+                        ("final_loss", (*res.losses.last().unwrap()).into()),
+                        ("train_secs", res.train_secs.into()),
+                    ]);
+                    eprintln!("[table4] CR={cr} {} acc={:.4}", method.name(), res.accuracy);
+                }
+                Err(e) => eprintln!("[table4] CR={cr} {}: {e}", method.name()),
+            }
+        }
+    }
+
+    table.print();
+    sink.flush();
+    println!(
+        "\npaper shape check: FCS accuracy ≥ CS ≥ TS at almost every CR, and\n\
+         FCS degrades most gracefully as CR grows."
+    );
+}

@@ -1,0 +1,166 @@
+//! Measurement core for the `rust/benches/*` harnesses (criterion is not
+//! available offline). Provides warmup + repeated timing with robust stats,
+//! paper-style table printing, and JSON result dumps under `results/`.
+
+use crate::util::json::Json;
+use crate::util::timing::{Stopwatch, Summary};
+use std::path::PathBuf;
+
+/// Time `f` with `warmup` discarded runs and `reps` measured runs.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        samples.push(sw.elapsed_secs());
+    }
+    Summary::of(&samples)
+}
+
+/// Quick-mode check: set `FCS_BENCH_QUICK=1` to shrink sweeps.
+pub fn quick_mode() -> bool {
+    std::env::var("FCS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A paper-style results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Accumulates result rows and writes them to `results/<name>.json`.
+pub struct ResultSink {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl ResultSink {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Build a row from key/value pairs.
+    pub fn record(&mut self, pairs: &[(&str, Json)]) {
+        let mut obj = Json::obj();
+        for (k, v) in pairs {
+            obj.set(k, v.clone());
+        }
+        self.rows.push(obj);
+    }
+
+    pub fn results_dir() -> PathBuf {
+        let dir = crate::runtime::find_artifacts_dir()
+            .map(|a| a.parent().unwrap().join("results"))
+            .unwrap_or_else(|| PathBuf::from("results"));
+        let _ = std::fs::create_dir_all(&dir);
+        dir
+    }
+
+    /// Write and report the path.
+    pub fn flush(&self) {
+        let path = Self::results_dir().join(format!("{}.json", self.name));
+        let json = Json::Arr(self.rows.clone());
+        if let Err(e) = std::fs::write(&path, json.to_string()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("[results] wrote {}", path.display());
+        }
+    }
+}
+
+/// Format seconds for tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_summary() {
+        let s = measure(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-7).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

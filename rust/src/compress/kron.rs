@@ -1,0 +1,372 @@
+//! §4.3.1 — Kronecker product compression.
+//!
+//! `A ⊗ B` for `A ∈ R^{I1×I2}`, `B ∈ R^{I3×I4}` is the 4th-order tensor
+//! `T[i1,i2,i3,i4] = A(i1,i2)·B(i3,i4)` laid out at row `I3·i1 + i3`,
+//! column `I4·i2 + i4`. FCS compresses it **without materializing it**:
+//!
+//! `FCS(A⊗B) = F⁻¹( F(CS(vec A); J̃) · F(CS(vec B); J̃) )`, `J̃ = 4J − 3`,
+//!
+//! and decompresses entrywise by
+//! `(A⊗B)ˆ = s1 s2 s3 s4 · FCS(A⊗B)[h1+h2+h3+h4]` (0-based Eq. in §4.3.1).
+
+use super::{fcs_j_for_size, hcs_j_for_size, median_inplace, Codec};
+use crate::fft;
+use crate::hash::{HashPair, HashTable, ModeHashes};
+use crate::linalg::Matrix;
+use crate::util::prng::Rng;
+use crate::util::timing::Stopwatch;
+
+/// One compressed representation of `A ⊗ B` (D repetitions inside).
+pub struct KronCodec {
+    codec: Codec,
+    dims: [usize; 4], // [I1, I2, I3, I4]
+    reps: Vec<Rep>,
+}
+
+enum Rep {
+    /// CS: one long hash over vec(A⊗B).
+    Cs { table: HashTable, sketch: Vec<f64> },
+    /// HCS: 4 mode hashes, sketched tensor of shape [J;4] (flat, col-major).
+    Hcs { hashes: ModeHashes, sketch: Vec<f64>, j: usize },
+    /// FCS: 4 mode hashes, linear-convolution sketch of length 4J−3.
+    Fcs { hashes: ModeHashes, sketch: Vec<f64> },
+}
+
+impl Rep {
+    /// Decode one entry from this repetition — branch-light, no iterators.
+    #[inline]
+    fn decode(&self, dims: [usize; 4], idx: [usize; 4]) -> f64 {
+        match self {
+            Rep::Cs { table, sketch } => {
+                let l = idx[0] + dims[0] * (idx[1] + dims[1] * (idx[2] + dims[2] * idx[3]));
+                (table.s[l] as f64) * sketch[table.h[l] as usize]
+            }
+            Rep::Hcs { hashes, sketch, j } => {
+                let m = &hashes.modes;
+                let b = m[0].h[idx[0]] as usize
+                    + j * (m[1].h[idx[1]] as usize
+                        + j * (m[2].h[idx[2]] as usize + j * m[3].h[idx[3]] as usize));
+                let s = m[0].s[idx[0]] * m[1].s[idx[1]] * m[2].s[idx[2]] * m[3].s[idx[3]];
+                (s as f64) * sketch[b]
+            }
+            Rep::Fcs { hashes, sketch } => {
+                let m = &hashes.modes;
+                let b = m[0].h[idx[0]] as usize
+                    + m[1].h[idx[1]] as usize
+                    + m[2].h[idx[2]] as usize
+                    + m[3].h[idx[3]] as usize;
+                let s = m[0].s[idx[0]] * m[1].s[idx[1]] * m[2].s[idx[2]] * m[3].s[idx[3]];
+                (s as f64) * sketch[b]
+            }
+        }
+    }
+}
+
+/// Metrics reported by Fig. 5.
+#[derive(Debug, Clone)]
+pub struct KronStats {
+    pub codec: &'static str,
+    pub cr: f64,
+    pub sketch_len: usize,
+    pub compress_secs: f64,
+    pub decompress_secs: f64,
+    pub rel_error: f64,
+    pub hash_bytes: usize,
+}
+
+impl KronCodec {
+    /// Compress `A ⊗ B` with `d` independent sketches of total size
+    /// `sketch_size` each.
+    pub fn compress(
+        codec: Codec,
+        a: &Matrix,
+        b: &Matrix,
+        sketch_size: usize,
+        d: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let dims = [a.rows, a.cols, b.rows, b.cols];
+        // Repetitions are independent — parallelize across threads (§Perf).
+        let seeds: Vec<u64> = (0..d).map(|_| rng.next_u64()).collect();
+        let reps = crate::util::parallel::par_map(d, crate::util::parallel::default_threads(), |ri| {
+            let rng = &mut Rng::seed_from_u64(seeds[ri]);
+            match codec {
+                Codec::Cs => {
+                    // Materialize vec(A⊗B) — the CS baseline's unavoidable cost.
+                    let total: usize = dims.iter().product();
+                    let pair = HashPair::draw(rng, total, sketch_size);
+                    let table = pair.materialize();
+                    let mut sketch = vec![0.0; sketch_size];
+                    // vec index (col-major over the 4th-order tensor
+                    // [i1,i2,i3,i4]): l = i1 + I1(i2 + I2(i3 + I3 i4))
+                    let (i1n, i2n, i3n, i4n) = (dims[0], dims[1], dims[2], dims[3]);
+                    let mut l = 0usize;
+                    for i4 in 0..i4n {
+                        for i3 in 0..i3n {
+                            let bv = b.get(i3, i4);
+                            for i2 in 0..i2n {
+                                for i1 in 0..i1n {
+                                    let v = a.get(i1, i2) * bv;
+                                    if v != 0.0 {
+                                        sketch[table.h[l] as usize] += (table.s[l] as f64) * v;
+                                    }
+                                    l += 1;
+                                }
+                            }
+                        }
+                    }
+                    Rep::Cs { table, sketch }
+                }
+                Codec::Hcs => {
+                    let j = hcs_j_for_size(sketch_size);
+                    let hashes = ModeHashes::draw_uniform(rng, &dims, j);
+                    // HCS(A⊗B) = HCS₂(A) ∘ HCS₂(B): sketch each matrix into
+                    // J×J, then materialize the outer product (Eq. 5 cost).
+                    let sa = sketch_matrix_2d(a, &hashes.modes[0], &hashes.modes[1], j);
+                    let sb = sketch_matrix_2d(b, &hashes.modes[2], &hashes.modes[3], j);
+                    let jj = j * j;
+                    let mut sketch = vec![0.0; jj * jj];
+                    for (q, &bv) in sb.iter().enumerate() {
+                        if bv != 0.0 {
+                            crate::linalg::axpy(bv, &sa, &mut sketch[q * jj..(q + 1) * jj]);
+                        }
+                    }
+                    Rep::Hcs { hashes, sketch, j }
+                }
+                Codec::Fcs => {
+                    let j = fcs_j_for_size(sketch_size);
+                    let hashes = ModeHashes::draw_uniform(rng, &dims, j);
+                    let j_tilde = 4 * j - 3;
+                    // FCS(A) over modes (1,2): length 2J−1; same for B; then
+                    // one linear convolution — A⊗B never materialized.
+                    let fa = fcs_matrix(a, &hashes.modes[0], &hashes.modes[1], j);
+                    let fb = fcs_matrix(b, &hashes.modes[2], &hashes.modes[3], j);
+                    let mut sketch = fft::conv_linear(&fa, &fb);
+                    debug_assert_eq!(sketch.len(), j_tilde);
+                    sketch.truncate(j_tilde);
+                    Rep::Fcs { hashes, sketch }
+                }
+            }
+        });
+        Self { codec, dims, reps }
+    }
+
+    /// Decode one entry of the 4th-order view (median over repetitions).
+    /// The per-rep lookups are fully unrolled — this is the §4.3
+    /// decompression hot loop.
+    #[inline]
+    pub fn decode(&self, idx: [usize; 4], buf: &mut Vec<f64>) -> f64 {
+        buf.clear();
+        for rep in &self.reps {
+            buf.push(rep.decode(self.dims, idx));
+        }
+        median_inplace(buf)
+    }
+
+    /// Reconstruct the full Kronecker product `(I1·I3) × (I2·I4)`
+    /// (column-parallel).
+    pub fn decompress(&self) -> Matrix {
+        let [i1n, i2n, i3n, i4n] = self.dims;
+        let ncols = i2n * i4n;
+        let cols = crate::util::parallel::par_map(
+            ncols,
+            crate::util::parallel::default_threads(),
+            |col| {
+                let (i4, i2) = (col % i4n, col / i4n);
+                let mut buf = Vec::with_capacity(self.reps.len());
+                let mut out = vec![0.0; i1n * i3n];
+                for i1 in 0..i1n {
+                    for i3 in 0..i3n {
+                        out[i3 + i1 * i3n] = self.decode([i1, i2, i3, i4], &mut buf);
+                    }
+                }
+                out
+            },
+        );
+        let mut out = Matrix::zeros(i1n * i3n, ncols);
+        for (c, colv) in cols.into_iter().enumerate() {
+            out.set_col(c, &colv);
+        }
+        out
+    }
+
+    /// Total sketch length per repetition.
+    pub fn sketch_len(&self) -> usize {
+        match &self.reps[0] {
+            Rep::Cs { sketch, .. } => sketch.len(),
+            Rep::Hcs { sketch, .. } => sketch.len(),
+            Rep::Fcs { sketch, .. } => sketch.len(),
+        }
+    }
+
+    /// Bytes stored for hash functions across all repetitions (Fig. 5 panel 4).
+    pub fn hash_bytes(&self) -> usize {
+        self.reps
+            .iter()
+            .map(|rep| match rep {
+                Rep::Cs { table, .. } => table.memory_bytes(),
+                Rep::Hcs { hashes, .. } => hashes.memory_bytes(),
+                Rep::Fcs { hashes, .. } => hashes.memory_bytes(),
+            })
+            .sum()
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Run the full Fig. 5 protocol for one codec and target CR.
+    pub fn evaluate(
+        codec: Codec,
+        a: &Matrix,
+        b: &Matrix,
+        cr: f64,
+        d: usize,
+        rng: &mut Rng,
+    ) -> KronStats {
+        let total = a.rows * a.cols * b.rows * b.cols;
+        let sketch_size = ((total as f64 / cr).round() as usize).max(4);
+        let sw = Stopwatch::start();
+        let codec_obj = Self::compress(codec, a, b, sketch_size, d, rng);
+        let compress_secs = sw.elapsed_secs();
+        let sw = Stopwatch::start();
+        let approx = codec_obj.decompress();
+        let decompress_secs = sw.elapsed_secs();
+        let truth = a.kron(b);
+        let rel_error = approx.sub(&truth).frob_norm() / truth.frob_norm();
+        KronStats {
+            codec: codec.name(),
+            cr,
+            sketch_len: codec_obj.sketch_len(),
+            compress_secs,
+            decompress_secs,
+            rel_error,
+            hash_bytes: codec_obj.hash_bytes(),
+        }
+    }
+}
+
+/// 2-mode count sketch of a matrix into a J×J grid (flat col-major):
+/// `S[h_r(i), h_c(j)] += s_r(i)·s_c(j)·M(i,j)`.
+fn sketch_matrix_2d(m: &Matrix, hr: &HashTable, hc: &HashTable, j: usize) -> Vec<f64> {
+    let mut out = vec![0.0; j * j];
+    for c in 0..m.cols {
+        let bc = hc.h(c);
+        let sc = hc.s(c);
+        let col = m.col(c);
+        for (r, &v) in col.iter().enumerate() {
+            if v != 0.0 {
+                out[hr.h(r) + j * bc] += hr.s(r) * sc * v;
+            }
+        }
+    }
+    out
+}
+
+/// FCS of a matrix viewed as a 2-mode tensor: length `2J − 1`.
+fn fcs_matrix(m: &Matrix, hr: &HashTable, hc: &HashTable, j: usize) -> Vec<f64> {
+    let mut out = vec![0.0; 2 * j - 1];
+    for c in 0..m.cols {
+        let bc = hc.h(c);
+        let sc = hc.s(c);
+        let col = m.col(c);
+        for (r, &v) in col.iter().enumerate() {
+            if v != 0.0 {
+                out[hr.h(r) + bc] += hr.s(r) * sc * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_pair(rng: &mut Rng) -> (Matrix, Matrix) {
+        (
+            Matrix::from_data(6, 5, rng.uniform_vec(30, -5.0, 5.0)),
+            Matrix::from_data(4, 7, rng.uniform_vec(28, -5.0, 5.0)),
+        )
+    }
+
+    #[test]
+    fn fcs_sketch_matches_dense_tensor_sketch() {
+        // FCS(A⊗B) via convolution == FCS of the materialized 4th-order view.
+        let mut rng = Rng::seed_from_u64(1);
+        let (a, b) = test_pair(&mut rng);
+        let codec = KronCodec::compress(Codec::Fcs, &a, &b, 61, 1, &mut rng);
+        let Rep::Fcs { hashes, sketch } = &codec.reps[0] else {
+            panic!()
+        };
+        // materialize T[i1,i2,i3,i4] = A(i1,i2) B(i3,i4) col-major
+        let t = crate::tensor::Tensor::from_fn(&[6, 5, 4, 7], |idx| {
+            a.get(idx[0], idx[1]) * b.get(idx[2], idx[3])
+        });
+        let fcs = crate::sketch::FastCountSketch::new(hashes.clone());
+        let direct = fcs.apply_dense(&t);
+        assert_eq!(direct.len(), sketch.len());
+        for (x, y) in direct.iter().zip(sketch) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_codecs_error_decreases_with_size() {
+        let mut rng = Rng::seed_from_u64(2);
+        let (a, b) = test_pair(&mut rng);
+        for codec in [Codec::Cs, Codec::Hcs, Codec::Fcs] {
+            let small = KronCodec::evaluate(codec, &a, &b, 16.0, 7, &mut rng);
+            let large = KronCodec::evaluate(codec, &a, &b, 1.2, 7, &mut rng);
+            assert!(
+                large.rel_error < small.rel_error,
+                "{}: {} !< {}",
+                codec.name(),
+                large.rel_error,
+                small.rel_error
+            );
+        }
+    }
+
+    #[test]
+    fn fcs_high_accuracy_at_low_cr() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (a, b) = test_pair(&mut rng);
+        let stats = KronCodec::evaluate(Codec::Fcs, &a, &b, 1.05, 15, &mut rng);
+        assert!(stats.rel_error < 0.35, "rel err {}", stats.rel_error);
+    }
+
+    #[test]
+    fn hash_memory_ordering_cs_much_larger() {
+        let mut rng = Rng::seed_from_u64(4);
+        let (a, b) = test_pair(&mut rng);
+        let cs = KronCodec::compress(Codec::Cs, &a, &b, 100, 3, &mut rng);
+        let fcs = KronCodec::compress(Codec::Fcs, &a, &b, 100, 3, &mut rng);
+        assert!(cs.hash_bytes() > 10 * fcs.hash_bytes());
+    }
+
+    #[test]
+    fn decompress_shape() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (a, b) = test_pair(&mut rng);
+        let codec = KronCodec::compress(Codec::Fcs, &a, &b, 200, 3, &mut rng);
+        let m = codec.decompress();
+        assert_eq!((m.rows, m.cols), (24, 35));
+    }
+
+    #[test]
+    fn decode_unbiased_single_entry() {
+        let mut rng = Rng::seed_from_u64(6);
+        let (a, b) = test_pair(&mut rng);
+        let truth = a.get(2, 3) * b.get(1, 4);
+        let mut acc = 0.0;
+        let trials = 300;
+        for _ in 0..trials {
+            let c = KronCodec::compress(Codec::Fcs, &a, &b, 301, 1, &mut rng);
+            let mut buf = Vec::new();
+            acc += c.decode([2, 3, 1, 4], &mut buf);
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - truth).abs() < 2.0, "mean {mean} truth {truth}");
+    }
+}

@@ -1,0 +1,96 @@
+//! §4.3 — Kronecker-product and tensor-contraction compression.
+//!
+//! All three codecs (CS / HCS / FCS) compress the 4th-order view of the
+//! target: `T[i1,i2,i3,i4] = A(i1,i2)·B(i3,i4)` for Kronecker (§4.3.1), and
+//! `T = A ⊙_{3,1} B` for contraction (§4.3.2). Each stores `D` independent
+//! sketches and decodes entries by the median rule.
+//!
+//! Sizing at a common compression ratio `CR = numel(T) / S`:
+//! * CS  — one long hash into `S` buckets (hash storage `O(numel)`),
+//! * FCS — four short hashes with `J̃ = 4J − 3 = S`,
+//! * HCS — four short hashes into a `J_h⁴ = S` sketched tensor.
+
+pub mod contract;
+pub mod kron;
+
+pub use contract::{ContractCodec, ContractStats};
+pub use kron::{KronCodec, KronStats};
+
+/// Which codec to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    Cs,
+    Hcs,
+    Fcs,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Cs => "cs",
+            Codec::Hcs => "hcs",
+            Codec::Fcs => "fcs",
+        }
+    }
+}
+
+/// Median of a small scratch buffer (decode hot path: D ≤ ~20 entries).
+/// Uses selection (O(D)) rather than a full sort — the median is evaluated
+/// once per reconstructed element, so this is the §4.3 decompression hot
+/// loop (§Perf: ~1.6× on decompress).
+#[inline]
+pub(crate) fn median_inplace(buf: &mut [f64]) -> f64 {
+    let n = buf.len();
+    debug_assert!(n > 0);
+    if n == 1 {
+        return buf[0];
+    }
+    let mid = n / 2;
+    let (_, &mut upper_med, _) =
+        buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    if n % 2 == 1 {
+        upper_med
+    } else {
+        // lower median = max of the left partition
+        let lower_med = buf[..mid]
+            .iter()
+            .fold(f64::NEG_INFINITY, |m, &x| m.max(x));
+        0.5 * (lower_med + upper_med)
+    }
+}
+
+/// Given a target sketch size `s`, the per-mode hash length for FCS's
+/// 4-mode composite (`J̃ = 4J − 3 = s` ⇒ `J = (s + 3) / 4`).
+pub fn fcs_j_for_size(s: usize) -> usize {
+    ((s + 3) / 4).max(1)
+}
+
+/// Given a target sketch size `s`, the per-mode hash length for HCS's
+/// 4-mode sketched tensor (`J⁴ ≈ s`).
+pub fn hcs_j_for_size(s: usize) -> usize {
+    let j = (s as f64).powf(0.25).floor() as usize;
+    j.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_inplace_odd_even() {
+        let mut a = [3.0, 1.0, 2.0];
+        assert_eq!(median_inplace(&mut a), 2.0);
+        let mut b = [4.0, 1.0, 2.0, 3.0];
+        assert_eq!(median_inplace(&mut b), 2.5);
+    }
+
+    #[test]
+    fn sizing_invariants() {
+        for s in [16usize, 100, 1000, 123456] {
+            let j = fcs_j_for_size(s);
+            assert!(4 * j - 3 >= s.saturating_sub(3));
+            let jh = hcs_j_for_size(s);
+            assert!(jh.pow(4) <= s);
+        }
+    }
+}

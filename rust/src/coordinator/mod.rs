@@ -1,0 +1,20 @@
+//! Layer-3 coordinator: the serving side of the sketch library.
+//!
+//! ```text
+//! client → ServiceHandle (bounded queues, Busy on overflow)
+//!            ├─ cs_vec          → Batcher → XLA cs_batch executable
+//!            └─ sketch_* / est. → worker pool (pure Rust, or XLA fcs_rank1)
+//!          Stats: p50/p95/p99 per op, batch fill, rejections, throughput
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_service.rs`):
+//! every accepted request is answered exactly once; batches never exceed the
+//! artifact batch size; XLA and pure-Rust paths agree numerically.
+
+pub mod msg;
+pub mod service;
+pub mod stats;
+
+pub use msg::{Request, Response, ServiceError, SketchMethod};
+pub use service::{Service, ServiceConfig, ServiceHandle};
+pub use stats::{Stats, StatsReport};

@@ -1,0 +1,55 @@
+//! Request/response vocabulary of the sketch service.
+
+use crate::tensor::{CpTensor, Tensor};
+
+/// Client-visible request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Count-sketch one vector under the service's shared hash table.
+    /// Batched onto the AOT `cs_batch` XLA executable when available.
+    CsVec { x: Vec<f64> },
+    /// Sketch a dense tensor with freshly drawn per-mode hashes.
+    SketchDense { tensor: Tensor, method: SketchMethod, j: usize },
+    /// Sketch a CP tensor (FCS rank-R fast path; served by the `fcs_rank1`
+    /// XLA executable when shapes match the artifact, else pure Rust).
+    SketchCp { cp: CpTensor, j: usize },
+    /// Median-of-D sketched inner-product estimate ⟨A, B⟩.
+    InnerEstimate { a: Tensor, b: Tensor, method: SketchMethod, j: usize, d: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchMethod {
+    Ts,
+    Fcs,
+}
+
+/// Successful response payloads.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Sketch(Vec<f64>),
+    Scalar(f64),
+}
+
+/// Service errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ServiceError {
+    #[error("service queue is full (backpressure)")]
+    Busy,
+    #[error("service is shutting down")]
+    Closed,
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    #[error("execution failed: {0}")]
+    Exec(String),
+}
+
+impl Request {
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::CsVec { .. } => "cs_vec",
+            Request::SketchDense { .. } => "sketch_dense",
+            Request::SketchCp { .. } => "sketch_cp",
+            Request::InnerEstimate { .. } => "inner_estimate",
+        }
+    }
+}

@@ -1,0 +1,452 @@
+//! The sketch service: bounded ingress queues (backpressure), a dynamic
+//! batcher in front of the XLA `cs_batch` executable, and a pure-Rust worker
+//! pool for the remaining ops. See DESIGN.md §7.
+
+use super::msg::{Request, Response, ServiceError, SketchMethod};
+use super::stats::{Stats, StatsReport};
+use crate::hash::{HashPair, ModeHashes};
+use crate::runtime::{RuntimeHandle, TensorArg};
+use crate::sketch::{FastCountSketch, TensorSketch};
+use crate::util::prng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Pure-Rust worker threads.
+    pub workers: usize,
+    /// Bounded queue capacity (per queue) — the backpressure limit.
+    pub queue_capacity: usize,
+    /// Batcher flush deadline.
+    pub batch_deadline: Duration,
+    /// Seed for the service's shared hash tables and per-request draws.
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: crate::util::parallel::default_threads().min(8),
+            queue_capacity: 1024,
+            batch_deadline: Duration::from_micros(500),
+            seed: 0xFC5,
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    reply: Sender<Result<Response, ServiceError>>,
+    enqueued: Instant,
+}
+
+/// Queue message: a job or an explicit stop sentinel. The sentinel makes
+/// `Service::shutdown` deterministic even while clients still hold
+/// `ServiceHandle` clones (whose senders would otherwise keep the queues
+/// open forever).
+enum QueueMsg {
+    Work(Box<Job>),
+    Stop,
+}
+
+/// Cheap, cloneable client handle.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    batch_tx: SyncSender<QueueMsg>,
+    work_tx: SyncSender<QueueMsg>,
+    stats: Arc<Stats>,
+    pub cs_in_dim: usize,
+    pub cs_out_dim: usize,
+}
+
+impl ServiceHandle {
+    /// Non-blocking submit; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        req: Request,
+    ) -> Result<Receiver<Result<Response, ServiceError>>, ServiceError> {
+        self.validate(&req)?;
+        let (reply, rx) = std::sync::mpsc::channel();
+        let job = Box::new(Job { req, reply, enqueued: Instant::now() });
+        let target = match &job.req {
+            Request::CsVec { .. } => &self.batch_tx,
+            _ => &self.work_tx,
+        };
+        match target.try_send(QueueMsg::Work(job)) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.stats.record_rejection();
+                Err(ServiceError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::Closed),
+        }
+    }
+
+    /// Blocking call.
+    pub fn call(&self, req: Request) -> Result<Response, ServiceError> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| ServiceError::Closed)?
+    }
+
+    fn validate(&self, req: &Request) -> Result<(), ServiceError> {
+        match req {
+            Request::CsVec { x } => {
+                if x.len() != self.cs_in_dim {
+                    return Err(ServiceError::BadRequest(format!(
+                        "cs_vec expects dim {}, got {}",
+                        self.cs_in_dim,
+                        x.len()
+                    )));
+                }
+            }
+            Request::SketchDense { tensor, j, .. } => {
+                if tensor.numel() == 0 || *j == 0 {
+                    return Err(ServiceError::BadRequest("empty tensor or j=0".into()));
+                }
+            }
+            Request::SketchCp { cp, j } => {
+                if cp.rank() == 0 || *j == 0 {
+                    return Err(ServiceError::BadRequest("empty cp or j=0".into()));
+                }
+            }
+            Request::InnerEstimate { a, b, d, j, .. } => {
+                if a.shape != b.shape {
+                    return Err(ServiceError::BadRequest("shape mismatch".into()));
+                }
+                if *d == 0 || *j == 0 {
+                    return Err(ServiceError::BadRequest("d=0 or j=0".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StatsReport {
+        self.stats.report()
+    }
+}
+
+/// The running service (shut down with [`Service::shutdown`]).
+pub struct Service {
+    handle: ServiceHandle,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl Service {
+    /// Start the service. `runtime = None` runs fully on the pure-Rust path
+    /// (used when artifacts are absent); with a runtime, `cs_vec` batches on
+    /// the XLA executable and `sketch_cp` uses `fcs_rank1` when shapes match.
+    pub fn start(cfg: ServiceConfig, runtime: Option<RuntimeHandle>) -> anyhow::Result<Service> {
+        let stats = Arc::new(Stats::new());
+        stats.mark_started();
+
+        // Shared CS table for the cs_vec op: dims follow the artifact when a
+        // runtime is available, else a default.
+        let (in_dim, out_dim) = match &runtime {
+            Some(rt) => {
+                let e = rt
+                    .manifest()
+                    .entries
+                    .get("cs_batch")
+                    .ok_or_else(|| anyhow::anyhow!("cs_batch artifact missing"))?;
+                (
+                    e.meta_usize("in_dim").unwrap_or(1568),
+                    e.meta_usize("out_dim").unwrap_or(256),
+                )
+            }
+            None => (1568, 256),
+        };
+        let batch_size = runtime
+            .as_ref()
+            .and_then(|rt| rt.manifest().entries.get("cs_batch"))
+            .and_then(|e| e.meta_usize("batch"))
+            .unwrap_or(32);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let table = HashPair::draw(&mut rng, in_dim, out_dim).materialize();
+
+        let (batch_tx, batch_rx) = sync_channel::<QueueMsg>(cfg.queue_capacity);
+        let (work_tx, work_rx) = sync_channel::<QueueMsg>(cfg.queue_capacity);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // --- batcher thread ------------------------------------------------
+        {
+            let stats = stats.clone();
+            let runtime = runtime.clone();
+            let table = table.clone();
+            let deadline = cfg.batch_deadline;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("fcs-batcher".into())
+                    .spawn(move || {
+                        batcher_loop(batch_rx, runtime, table, batch_size, deadline, stats);
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // --- worker pool -----------------------------------------------------
+        let req_counter = Arc::new(AtomicU64::new(0));
+        for w in 0..cfg.workers.max(1) {
+            let rx = work_rx.clone();
+            let stats = stats.clone();
+            let runtime = runtime.clone();
+            let counter = req_counter.clone();
+            let seed = cfg.seed;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("fcs-worker-{w}"))
+                    .spawn(move || {
+                        worker_loop(rx, runtime, seed, counter, stats);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        let handle = ServiceHandle {
+            batch_tx,
+            work_tx,
+            stats,
+            cs_in_dim: in_dim,
+            cs_out_dim: out_dim,
+        };
+        Ok(Service { handle, threads, workers: cfg.workers.max(1) })
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    pub fn stats(&self) -> StatsReport {
+        self.handle.stats.report()
+    }
+
+    /// Graceful shutdown: send stop sentinels (one per consumer) and join.
+    /// Deterministic even if clients still hold handle clones.
+    pub fn shutdown(self) {
+        let Service { handle, threads, workers } = self;
+        let _ = handle.batch_tx.send(QueueMsg::Stop);
+        for _ in 0..workers {
+            let _ = handle.work_tx.send(QueueMsg::Stop);
+        }
+        drop(handle);
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batcher: dynamic batching of cs_vec onto the XLA cs_batch executable
+// ---------------------------------------------------------------------------
+
+fn batcher_loop(
+    rx: Receiver<QueueMsg>,
+    runtime: Option<RuntimeHandle>,
+    table: crate::hash::HashTable,
+    batch_size: usize,
+    deadline: Duration,
+    stats: Arc<Stats>,
+) {
+    let in_dim = table.domain();
+    let out_dim = table.range;
+    let h_i32: Vec<i32> = table.h.iter().map(|&v| v as i32).collect();
+    let s_f32: Vec<f32> = table.s.iter().map(|&v| v as f32).collect();
+    let cs = crate::sketch::CountSketch::new(table.clone());
+    let mut stopping = false;
+
+    while !stopping {
+        // Block for the first job of the batch.
+        let first = match rx.recv() {
+            Ok(QueueMsg::Work(j)) => j,
+            Ok(QueueMsg::Stop) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let flush_at = Instant::now() + deadline;
+        while batch.len() < batch_size {
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            match rx.recv_timeout(flush_at - now) {
+                Ok(QueueMsg::Work(j)) => batch.push(j),
+                Ok(QueueMsg::Stop) => {
+                    stopping = true; // flush this batch, then exit
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        stats.record_batch(batch.len());
+
+        // Execute: XLA path (pad to batch_size) or pure-Rust fallback.
+        let results: Vec<Result<Vec<f64>, ServiceError>> = match &runtime {
+            Some(rt) => {
+                let mut x = vec![0.0f32; batch_size * in_dim];
+                for (row, job) in batch.iter().enumerate() {
+                    let Request::CsVec { x: v } = &job.req else { unreachable!() };
+                    for (c, &val) in v.iter().enumerate() {
+                        x[row * in_dim + c] = val as f32;
+                    }
+                }
+                let args = vec![
+                    TensorArg::f32(&[batch_size, in_dim], x),
+                    TensorArg::i32(&[in_dim], h_i32.clone()),
+                    TensorArg::f32(&[in_dim], s_f32.clone()),
+                ];
+                match rt.run("cs_batch", args) {
+                    Ok(outs) => {
+                        let data = &outs[0].data;
+                        (0..batch.len())
+                            .map(|row| {
+                                Ok(data[row * out_dim..(row + 1) * out_dim]
+                                    .iter()
+                                    .map(|&v| v as f64)
+                                    .collect())
+                            })
+                            .collect()
+                    }
+                    Err(e) => batch
+                        .iter()
+                        .map(|_| Err(ServiceError::Exec(e.to_string())))
+                        .collect(),
+                }
+            }
+            None => batch
+                .iter()
+                .map(|job| {
+                    let Request::CsVec { x } = &job.req else { unreachable!() };
+                    Ok(cs.apply(x))
+                })
+                .collect(),
+        };
+
+        for (job, result) in batch.into_iter().zip(results) {
+            let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
+            stats.record("cs_vec", latency);
+            let _ = job.reply.send(result.map(Response::Sketch));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool: pure-Rust sketch ops (+ XLA fcs_rank1 when shapes match)
+// ---------------------------------------------------------------------------
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<QueueMsg>>>,
+    runtime: Option<RuntimeHandle>,
+    seed: u64,
+    counter: Arc<AtomicU64>,
+    stats: Arc<Stats>,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(QueueMsg::Work(j)) => j,
+                Ok(QueueMsg::Stop) | Err(_) => return,
+            }
+        };
+        let op = job.req.op_name();
+        let req_id = counter.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = execute_work(job.req, &runtime, &mut rng);
+        let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
+        stats.record(op, latency);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn execute_work(
+    req: Request,
+    runtime: &Option<RuntimeHandle>,
+    rng: &mut Rng,
+) -> Result<Response, ServiceError> {
+    match req {
+        Request::CsVec { .. } => unreachable!("cs_vec is routed to the batcher"),
+        Request::SketchDense { tensor, method, j } => {
+            let mh = ModeHashes::draw_uniform(rng, &tensor.shape, j);
+            let sk = match method {
+                SketchMethod::Ts => TensorSketch::new(mh).apply_dense(&tensor),
+                SketchMethod::Fcs => FastCountSketch::new(mh).apply_dense(&tensor),
+            };
+            Ok(Response::Sketch(sk))
+        }
+        Request::SketchCp { cp, j } => {
+            // XLA fast path if the artifact's static shapes match.
+            if let Some(rt) = runtime {
+                if let Some(e) = rt.manifest().entries.get("fcs_rank1") {
+                    let dims_match = e.meta_usize("dim").map(|d| {
+                        cp.order() == 3 && cp.shape().iter().all(|&s| s == d)
+                    }) == Some(true)
+                        && e.meta_usize("rank") == Some(cp.rank())
+                        && e.meta_usize("j") == Some(j);
+                    if dims_match {
+                        return sketch_cp_xla(rt, &cp, j, rng);
+                    }
+                }
+            }
+            let mh = ModeHashes::draw_uniform(rng, &cp.shape(), j);
+            Ok(Response::Sketch(FastCountSketch::new(mh).apply_cp(&cp)))
+        }
+        Request::InnerEstimate { a, b, method, j, d } => {
+            let mut estimates = Vec::with_capacity(d);
+            for _ in 0..d {
+                let mh = ModeHashes::draw_uniform(rng, &a.shape, j);
+                let (sa, sb) = match method {
+                    SketchMethod::Ts => {
+                        let ts = TensorSketch::new(mh);
+                        (ts.apply_dense(&a), ts.apply_dense(&b))
+                    }
+                    SketchMethod::Fcs => {
+                        let f = FastCountSketch::new(mh);
+                        (f.apply_dense(&a), f.apply_dense(&b))
+                    }
+                };
+                estimates.push(crate::linalg::dot(&sa, &sb));
+            }
+            Ok(Response::Scalar(crate::util::timing::median(&estimates)))
+        }
+    }
+}
+
+fn sketch_cp_xla(
+    rt: &RuntimeHandle,
+    cp: &crate::tensor::CpTensor,
+    j: usize,
+    rng: &mut Rng,
+) -> Result<Response, ServiceError> {
+    let dim = cp.factors[0].rows;
+    let rank = cp.rank();
+    let mh = ModeHashes::draw_uniform(rng, &cp.shape(), j);
+    let to_rowmajor = |m: &crate::linalg::Matrix| -> Vec<f32> {
+        let mut v = Vec::with_capacity(m.rows * m.cols);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                v.push(m.get(r, c) as f32);
+            }
+        }
+        v
+    };
+    let mut args = Vec::new();
+    for f in &cp.factors {
+        args.push(TensorArg::f32(&[dim, rank], to_rowmajor(f)));
+    }
+    args.push(TensorArg::f32(
+        &[rank],
+        cp.lambda.iter().map(|&l| l as f32).collect(),
+    ));
+    for m in &mh.modes {
+        args.push(TensorArg::i32(&[dim], m.h.iter().map(|&v| v as i32).collect()));
+        args.push(TensorArg::f32(&[dim], m.s.iter().map(|&v| v as f32).collect()));
+    }
+    let outs = rt
+        .run("fcs_rank1", args)
+        .map_err(|e| ServiceError::Exec(e.to_string()))?;
+    Ok(Response::Sketch(outs[0].data.iter().map(|&v| v as f64).collect()))
+}

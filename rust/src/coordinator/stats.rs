@@ -1,0 +1,144 @@
+//! Service metrics: per-op latency percentiles, throughput, batching stats,
+//! backpressure counters.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct OpStats {
+    latencies_us: Vec<f64>,
+    completed: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Stats {
+    inner: Mutex<StatsInner>,
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    per_op: HashMap<&'static str, OpStats>,
+    rejected_busy: u64,
+    batches: u64,
+    batched_items: u64,
+    started: Option<Instant>,
+}
+
+/// Snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct StatsReport {
+    pub per_op: Vec<OpReport>,
+    pub rejected_busy: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub total_completed: u64,
+    pub throughput_rps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub op: &'static str,
+    pub completed: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_started(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record(&self, op: &'static str, latency_us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.per_op.entry(op).or_default();
+        e.completed += 1;
+        // Bounded reservoir: keep the newest 100k samples.
+        if e.latencies_us.len() < 100_000 {
+            e.latencies_us.push(latency_us);
+        }
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected_busy += 1;
+    }
+
+    pub fn record_batch(&self, fill: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_items += fill as u64;
+    }
+
+    pub fn report(&self) -> StatsReport {
+        let g = self.inner.lock().unwrap();
+        let mut per_op = Vec::new();
+        let mut total = 0u64;
+        for (op, s) in &g.per_op {
+            total += s.completed;
+            let mut lat = s.latencies_us.clone();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |p: f64| {
+                if lat.is_empty() {
+                    0.0
+                } else {
+                    crate::util::timing::percentile_sorted(&lat, p)
+                }
+            };
+            per_op.push(OpReport {
+                op,
+                completed: s.completed,
+                p50_us: pct(50.0),
+                p95_us: pct(95.0),
+                p99_us: pct(99.0),
+            });
+        }
+        per_op.sort_by_key(|r| r.op);
+        let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        StatsReport {
+            per_op,
+            rejected_busy: g.rejected_busy,
+            batches: g.batches,
+            mean_batch_fill: if g.batches > 0 {
+                g.batched_items as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            total_completed: total,
+            throughput_rps: if elapsed > 0.0 { total as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let s = Stats::new();
+        s.mark_started();
+        for i in 0..100 {
+            s.record("cs_vec", i as f64);
+        }
+        s.record_batch(32);
+        s.record_batch(16);
+        s.record_rejection();
+        let r = s.report();
+        assert_eq!(r.total_completed, 100);
+        assert_eq!(r.rejected_busy, 1);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch_fill - 24.0).abs() < 1e-9);
+        let op = &r.per_op[0];
+        assert_eq!(op.op, "cs_vec");
+        assert!(op.p50_us > 40.0 && op.p50_us < 60.0);
+        assert!(op.p99_us >= op.p95_us);
+    }
+}

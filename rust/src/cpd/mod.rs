@@ -1,0 +1,8 @@
+//! CP decomposition algorithms over pluggable contraction estimators:
+//! RTPM (§4.1.1) and ALS (§4.1.2).
+
+pub mod als;
+pub mod rtpm;
+
+pub use als::{als_plain, als_sketched, mttkrp, AlsConfig};
+pub use rtpm::{rtpm_asymmetric, rtpm_symmetric, RtpmConfig};

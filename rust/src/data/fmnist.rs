@@ -1,0 +1,170 @@
+//! Procedural FMNIST-like dataset — the substitution for Fashion-MNIST
+//! (Table 4). Ten parametric 28×28 grayscale shape classes with random
+//! translation / scale / intensity jitter and pixel noise: enough learnable
+//! structure to rank the CS/TS/FCS-sketched TRL heads, with no external
+//! download (DESIGN.md §5).
+
+use crate::util::prng::Rng;
+
+pub const FMNIST_CLASSES: usize = 10;
+pub const IMG: usize = 28;
+
+/// A generated dataset: row-major images (`[n, 28, 28]` flattened) + labels.
+pub struct FmnistLike {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl FmnistLike {
+    pub fn generate(rng: &mut Rng, n: usize) -> Self {
+        let mut images = vec![0.0f32; n * IMG * IMG];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = (i % FMNIST_CLASSES) as i32;
+            labels.push(class);
+            let img = &mut images[i * IMG * IMG..(i + 1) * IMG * IMG];
+            draw_class(rng, class as usize, img);
+        }
+        // Shuffle jointly.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut s_images = vec![0.0f32; n * IMG * IMG];
+        let mut s_labels = vec![0i32; n];
+        for (dst, &src) in order.iter().enumerate() {
+            s_images[dst * IMG * IMG..(dst + 1) * IMG * IMG]
+                .copy_from_slice(&images[src * IMG * IMG..(src + 1) * IMG * IMG]);
+            s_labels[dst] = labels[src];
+        }
+        Self { images: s_images, labels: s_labels, n }
+    }
+
+    /// Borrow image `i` as a row-major 28×28 slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG * IMG..(i + 1) * IMG * IMG]
+    }
+
+    /// Copy a batch `[b, 28, 28, 1]` (row-major, XLA layout) + labels.
+    pub fn batch(&self, start: usize, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(b * IMG * IMG);
+        let mut y = Vec::with_capacity(b);
+        for k in 0..b {
+            let i = (start + k) % self.n;
+            x.extend_from_slice(self.image(i));
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+/// Render one jittered instance of a class into `img` (28×28 row-major).
+fn draw_class(rng: &mut Rng, class: usize, img: &mut [f32]) {
+    // Jitter/noise chosen so a full-capacity head plateaus well below 1.0 —
+    // otherwise every sketched variant saturates and Table 4 cannot rank
+    // them (Fashion-MNIST's ~0.9 ceiling plays the same role in the paper).
+    let cx = 14.0 + rng.uniform_in(-4.0, 4.0);
+    let cy = 14.0 + rng.uniform_in(-4.0, 4.0);
+    let scale = rng.uniform_in(0.7, 1.3);
+    let fg = rng.uniform_in(0.5, 1.0) as f32;
+    let inside = |x: f64, y: f64| -> bool {
+        // normalized body coordinates relative to jittered center/scale
+        let u = (x - cx) / (10.0 * scale);
+        let v = (y - cy) / (10.0 * scale);
+        match class {
+            0 => u.abs() < 0.9 && v.abs() < 0.6,                                  // wide block
+            1 => u.abs() < 0.45 && v.abs() < 0.95,                                // tall block
+            2 => u * u + v * v < 0.8,                                             // disc
+            3 => {
+                let r2 = u * u + v * v;
+                (0.35..0.85).contains(&r2)                                        // ring
+            }
+            4 => v > -0.8 && v < 0.8 && u.abs() < (v + 0.8) * 0.55,               // triangle
+            5 => (u.abs() < 0.25 && v.abs() < 0.9) || (v.abs() < 0.25 && u.abs() < 0.9), // cross
+            6 => (u + 0.45).abs() < 0.2 && v.abs() < 0.9
+                || (u - 0.45).abs() < 0.2 && v.abs() < 0.9,                       // trousers
+            7 => (u.abs() < 0.3 && v < 0.1 && v > -0.95) || (v.abs() < 0.3 && u > -0.1 && u < 0.95), // L-shape
+            8 => (u - v).abs() < 0.3 && u.abs() < 0.95 && v.abs() < 0.95,         // diagonal
+            _ => ((u * 3.0).floor() as i64 + (v * 3.0).floor() as i64) % 2 == 0
+                && u.abs() < 0.9
+                && v.abs() < 0.9,                                                 // checker
+        }
+    };
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let mut v = if inside(x as f64, y as f64) { fg } else { 0.0 };
+            v += 0.25 * rng.normal() as f32; // heavy sensor noise
+            img[y * IMG + x] = v.clamp(0.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_labels() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = FmnistLike::generate(&mut rng, 200);
+        let mut counts = [0usize; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn images_in_range() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = FmnistLike::generate(&mut rng, 50);
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean intra-class L2 distance should be well below inter-class.
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = FmnistLike::generate(&mut rng, 400);
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); 10];
+        for i in 0..ds.n {
+            by_class[ds.labels[i] as usize].push(i);
+        }
+        let dist = |a: usize, b: usize| -> f64 {
+            ds.image(a)
+                .iter()
+                .zip(ds.image(b))
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        for c in 0..10 {
+            for k in 1..by_class[c].len().min(6) {
+                intra += dist(by_class[c][0], by_class[c][k]);
+                n_intra += 1;
+            }
+            let c2 = (c + 1) % 10;
+            inter += dist(by_class[c][0], by_class[c2][0]);
+            n_inter += 1;
+        }
+        // Heavy jitter/noise (deliberate — see draw_class) makes raw pixel
+        // distance noise-dominated; classes need only be separable on
+        // average (the TRN pipeline test is the real learnability check:
+        // ~0.6–0.8 accuracy vs 0.1 chance).
+        let (intra, inter) = (intra / n_intra as f64, inter / n_inter as f64);
+        assert!(inter > 1.02 * intra, "inter {inter} vs intra {intra}");
+    }
+
+    #[test]
+    fn batch_wraps_around() {
+        let mut rng = Rng::seed_from_u64(4);
+        let ds = FmnistLike::generate(&mut rng, 10);
+        let (x, y) = ds.batch(8, 4);
+        assert_eq!(x.len(), 4 * 784);
+        assert_eq!(y.len(), 4);
+        assert_eq!(y[2], ds.labels[0]); // wrapped
+    }
+}

@@ -1,0 +1,132 @@
+//! Procedural hyperspectral cube — the substitution for CAVE *Watercolors*
+//! (512×512×31, Fig. 2). See DESIGN.md §5 for the substitution argument.
+//!
+//! Construction: `rank_signal` spatial abundance maps (smooth 2-D Gaussian
+//! blobs) each paired with a smooth spectral signature across the band axis,
+//! plus band-correlated sensor noise — approximately low CP rank with a
+//! realistic spatial/spectral structure, normalized to [0, 1] grayscale.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Generate a `height × width × bands` hyperspectral-like cube.
+pub fn hsi_cube(
+    rng: &mut Rng,
+    height: usize,
+    width: usize,
+    bands: usize,
+    rank_signal: usize,
+    noise_sigma: f64,
+) -> Tensor {
+    // Spatial abundance maps: mixtures of anisotropic Gaussian blobs.
+    let mut maps: Vec<Vec<f64>> = Vec::with_capacity(rank_signal);
+    for _ in 0..rank_signal {
+        let mut map = vec![0.0f64; height * width];
+        let blobs = 2 + rng.below(4) as usize;
+        for _ in 0..blobs {
+            let cy = rng.uniform_in(0.1, 0.9) * height as f64;
+            let cx = rng.uniform_in(0.1, 0.9) * width as f64;
+            let sy = rng.uniform_in(0.05, 0.25) * height as f64;
+            let sx = rng.uniform_in(0.05, 0.25) * width as f64;
+            let amp = rng.uniform_in(0.3, 1.0);
+            for y in 0..height {
+                let dy = (y as f64 - cy) / sy;
+                let ey = (-0.5 * dy * dy).exp();
+                if ey < 1e-6 {
+                    continue;
+                }
+                for x in 0..width {
+                    let dx = (x as f64 - cx) / sx;
+                    map[y * width + x] += amp * ey * (-0.5 * dx * dx).exp();
+                }
+            }
+        }
+        maps.push(map);
+    }
+    // Spectral signatures: smooth bumps over the band axis (400–700 nm-ish).
+    let mut sigs: Vec<Vec<f64>> = Vec::with_capacity(rank_signal);
+    for _ in 0..rank_signal {
+        let center = rng.uniform_in(0.0, 1.0) * bands as f64;
+        let widthb = rng.uniform_in(0.15, 0.5) * bands as f64;
+        let tilt = rng.uniform_in(-0.3, 0.3);
+        let sig: Vec<f64> = (0..bands)
+            .map(|b| {
+                let d = (b as f64 - center) / widthb;
+                ((-0.5 * d * d).exp() + tilt * b as f64 / bands as f64).max(0.0)
+            })
+            .collect();
+        sigs.push(sig);
+    }
+    // Assemble cube (column-major [h, w, band]) + noise, normalize to [0,1].
+    let mut t = Tensor::zeros(&[height, width, bands]);
+    for b in 0..bands {
+        for x in 0..width {
+            for y in 0..height {
+                let mut v = 0.0;
+                for r in 0..rank_signal {
+                    v += maps[r][y * width + x] * sigs[r][b];
+                }
+                t.data[(b * width + x) * height + y] = v;
+            }
+        }
+    }
+    if noise_sigma > 0.0 {
+        // Band-correlated noise: per-band gain drift + iid read noise.
+        for b in 0..bands {
+            let gain = 1.0 + noise_sigma * rng.normal();
+            for x in 0..width {
+                for y in 0..height {
+                    let idx = (b * width + x) * height + y;
+                    t.data[idx] = t.data[idx] * gain + noise_sigma * rng.normal();
+                }
+            }
+        }
+    }
+    normalize01(&mut t);
+    t
+}
+
+/// Scale data into [0, 1].
+pub(crate) fn normalize01(t: &mut Tensor) {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &t.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    for v in t.data.iter_mut() {
+        *v = (*v - lo) / span;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_shape_and_range() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = hsi_cube(&mut rng, 32, 32, 8, 5, 0.01);
+        assert_eq!(t.shape, vec![32, 32, 8]);
+        assert!(t.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(t.frob_norm() > 0.0);
+    }
+
+    #[test]
+    fn cube_is_approximately_low_rank() {
+        // rank_signal=4 cube: a rank-8 CP fit should capture most energy.
+        let mut rng = Rng::seed_from_u64(2);
+        let t = hsi_cube(&mut rng, 24, 24, 8, 4, 0.005);
+        let cfg = crate::cpd::AlsConfig { rank: 8, n_iter: 25, seed: 3 };
+        let cp = crate::cpd::als_plain(&t, &cfg);
+        let res = cp.residual(&t);
+        assert!(res < 0.2, "relative residual {res}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = hsi_cube(&mut Rng::seed_from_u64(7), 16, 16, 4, 3, 0.01);
+        let b = hsi_cube(&mut Rng::seed_from_u64(7), 16, 16, 4, 3, 0.01);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,138 @@
+//! Procedural light field — the substitution for HCI *Buddha*
+//! (192×192×81 after preprocessing, Fig. 3). See DESIGN.md §5.
+//!
+//! Construction: a smooth base texture plus a few depth layers, each shifted
+//! per view by its disparity across a 9×9 camera grid — the 81 views are
+//! near-duplicates, giving the strongly low-rank view axis the experiment
+//! exploits.
+
+use super::hsi::normalize01;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Generate a `height × width × (grid²)` light-field tensor.
+pub fn lightfield_cube(
+    rng: &mut Rng,
+    height: usize,
+    width: usize,
+    grid: usize,
+    layers: usize,
+    noise_sigma: f64,
+) -> Tensor {
+    let views = grid * grid;
+    // Base texture: sum of random smooth sinusoids.
+    let waves: Vec<(f64, f64, f64, f64)> = (0..8)
+        .map(|_| {
+            (
+                rng.uniform_in(0.5, 4.0),  // fy
+                rng.uniform_in(0.5, 4.0),  // fx
+                rng.uniform_in(0.0, std::f64::consts::TAU), // phase
+                rng.uniform_in(0.3, 1.0),  // amplitude
+            )
+        })
+        .collect();
+    let texture = |y: f64, x: f64| -> f64 {
+        waves
+            .iter()
+            .map(|&(fy, fx, p, a)| {
+                a * (fy * y * std::f64::consts::TAU / height as f64
+                    + fx * x * std::f64::consts::TAU / width as f64
+                    + p)
+                    .sin()
+            })
+            .sum()
+    };
+    // Depth layers: circular blobs at random depths (disparities).
+    struct Layer {
+        cy: f64,
+        cx: f64,
+        radius: f64,
+        disparity: f64,
+        value: f64,
+    }
+    let layer_objs: Vec<Layer> = (0..layers)
+        .map(|_| Layer {
+            cy: rng.uniform_in(0.2, 0.8) * height as f64,
+            cx: rng.uniform_in(0.2, 0.8) * width as f64,
+            radius: rng.uniform_in(0.08, 0.25) * height.min(width) as f64,
+            disparity: rng.uniform_in(-2.0, 2.0),
+            value: rng.uniform_in(0.5, 2.0),
+        })
+        .collect();
+
+    let mut t = Tensor::zeros(&[height, width, views]);
+    for v in 0..views {
+        let (gy, gx) = ((v / grid) as f64, (v % grid) as f64);
+        let (oy, ox) = (gy - (grid as f64 - 1.0) / 2.0, gx - (grid as f64 - 1.0) / 2.0);
+        for x in 0..width {
+            for y in 0..height {
+                // background texture shifts with a small global disparity
+                let mut val = texture(y as f64 + 0.3 * oy, x as f64 + 0.3 * ox);
+                for l in &layer_objs {
+                    let dy = y as f64 - (l.cy + l.disparity * oy);
+                    let dx = x as f64 - (l.cx + l.disparity * ox);
+                    if dy * dy + dx * dx < l.radius * l.radius {
+                        val += l.value;
+                    }
+                }
+                t.data[(v * width + x) * height + y] = val;
+            }
+        }
+    }
+    if noise_sigma > 0.0 {
+        t.add_noise(rng, noise_sigma);
+    }
+    normalize01(&mut t);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_range() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = lightfield_cube(&mut rng, 24, 24, 3, 3, 0.005);
+        assert_eq!(t.shape, vec![24, 24, 9]);
+        assert!(t.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn views_are_strongly_correlated() {
+        // Adjacent views must be near-duplicates (high correlation).
+        let mut rng = Rng::seed_from_u64(2);
+        let t = lightfield_cube(&mut rng, 32, 32, 3, 3, 0.0);
+        let view = |v: usize| -> Vec<f64> {
+            let mut out = Vec::with_capacity(32 * 32);
+            for x in 0..32 {
+                for y in 0..32 {
+                    out.push(t.data[(v * 32 + x) * 32 + y]);
+                }
+            }
+            out
+        };
+        let (a, b) = (view(0), view(1));
+        let corr = {
+            let ma = a.iter().sum::<f64>() / a.len() as f64;
+            let mb = b.iter().sum::<f64>() / b.len() as f64;
+            let mut num = 0.0;
+            let mut da = 0.0;
+            let mut db = 0.0;
+            for (x, y) in a.iter().zip(&b) {
+                num += (x - ma) * (y - mb);
+                da += (x - ma) * (x - ma);
+                db += (y - mb) * (y - mb);
+            }
+            num / (da * db).sqrt()
+        };
+        assert!(corr > 0.9, "adjacent view correlation {corr}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = lightfield_cube(&mut Rng::seed_from_u64(9), 16, 16, 3, 2, 0.01);
+        let b = lightfield_cube(&mut Rng::seed_from_u64(9), 16, 16, 3, 2, 0.01);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,278 @@
+//! Convolutions on top of the FFT plans.
+//!
+//! The distinction between **linear** (zero-padded) and **circular**
+//! (mod-J wraparound) convolution is the heart of the paper: TS (Eq. 3) uses
+//! circular convolution of the per-mode count sketches; FCS (Eq. 8) uses
+//! linear convolution, which preserves the composite hash `Σ h_n(i_n) − N + 1`
+//! without the modulo that destroys spatial structure.
+
+use super::complex::{C64, ZERO};
+use super::plan::{fft_inplace, fft_real, ifft_inplace, ifft_to_real};
+
+/// Product spectrum `F(a)·F(b)` of two real signals at length `n`, computed
+/// with **one** complex FFT via the real-pair packing identity: with
+/// `Z = F(a + i·b)`, Hermitian symmetry gives
+/// `F(a)[k]·F(b)[k] = (Z[k]² − conj(Z[n−k])²) · (−i/4)` (§Perf: halves the
+/// forward-FFT work in every convolution).
+pub fn packed_product_spectrum(a: &[f64], b: &[f64], n: usize) -> Vec<C64> {
+    debug_assert!(a.len() <= n && b.len() <= n);
+    let mut z = vec![ZERO; n];
+    for (i, &v) in a.iter().enumerate() {
+        z[i].re = v;
+    }
+    for (i, &v) in b.iter().enumerate() {
+        z[i].im = v;
+    }
+    fft_inplace(&mut z);
+    let quarter_negi = C64::new(0.0, -0.25);
+    let mut out = vec![ZERO; n];
+    for k in 0..n {
+        let zk = z[k];
+        let zmk = z[(n - k) % n].conj();
+        out[k] = (zk * zk - zmk * zmk) * quarter_negi;
+    }
+    out
+}
+
+/// Linear convolution of real signals, output length `a.len() + b.len() - 1`,
+/// computed via zero-padded FFT (one packed forward + one inverse).
+pub fn conv_linear(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let out_len = a.len() + b.len() - 1;
+    let n = out_len.next_power_of_two();
+    let spec = packed_product_spectrum(a, b, n);
+    let mut out = ifft_to_real(spec);
+    out.truncate(out_len);
+    out
+}
+
+/// Linear convolution of several real signals, all zero-padded to the final
+/// output length `Σ len − (k−1)` before a single pointwise product in the
+/// spectral domain (this is exactly Eq. 8 of the paper with `J̃`-point FFTs).
+pub fn conv_linear_many(signals: &[&[f64]]) -> Vec<f64> {
+    assert!(!signals.is_empty());
+    if signals.len() == 1 {
+        return signals[0].to_vec();
+    }
+    let out_len = signals.iter().map(|s| s.len()).sum::<usize>() - (signals.len() - 1);
+    let n = out_len.next_power_of_two();
+    // Consume signals pairwise through the packing trick.
+    let mut acc = packed_product_spectrum(signals[0], signals[1], n);
+    let mut rest = &signals[2..];
+    while rest.len() >= 2 {
+        let spec = packed_product_spectrum(rest[0], rest[1], n);
+        for (x, y) in acc.iter_mut().zip(&spec) {
+            *x = *x * *y;
+        }
+        rest = &rest[2..];
+    }
+    if let Some(s) = rest.first() {
+        let fs = fft_real(s, n);
+        for (x, y) in acc.iter_mut().zip(fs.iter()) {
+            *x = *x * *y;
+        }
+    }
+    let mut out = ifft_to_real(acc);
+    out.truncate(out_len);
+    out
+}
+
+/// Circular convolution of real signals of identical length `J`
+/// (the TS mode-J convolution, Eq. 3).
+pub fn conv_circular(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "circular convolution needs equal lengths");
+    let j = a.len();
+    let mut fa = fft_real(a, j);
+    let fb = fft_real(b, j);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = *x * *y;
+    }
+    ifft_to_real(fa)
+}
+
+/// Circular convolution of several equal-length real signals.
+pub fn conv_circular_many(signals: &[&[f64]]) -> Vec<f64> {
+    assert!(!signals.is_empty());
+    let j = signals[0].len();
+    let mut acc = fft_real(signals[0], j);
+    for s in &signals[1..] {
+        assert_eq!(s.len(), j);
+        let fs = fft_real(s, j);
+        for (x, y) in acc.iter_mut().zip(fs.iter()) {
+            *x = *x * *y;
+        }
+    }
+    ifft_to_real(acc)
+}
+
+/// Cross-correlation style product used in Eq. 17:
+/// `F^{-1}( F(z) * conj(F(a)) * conj(F(b)) )` over a common length `n`
+/// (signals zero-padded). Returns real parts, length `n`.
+pub fn spectral_corr(z: &[f64], conj_with: &[&[f64]], n: usize) -> Vec<f64> {
+    let mut fz = fft_real(z, n);
+    for s in conj_with {
+        let fs = fft_real(s, n);
+        for (x, y) in fz.iter_mut().zip(fs.iter()) {
+            *x = *x * y.conj();
+        }
+    }
+    ifft_to_real(fz)
+}
+
+/// Naive O(n·m) linear convolution — oracle for tests.
+pub fn conv_linear_naive(a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let mut out = vec![0.0; a.len() + b.len() - 1];
+    for (i, &x) in a.iter().enumerate() {
+        for (j, &y) in b.iter().enumerate() {
+            out[i + j] += x * y;
+        }
+    }
+    out
+}
+
+/// Naive circular convolution — oracle for tests.
+pub fn conv_circular_naive(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let j = a.len();
+    let mut out = vec![0.0; j];
+    for (i, &x) in a.iter().enumerate() {
+        for (k, &y) in b.iter().enumerate() {
+            out[(i + k) % j] += x * y;
+        }
+    }
+    out
+}
+
+/// Pointwise complex product of two spectra (exported for the L1 kernel
+/// parity tests against `python/compile/kernels/conv_mult.py`).
+pub fn spectra_mul(a: &[C64], b: &[C64]) -> Vec<C64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x * *y).collect()
+}
+
+/// Forward FFT of a real signal at its own length (no padding), exposed for
+/// parity tests with the python reference.
+pub fn spectrum(x: &[f64]) -> Vec<C64> {
+    fft_real(x, x.len())
+}
+
+/// Inverse of `spectrum`.
+pub fn inverse_spectrum(mut s: Vec<C64>) -> Vec<f64> {
+    ifft_inplace(&mut s);
+    s.into_iter().map(|z| z.re).collect()
+}
+
+/// Zero-pad helper.
+pub fn zero_pad(x: &[f64], n: usize) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    v[..x.len()].copy_from_slice(x);
+    v
+}
+
+#[allow(dead_code)]
+fn _unused(_: C64) {
+    let _ = ZERO;
+    let mut v = vec![ZERO; 2];
+    fft_inplace(&mut v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::qcheck::qcheck;
+
+    fn max_err(a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn linear_matches_naive() {
+        let mut rng = Rng::seed_from_u64(10);
+        for &(n, m) in &[(1usize, 1usize), (3, 5), (17, 9), (100, 57), (255, 255)] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(m);
+            let fast = conv_linear(&a, &b);
+            let slow = conv_linear_naive(&a, &b);
+            assert!(max_err(&fast, &slow) < 1e-8 * (n + m) as f64);
+        }
+    }
+
+    #[test]
+    fn circular_matches_naive() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &n in &[1usize, 2, 5, 16, 100, 243] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let fast = conv_circular(&a, &b);
+            let slow = conv_circular_naive(&a, &b);
+            assert!(max_err(&fast, &slow) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn many_equals_pairwise_chain() {
+        let mut rng = Rng::seed_from_u64(12);
+        let a = rng.normal_vec(13);
+        let b = rng.normal_vec(7);
+        let c = rng.normal_vec(9);
+        let chained = conv_linear(&conv_linear(&a, &b), &c);
+        let many = conv_linear_many(&[&a, &b, &c]);
+        assert_eq!(chained.len(), many.len());
+        assert!(max_err(&chained, &many) < 1e-8);
+    }
+
+    #[test]
+    fn circular_is_linear_mod_j() {
+        // circular(a,b)[k] = Σ_{k' ≡ k mod J} linear(a,b)[k'] — the exact
+        // relation between TS and FCS outputs (paper §3, point 2).
+        let mut rng = Rng::seed_from_u64(13);
+        let j = 11;
+        let a = rng.normal_vec(j);
+        let b = rng.normal_vec(j);
+        let lin = conv_linear(&a, &b);
+        let circ = conv_circular(&a, &b);
+        let mut folded = vec![0.0; j];
+        for (k, &v) in lin.iter().enumerate() {
+            folded[k % j] += v;
+        }
+        assert!(max_err(&folded, &circ) < 1e-9);
+    }
+
+    #[test]
+    fn conv_commutative_property() {
+        qcheck(25, |g| {
+            let n = g.usize_in(1, 60);
+            let m = g.usize_in(1, 60);
+            let a = g.f64_vec(n, -1.0, 1.0);
+            let b = g.f64_vec(m, -1.0, 1.0);
+            let ab = conv_linear(&a, &b);
+            let ba = conv_linear(&b, &a);
+            assert!(max_err(&ab, &ba) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn spectral_corr_matches_definition() {
+        // <z ⊛ reverse-correlation> check: spectral_corr(z,[a],n)[i] should
+        // equal Σ_k z[(i+k) mod n] a[k] for zero-padded a, z.
+        let mut rng = Rng::seed_from_u64(14);
+        let n = 16;
+        let z = rng.normal_vec(n);
+        let a = rng.normal_vec(5);
+        let out = spectral_corr(&z, &[&a], n);
+        let apad = zero_pad(&a, n);
+        for i in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += z[(i + k) % n] * apad[k];
+            }
+            assert!((out[i] - acc).abs() < 1e-9, "i={i}");
+        }
+    }
+}

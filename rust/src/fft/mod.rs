@@ -1,0 +1,13 @@
+//! From-scratch FFT library (rustfft is not available offline): complex
+//! arithmetic, radix-2 + Bluestein plans with a global plan cache, and the
+//! linear/circular convolutions that implement Eq. 3 (TS) and Eq. 8 (FCS).
+
+pub mod complex;
+pub mod convolve;
+pub mod plan;
+
+pub use complex::C64;
+pub use convolve::{
+    conv_circular, conv_circular_many, conv_linear, conv_linear_many, spectral_corr, zero_pad,
+};
+pub use plan::{fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, Plan};

@@ -1,0 +1,384 @@
+//! FFT plans: iterative radix-2 Cooley-Tukey for power-of-two lengths and
+//! Bluestein's algorithm (chirp-z) for arbitrary lengths. Plans cache
+//! twiddle factors and bit-reversal tables; the planner memoizes plans per
+//! length so repeated transforms (the FCS hot path runs thousands at the
+//! same `J̃`) pay setup once.
+
+use super::complex::{C64, ONE, ZERO};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Direction of the transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Forward,
+    Inverse,
+}
+
+/// A radix-2 plan for power-of-two `n`.
+#[derive(Debug)]
+struct Radix2Plan {
+    n: usize,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+    /// Twiddles for the forward transform, grouped per stage:
+    /// stage with half-size `m` uses `twiddle[m + k]` = e^{-i pi k / m}.
+    twiddles: Vec<C64>,
+}
+
+impl Radix2Plan {
+    fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n > 0);
+        let bits = n.trailing_zeros();
+        let mut rev = vec![0u32; n];
+        for i in 0..n {
+            rev[i] = (i as u32).reverse_bits() >> (32 - bits.max(1));
+            if n == 1 {
+                rev[i] = 0;
+            }
+        }
+        // Twiddle table indexed like a binary heap: for each half-size m
+        // (1, 2, 4, ..., n/2) store m roots at offset m.
+        let mut twiddles = vec![ZERO; n.max(2)];
+        let mut m = 1usize;
+        while m < n {
+            for k in 0..m {
+                twiddles[m + k] = C64::cis(-std::f64::consts::PI * k as f64 / m as f64);
+            }
+            m <<= 1;
+        }
+        Self { n, rev, twiddles }
+    }
+
+    fn process(&self, data: &mut [C64], dir: Dir) {
+        let n = self.n;
+        debug_assert_eq!(data.len(), n);
+        if n == 1 {
+            return;
+        }
+        // Inverse via conjugation: F⁻¹(x) = conj(F(conj(x)))/n — keeps the
+        // butterfly loop branch-free (§Perf).
+        if dir == Dir::Inverse {
+            for x in data.iter_mut() {
+                x.im = -x.im;
+            }
+            self.process(data, Dir::Forward);
+            let inv = 1.0 / n as f64;
+            for x in data.iter_mut() {
+                x.re *= inv;
+                x.im *= -inv;
+            }
+            return;
+        }
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+        // Stage m=1 specialized: w = 1 for every butterfly.
+        {
+            let mut base = 0usize;
+            while base < n {
+                let a = data[base];
+                let b = data[base + 1];
+                data[base] = a + b;
+                data[base + 1] = a - b;
+                base += 2;
+            }
+        }
+        // Stage m=2 specialized: w ∈ {1, −i}.
+        if n >= 4 {
+            let mut base = 0usize;
+            while base < n {
+                let a0 = data[base];
+                let b0 = data[base + 2];
+                data[base] = a0 + b0;
+                data[base + 2] = a0 - b0;
+                let a1 = data[base + 1];
+                let b1 = data[base + 3];
+                let rb = C64::new(b1.im, -b1.re); // b · (−i)
+                data[base + 1] = a1 + rb;
+                data[base + 3] = a1 - rb;
+                base += 4;
+            }
+        }
+        // Remaining stages: forward twiddles, branch-free.
+        let mut m = 4usize;
+        while m < n {
+            let stride = m << 1;
+            let tw = &self.twiddles[m..m + m];
+            let mut base = 0usize;
+            while base < n {
+                let (lo, hi) = data[base..base + stride].split_at_mut(m);
+                for k in 0..m {
+                    let w = tw[k];
+                    let a = lo[k];
+                    let b = hi[k] * w;
+                    lo[k] = a + b;
+                    hi[k] = a - b;
+                }
+                base += stride;
+            }
+            m = stride;
+        }
+    }
+}
+
+/// Bluestein plan for arbitrary `n`: expresses the length-`n` DFT as a
+/// convolution of length `m >= 2n-1`, `m` a power of two.
+#[derive(Debug)]
+struct BluesteinPlan {
+    n: usize,
+    m: usize,
+    inner: Radix2Plan,
+    /// chirp[k] = e^{-i pi k^2 / n} for k in [0, n)
+    chirp: Vec<C64>,
+    /// FFT of the (conjugated, wrapped) chirp kernel, length m.
+    kernel_fft: Vec<C64>,
+}
+
+impl BluesteinPlan {
+    fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = Radix2Plan::new(m);
+        let mut chirp = vec![ZERO; n];
+        for k in 0..n {
+            // k^2 mod 2n keeps the angle argument small & exact.
+            let kk = (k as u128 * k as u128 % (2 * n as u128)) as f64;
+            chirp[k] = C64::cis(-std::f64::consts::PI * kk / n as f64);
+        }
+        let mut kernel = vec![ZERO; m];
+        kernel[0] = chirp[0].conj();
+        for k in 1..n {
+            kernel[k] = chirp[k].conj();
+            kernel[m - k] = chirp[k].conj();
+        }
+        inner.process(&mut kernel, Dir::Forward);
+        Self { n, m, inner, chirp, kernel_fft: kernel }
+    }
+
+    fn process(&self, data: &mut [C64], dir: Dir) {
+        let n = self.n;
+        debug_assert_eq!(data.len(), n);
+        let mut a = vec![ZERO; self.m];
+        match dir {
+            Dir::Forward => {
+                for k in 0..n {
+                    a[k] = data[k] * self.chirp[k];
+                }
+            }
+            Dir::Inverse => {
+                // inverse DFT = conj(forward DFT of conj(x))/n
+                for k in 0..n {
+                    a[k] = data[k].conj() * self.chirp[k];
+                }
+            }
+        }
+        self.inner.process(&mut a, Dir::Forward);
+        for (x, k) in a.iter_mut().zip(self.kernel_fft.iter()) {
+            *x = *x * *k;
+        }
+        self.inner.process(&mut a, Dir::Inverse);
+        match dir {
+            Dir::Forward => {
+                for k in 0..n {
+                    data[k] = a[k] * self.chirp[k];
+                }
+            }
+            Dir::Inverse => {
+                let inv = 1.0 / n as f64;
+                for k in 0..n {
+                    data[k] = (a[k] * self.chirp[k]).conj().scale(inv);
+                }
+            }
+        }
+    }
+}
+
+/// A plan for one transform length.
+#[derive(Debug)]
+enum PlanKind {
+    Radix2(Radix2Plan),
+    Bluestein(BluesteinPlan),
+}
+
+/// Shareable FFT plan for a fixed length.
+#[derive(Debug)]
+pub struct Plan {
+    kind: PlanKind,
+    pub n: usize,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Self {
+        let kind = if n.is_power_of_two() {
+            PlanKind::Radix2(Radix2Plan::new(n))
+        } else {
+            PlanKind::Bluestein(BluesteinPlan::new(n))
+        };
+        Self { kind, n }
+    }
+
+    /// In-place transform. `data.len()` must equal `self.n`.
+    pub fn process(&self, data: &mut [C64], dir: Dir) {
+        assert_eq!(data.len(), self.n, "FFT plan length mismatch");
+        match &self.kind {
+            PlanKind::Radix2(p) => p.process(data, dir),
+            PlanKind::Bluestein(p) => p.process(data, dir),
+        }
+    }
+}
+
+/// Process-wide plan cache. The FCS hot loop transforms many vectors of the
+/// same length; building twiddles once matters (§Perf).
+#[derive(Default)]
+pub struct Planner {
+    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+}
+
+impl Planner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        let mut guard = self.plans.lock().unwrap();
+        guard.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+    }
+}
+
+/// Global planner instance.
+pub fn global_planner() -> &'static Planner {
+    static PLANNER: once_cell::sync::Lazy<Planner> = once_cell::sync::Lazy::new(Planner::new);
+    &PLANNER
+}
+
+/// Convenience: forward FFT of a complex buffer (in place).
+pub fn fft_inplace(data: &mut [C64]) {
+    global_planner().plan(data.len()).process(data, Dir::Forward);
+}
+
+/// Convenience: inverse FFT of a complex buffer (in place).
+pub fn ifft_inplace(data: &mut [C64]) {
+    global_planner().plan(data.len()).process(data, Dir::Inverse);
+}
+
+/// Forward FFT of a real signal zero-padded to length `n`.
+pub fn fft_real(x: &[f64], n: usize) -> Vec<C64> {
+    assert!(x.len() <= n, "fft_real: signal longer than transform ({} > {n})", x.len());
+    let mut buf = vec![ZERO; n];
+    for (b, &v) in buf.iter_mut().zip(x.iter()) {
+        *b = C64::real(v);
+    }
+    fft_inplace(&mut buf);
+    buf
+}
+
+/// Inverse FFT, returning only real parts (caller asserts the signal is
+/// real-valued up to rounding).
+pub fn ifft_to_real(mut spec: Vec<C64>) -> Vec<f64> {
+    ifft_inplace(&mut spec);
+    spec.into_iter().map(|z| z.re).collect()
+}
+
+/// Naive O(n^2) DFT — oracle for tests.
+pub fn dft_naive(x: &[C64], dir: Dir) -> Vec<C64> {
+    let n = x.len();
+    let sign = if dir == Dir::Forward { -1.0 } else { 1.0 };
+    let mut out = vec![ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = ZERO;
+        for (j, &v) in x.iter().enumerate() {
+            let ang = sign * 2.0 * std::f64::consts::PI * (k as u128 * j as u128 % n as u128) as f64
+                / n as f64;
+            acc += v * C64::cis(ang);
+        }
+        *o = if dir == Dir::Inverse { acc.scale(1.0 / n as f64) } else { acc };
+    }
+    let _ = ONE;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_signal(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn radix2_matches_naive() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(&mut rng, n);
+            let mut y = x.clone();
+            fft_inplace(&mut y);
+            let z = dft_naive(&x, Dir::Forward);
+            assert!(max_err(&y, &z) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        let mut rng = Rng::seed_from_u64(2);
+        for &n in &[3usize, 5, 6, 7, 12, 100, 299, 997] {
+            let x = rand_signal(&mut rng, n);
+            let mut y = x.clone();
+            fft_inplace(&mut y);
+            let z = dft_naive(&x, Dir::Forward);
+            assert!(max_err(&y, &z) < 1e-8 * (n as f64), "n={n} err={}", max_err(&y, &z));
+        }
+    }
+
+    #[test]
+    fn roundtrip_forward_inverse() {
+        let mut rng = Rng::seed_from_u64(3);
+        for &n in &[2usize, 17, 128, 1000, 4093] {
+            let x = rand_signal(&mut rng, n);
+            let mut y = x.clone();
+            fft_inplace(&mut y);
+            ifft_inplace(&mut y);
+            assert!(max_err(&x, &y) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn real_transform_is_hermitian() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x: Vec<f64> = rng.normal_vec(37);
+        let spec = fft_real(&x, 64);
+        for k in 1..64 {
+            let err = (spec[k] - spec[64 - k].conj()).abs();
+            assert!(err < 1e-10, "k={k}");
+        }
+    }
+
+    #[test]
+    fn linearity_property() {
+        use crate::util::qcheck::qcheck;
+        qcheck(30, |g| {
+            let n = g.usize_in(2, 200);
+            let a: Vec<C64> = (0..n).map(|_| C64::new(g.f64_in(-1.0, 1.0), g.f64_in(-1.0, 1.0))).collect();
+            let b: Vec<C64> = (0..n).map(|_| C64::new(g.f64_in(-1.0, 1.0), g.f64_in(-1.0, 1.0))).collect();
+            let alpha = g.f64_in(-2.0, 2.0);
+            let mut lhs: Vec<C64> = a.iter().zip(&b).map(|(x, y)| *x + y.scale(alpha)).collect();
+            fft_inplace(&mut lhs);
+            let mut fa = a.clone();
+            fft_inplace(&mut fa);
+            let mut fb = b.clone();
+            fft_inplace(&mut fb);
+            let rhs: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| *x + y.scale(alpha)).collect();
+            let err = lhs.iter().zip(&rhs).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64);
+        });
+    }
+}

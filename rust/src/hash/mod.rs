@@ -1,0 +1,395 @@
+//! 2-wise independent hash families — the randomness substrate of every
+//! sketch in the paper.
+//!
+//! `h : [I] → [J]` and `s : [I] → {±1}` are drawn from the classic
+//! degree-1 polynomial family over the Mersenne prime `p = 2^61 − 1`:
+//! `h(x) = ((a·x + b) mod p) mod J` with `a ∈ [1,p)`, `b ∈ [0,p)`. This is
+//! 2-wise independent, which is exactly the assumption of Definition 1 and
+//! Proposition 1.
+//!
+//! Two representations:
+//! * [`HashPair`] — coefficients only (16 B), evaluates on the fly.
+//! * [`HashTable`] — materialized `(h, s)` tables, the form the paper's
+//!   memory accounting counts (`O(I)` per mode for TS/HCS/FCS vs `O(Π I_n)`
+//!   for CS on the vectorized tensor; Figs. 5–6 "memory for Hash functions").
+//!
+//! [`ModeHashes`] bundles the `N` per-mode pairs and builds the *composite*
+//! pair of Eq. 7: `s̃(l) = Π s_n(i_n)`, `h̃(l) = Σ h_n(i_n) − N + 1` (no
+//! modulo — hence the output length `J̃ = Σ J_n − N + 1`).
+
+use crate::util::prng::Rng;
+
+/// Mersenne prime 2^61 − 1.
+pub const MERSENNE_P: u64 = (1u64 << 61) - 1;
+
+/// Reduce a 128-bit product modulo 2^61 − 1 (two folds suffice).
+#[inline]
+pub fn mod_mersenne(x: u128) -> u64 {
+    let lo = (x & MERSENNE_P as u128) as u64;
+    let hi = (x >> 61) as u64;
+    let mut r = lo.wrapping_add(hi & MERSENNE_P).wrapping_add(hi >> 61);
+    while r >= MERSENNE_P {
+        r -= MERSENNE_P;
+    }
+    r
+}
+
+/// One 2-wise independent `(h, s)` pair, coefficient form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HashPair {
+    /// h coefficients
+    a: u64,
+    b: u64,
+    /// s coefficients (independent draw)
+    c: u64,
+    d: u64,
+    /// domain size I (h, s defined on [0, I))
+    pub domain: usize,
+    /// range size J (h maps into [0, J))
+    pub range: usize,
+}
+
+impl HashPair {
+    pub fn draw(rng: &mut Rng, domain: usize, range: usize) -> Self {
+        assert!(domain > 0 && range > 0);
+        Self {
+            a: 1 + rng.below(MERSENNE_P - 1),
+            b: rng.below(MERSENNE_P),
+            c: 1 + rng.below(MERSENNE_P - 1),
+            d: rng.below(MERSENNE_P),
+            domain,
+            range,
+        }
+    }
+
+    /// Bucket for index `i` (0-based, in `[0, range)`).
+    #[inline]
+    pub fn h(&self, i: usize) -> usize {
+        debug_assert!(i < self.domain);
+        let v = mod_mersenne(self.a as u128 * i as u128 + self.b as u128);
+        (v % self.range as u64) as usize
+    }
+
+    /// Sign for index `i` (±1).
+    #[inline]
+    pub fn s(&self, i: usize) -> f64 {
+        debug_assert!(i < self.domain);
+        let v = mod_mersenne(self.c as u128 * i as u128 + self.d as u128);
+        if v & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Materialize into lookup tables (the hot-path representation).
+    pub fn materialize(&self) -> HashTable {
+        let mut h = Vec::with_capacity(self.domain);
+        let mut s = Vec::with_capacity(self.domain);
+        for i in 0..self.domain {
+            h.push(self.h(i) as u32);
+            s.push(if self.s(i) > 0.0 { 1i8 } else { -1i8 });
+        }
+        HashTable { h, s, range: self.range }
+    }
+}
+
+/// Materialized `(h, s)` tables.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HashTable {
+    pub h: Vec<u32>,
+    pub s: Vec<i8>,
+    pub range: usize,
+}
+
+impl HashTable {
+    #[inline]
+    pub fn domain(&self) -> usize {
+        self.h.len()
+    }
+
+    #[inline]
+    pub fn h(&self, i: usize) -> usize {
+        self.h[i] as usize
+    }
+
+    #[inline]
+    pub fn s(&self, i: usize) -> f64 {
+        self.s[i] as f64
+    }
+
+    /// Bytes of storage — the paper's "memory for Hash functions" metric.
+    /// One `u32` bucket + one `i8` sign per domain element.
+    pub fn memory_bytes(&self) -> usize {
+        self.h.len() * std::mem::size_of::<u32>() + self.s.len() * std::mem::size_of::<i8>()
+    }
+
+    /// Build directly from explicit tables (used by tests and the python
+    /// parity harness, which shares hash tables across the FFI boundary).
+    pub fn from_tables(h: Vec<u32>, s: Vec<i8>, range: usize) -> Self {
+        assert_eq!(h.len(), s.len());
+        assert!(h.iter().all(|&b| (b as usize) < range));
+        assert!(s.iter().all(|&v| v == 1 || v == -1));
+        Self { h, s, range }
+    }
+}
+
+/// The `N` per-mode hash pairs for an order-`N` tensor, plus the composite
+/// pair of Eq. 7.
+#[derive(Debug, Clone)]
+pub struct ModeHashes {
+    pub modes: Vec<HashTable>,
+    /// dims[n] = I_n
+    pub dims: Vec<usize>,
+}
+
+impl ModeHashes {
+    /// Draw one pair per mode. `ranges[n] = J_n`.
+    pub fn draw(rng: &mut Rng, dims: &[usize], ranges: &[usize]) -> Self {
+        assert_eq!(dims.len(), ranges.len());
+        let modes = dims
+            .iter()
+            .zip(ranges)
+            .map(|(&i, &j)| HashPair::draw(rng, i, j).materialize())
+            .collect();
+        Self { modes, dims: dims.to_vec() }
+    }
+
+    /// Draw with a single shared range `J` for all modes (the common setup in
+    /// the paper's experiments).
+    pub fn draw_uniform(rng: &mut Rng, dims: &[usize], j: usize) -> Self {
+        let ranges = vec![j; dims.len()];
+        Self::draw(rng, dims, &ranges)
+    }
+
+    pub fn order(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Composite output length `J̃ = Σ J_n − N + 1` (Definition 4).
+    pub fn composite_range(&self) -> usize {
+        self.modes.iter().map(|m| m.range).sum::<usize>() - self.order() + 1
+    }
+
+    /// Total vectorized domain `Ĩ = Π I_n`.
+    pub fn composite_domain(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Composite bucket for a multi-index (Eq. 7, 0-based:
+    /// `h̃ = Σ h_n(i_n)` which lies in `[0, J̃)`).
+    #[inline]
+    pub fn composite_h(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.order());
+        idx.iter().zip(&self.modes).map(|(&i, m)| m.h(i)).sum()
+    }
+
+    /// Composite sign for a multi-index (Eq. 7).
+    #[inline]
+    pub fn composite_s(&self, idx: &[usize]) -> f64 {
+        let neg = idx
+            .iter()
+            .zip(&self.modes)
+            .filter(|(&i, m)| m.s[i] < 0)
+            .count();
+        if neg & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Materialize the full composite pair over `[0, Ĩ)` — this is what a
+    /// *plain CS on vec(T)* would have to store, and is exactly the memory
+    /// gap the paper highlights (point (1) of §3.2). Column-major (first
+    /// index fastest) to match `vec(T)` in the paper.
+    pub fn materialize_composite(&self) -> HashTable {
+        let total = self.composite_domain();
+        let n = self.order();
+        let mut h = Vec::with_capacity(total);
+        let mut s = Vec::with_capacity(total);
+        let mut idx = vec![0usize; n];
+        for _ in 0..total {
+            h.push(self.composite_h(&idx) as u32);
+            s.push(if self.composite_s(&idx) > 0.0 { 1i8 } else { -1i8 });
+            // increment column-major multi-index (first mode fastest)
+            for d in 0..n {
+                idx[d] += 1;
+                if idx[d] < self.dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        HashTable::from_tables(h, s, self.composite_range())
+    }
+
+    /// TS-style bucket: `(Σ h_n(i_n)) mod J` — only valid when all mode
+    /// ranges are equal. Kept here so TS and FCS provably share hash draws
+    /// ("the Hash functions for TS and FCS are equalized", §4.1).
+    #[inline]
+    pub fn ts_h(&self, idx: &[usize]) -> usize {
+        let j = self.modes[0].range;
+        debug_assert!(self.modes.iter().all(|m| m.range == j));
+        self.composite_h(idx) % j
+    }
+
+    /// Memory of the stored per-mode tables, `O(Σ I_n)`.
+    pub fn memory_bytes(&self) -> usize {
+        self.modes.iter().map(|m| m.memory_bytes()).sum()
+    }
+}
+
+/// Decompose a column-major linear index into a multi-index.
+#[inline]
+pub fn unravel_colmajor(mut l: usize, dims: &[usize], out: &mut [usize]) {
+    for (o, &d) in out.iter_mut().zip(dims) {
+        *o = l % d;
+        l /= d;
+    }
+    debug_assert_eq!(l, 0);
+}
+
+/// Compose a column-major linear index from a multi-index.
+#[inline]
+pub fn ravel_colmajor(idx: &[usize], dims: &[usize]) -> usize {
+    let mut l = 0usize;
+    let mut stride = 1usize;
+    for (&i, &d) in idx.iter().zip(dims) {
+        debug_assert!(i < d);
+        l += i * stride;
+        stride *= d;
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+
+    #[test]
+    fn hash_in_range() {
+        let mut rng = Rng::seed_from_u64(1);
+        let p = HashPair::draw(&mut rng, 1000, 37);
+        for i in 0..1000 {
+            assert!(p.h(i) < 37);
+            assert!(p.s(i) == 1.0 || p.s(i) == -1.0);
+        }
+    }
+
+    #[test]
+    fn materialize_matches_eval() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = HashPair::draw(&mut rng, 500, 64);
+        let t = p.materialize();
+        for i in 0..500 {
+            assert_eq!(t.h(i), p.h(i));
+            assert_eq!(t.s(i), p.s(i));
+        }
+    }
+
+    #[test]
+    fn two_wise_collision_rate() {
+        // Pr[h(x) = h(y)] ≈ 1/J for x ≠ y over independent draws.
+        let mut rng = Rng::seed_from_u64(3);
+        let j = 32;
+        let trials = 20_000;
+        let mut collisions = 0;
+        for _ in 0..trials {
+            let p = HashPair::draw(&mut rng, 100, j);
+            if p.h(17) == p.h(59) {
+                collisions += 1;
+            }
+        }
+        let rate = collisions as f64 / trials as f64;
+        assert!((rate - 1.0 / j as f64).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn sign_product_unbiased() {
+        // E[s(x) s(y)] = 0 for x ≠ y.
+        let mut rng = Rng::seed_from_u64(4);
+        let mut acc = 0.0;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let p = HashPair::draw(&mut rng, 100, 8);
+            acc += p.s(3) * p.s(77);
+        }
+        assert!((acc / trials as f64).abs() < 0.03);
+    }
+
+    #[test]
+    fn composite_range_formula() {
+        let mut rng = Rng::seed_from_u64(5);
+        let m = ModeHashes::draw(&mut rng, &[10, 20, 30], &[5, 6, 7]);
+        assert_eq!(m.composite_range(), 5 + 6 + 7 - 3 + 1);
+        assert_eq!(m.composite_domain(), 6000);
+    }
+
+    #[test]
+    fn composite_h_bounds() {
+        let mut rng = Rng::seed_from_u64(6);
+        let m = ModeHashes::draw_uniform(&mut rng, &[9, 9, 9], 11);
+        for i in 0..9 {
+            for jj in 0..9 {
+                for k in 0..9 {
+                    let h = m.composite_h(&[i, jj, k]);
+                    assert!(h < m.composite_range());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_composite_matches_formula() {
+        let mut rng = Rng::seed_from_u64(7);
+        let dims = [4usize, 3, 5];
+        let m = ModeHashes::draw_uniform(&mut rng, &dims, 6);
+        let comp = m.materialize_composite();
+        let mut idx = [0usize; 3];
+        for l in 0..m.composite_domain() {
+            unravel_colmajor(l, &dims, &mut idx);
+            assert_eq!(comp.h(l), m.composite_h(&idx), "l={l}");
+            assert_eq!(comp.s(l), m.composite_s(&idx), "l={l}");
+        }
+    }
+
+    #[test]
+    fn ravel_unravel_roundtrip() {
+        qcheck(50, |g| {
+            let order = g.usize_in(1, 4);
+            let dims: Vec<usize> = (0..order).map(|_| g.usize_in(1, 9)).collect();
+            let total: usize = dims.iter().product();
+            let l = g.usize_in(0, total - 1);
+            let mut idx = vec![0usize; order];
+            unravel_colmajor(l, &dims, &mut idx);
+            assert_eq!(ravel_colmajor(&idx, &dims), l);
+        });
+    }
+
+    #[test]
+    fn memory_accounting_gap() {
+        // FCS per-mode storage must be much smaller than the composite
+        // (CS-on-vec) storage — the paper's point (1).
+        let mut rng = Rng::seed_from_u64(8);
+        let m = ModeHashes::draw_uniform(&mut rng, &[50, 50, 50], 100);
+        let fcs_mem = m.memory_bytes();
+        let cs_mem = m.materialize_composite().memory_bytes();
+        assert_eq!(fcs_mem, 3 * 50 * 5);
+        assert_eq!(cs_mem, 50 * 50 * 50 * 5);
+        assert!(cs_mem > 100 * fcs_mem);
+    }
+
+    #[test]
+    fn composite_sign_is_product() {
+        let mut rng = Rng::seed_from_u64(9);
+        let m = ModeHashes::draw_uniform(&mut rng, &[7, 8], 5);
+        for i in 0..7 {
+            for j in 0..8 {
+                let prod = m.modes[0].s(i) * m.modes[1].s(j);
+                assert_eq!(m.composite_s(&[i, j]), prod);
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # fcs — Efficient Tensor Contraction via Fast Count Sketch
+//!
+//! A full reproduction of Cao & Liu (2021): the FCS sketching operator, the
+//! CS / TS / HCS baselines, sketched CP decomposition (RTPM + ALS), tensor
+//! regression network compression, and Kronecker-product / tensor-contraction
+//! compression — implemented as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas)**: the count-sketch scatter kernel and spectral
+//!   multiply, authored in `python/compile/kernels/`, lowered AOT.
+//! * **Layer 2 (JAX)**: TRN forward/backward and batched FCS graphs,
+//!   lowered to HLO text artifacts by `python/compile/aot.py`.
+//! * **Layer 3 (this crate)**: the sketch library, CPD algorithms,
+//!   compression pipelines, PJRT runtime, and the serving coordinator —
+//!   Python is never on the request path.
+
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod cpd;
+pub mod data;
+pub mod fft;
+pub mod hash;
+pub mod linalg;
+pub mod tensor;
+pub mod metrics;
+pub mod runtime;
+pub mod sketch;
+pub mod trn;
+pub mod util;

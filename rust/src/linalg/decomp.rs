@@ -1,0 +1,207 @@
+//! Factorizations: Householder QR (for random orthonormal bases and least
+//! squares) and Cholesky (for the small `R×R` normal equations in ALS).
+
+use super::matrix::Matrix;
+use crate::util::prng::Rng;
+
+/// Householder QR: returns (Q, R) with `Q` m×n (thin) orthonormal columns
+/// and `R` n×n upper triangular, for m ≥ n.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr expects tall matrix");
+    let mut r = a.clone();
+    // Store the Householder vectors.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let col = r.col(k);
+        let mut v: Vec<f64> = col[k..].to_vec();
+        let alpha = -v[0].signum() * super::norm2(&v);
+        if alpha.abs() < f64::EPSILON {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm = super::norm2(&v);
+        if vnorm > 0.0 {
+            for x in v.iter_mut() {
+                *x /= vnorm;
+            }
+        }
+        // Apply H = I - 2vv^T to the trailing submatrix of R.
+        for j in k..n {
+            let cj = r.col_mut(j);
+            let tail = &mut cj[k..];
+            let proj = 2.0 * super::dot(&v, tail);
+            for (t, &vi) in tail.iter_mut().zip(&v) {
+                *t -= proj * vi;
+            }
+        }
+        vs.push(v);
+    }
+    // Form thin Q by applying the Householder reflections to I (backwards).
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let cj = q.col_mut(j);
+            let tail = &mut cj[k..];
+            let proj = 2.0 * super::dot(v, tail);
+            for (t, &vi) in tail.iter_mut().zip(v) {
+                *t -= proj * vi;
+            }
+        }
+    }
+    // Zero out sub-diagonal of R and truncate to n×n.
+    let mut rr = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..=j.min(n - 1) {
+            rr.set(i, j, r.get(i, j));
+        }
+    }
+    (q, rr)
+}
+
+/// Random matrix with orthonormal columns (QR of a Gaussian), `rows ≥ cols`.
+/// Used to build the synthetic CP tensors with orthonormal factors (§4.1).
+pub fn random_orthonormal(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let g = Matrix::randn(rng, rows, cols);
+    let (q, _r) = householder_qr(&g);
+    q
+}
+
+/// Cholesky factorization of an SPD matrix (lower triangular L, A = L·L^T).
+/// Adds `ridge` to the diagonal for numerical safety (ALS normal equations
+/// can be near-singular when factors are correlated).
+pub fn cholesky(a: &Matrix, ridge: f64) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        for i in j..n {
+            let mut sum = a.get(i, j) + if i == j { ridge } else { 0.0 };
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(j, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky with automatic ridge escalation.
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    let scale = a.frob_norm().max(1.0);
+    let mut ridge = 0.0;
+    let l = loop {
+        if let Some(l) = cholesky(a, ridge) {
+            break l;
+        }
+        ridge = if ridge == 0.0 { 1e-12 * scale } else { ridge * 100.0 };
+        assert!(ridge < scale, "cholesky_solve: matrix is badly indefinite");
+    };
+    // Forward substitution L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    // Back substitution L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    x
+}
+
+/// Solve `A X = B` column by column for SPD `A` (shared factorization would
+/// be nicer; the `R×R` systems in ALS are tiny so this is fine).
+pub fn solve_spd_systems(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.cols, b.cols);
+    for j in 0..b.cols {
+        let x = cholesky_solve(a, b.col(j));
+        out.set_col(j, &x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Matrix::randn(&mut rng, 8, 5);
+        let (q, r) = householder_qr(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.sub(&a).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn qr_orthonormal_columns() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Matrix::randn(&mut rng, 10, 6);
+        let (q, _) = householder_qr(&a);
+        let g = q.t_matmul(&q);
+        let eye = Matrix::identity(6);
+        assert!(g.sub(&eye).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Rng::seed_from_u64(3);
+        let q = random_orthonormal(&mut rng, 20, 10);
+        let g = q.t_matmul(&q);
+        assert!(g.sub(&Matrix::identity(10)).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_solve_spd() {
+        let mut rng = Rng::seed_from_u64(4);
+        let g = Matrix::randn(&mut rng, 12, 6);
+        let a = g.t_matmul(&g); // SPD
+        let x_true = rng.normal_vec(6);
+        let b = a.matvec(&x_true);
+        let x = cholesky_solve(&a, &b);
+        let err: f64 = x.iter().zip(&x_true).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn solve_systems_matches_single() {
+        let mut rng = Rng::seed_from_u64(5);
+        let g = Matrix::randn(&mut rng, 9, 4);
+        let a = g.t_matmul(&g);
+        let b = Matrix::randn(&mut rng, 4, 3);
+        let x = solve_spd_systems(&a, &b);
+        for j in 0..3 {
+            let xj = cholesky_solve(&a, b.col(j));
+            for i in 0..4 {
+                assert!((x.get(i, j) - xj[i]).abs() < 1e-12);
+            }
+        }
+    }
+}

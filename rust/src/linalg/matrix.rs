@@ -1,0 +1,284 @@
+//! Column-major dense matrix. Column-major matches the paper's MATLAB
+//! conventions (`vec`, mode-n matricization, factor matrices `U^{(n)}` whose
+//! columns are the rank-1 factors), so sketch/CPD code reads like the paper.
+
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major storage: element (i, j) at `data[j * rows + i]`.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.data[j * rows + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        Self::from_data(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Immutable view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        self.col_mut(j).copy_from_slice(v);
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t.data[i * self.cols + j] = self.data[j * self.rows + i];
+            }
+        }
+        t
+    }
+
+    /// `self * other` — blocked column-major matmul.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for j in 0..n {
+            let oc = &mut out.data[j * m..(j + 1) * m];
+            for l in 0..k {
+                let b = other.data[j * k + l];
+                if b == 0.0 {
+                    continue;
+                }
+                let ac = &self.data[l * m..(l + 1) * m];
+                for (o, a) in oc.iter_mut().zip(ac) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T * other` without forming the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for j in 0..n {
+            let bc = &other.data[j * k..(j + 1) * k];
+            for i in 0..m {
+                let ac = &self.data[i * k..(i + 1) * k];
+                out.data[j * m + i] = super::dot(ac, bc);
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            super::axpy(xj, self.col(j), &mut out);
+        }
+        out
+    }
+
+    /// `self^T * x`.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        (0..self.cols).map(|j| super::dot(self.col(j), x)).collect()
+    }
+
+    /// Hadamard (elementwise) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix::from_data(self.rows, self.cols, data)
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        super::norm2(&self.data)
+    }
+
+    pub fn scaled(&self, k: f64) -> Matrix {
+        Matrix::from_data(self.rows, self.cols, self.data.iter().map(|v| v * k).collect())
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix::from_data(self.rows, self.cols, data)
+    }
+
+    /// Kronecker product `self ⊗ other`
+    /// ((A ⊗ B)(p, q) with p = i·rB + k, q = j·cB + l = A(i,j)·B(k,l)).
+    pub fn kron(&self, other: &Matrix) -> Matrix {
+        let (ra, ca) = (self.rows, self.cols);
+        let (rb, cb) = (other.rows, other.cols);
+        let mut out = Matrix::zeros(ra * rb, ca * cb);
+        for j in 0..ca {
+            for i in 0..ra {
+                let a = self.get(i, j);
+                if a == 0.0 {
+                    continue;
+                }
+                for l in 0..cb {
+                    for k in 0..rb {
+                        out.set(i * rb + k, j * cb + l, a * other.get(k, l));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Khatri-Rao (column-wise Kronecker) product: columns `a_r ⊗ b_r`,
+    /// i.e. `(A ⊙ B)(i·rB + k, r) = A(i,r)·B(k,r)` — the MATLAB `kr` used in
+    /// ALS (Eq. 18 context).
+    pub fn khatri_rao(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "khatri_rao needs equal column counts");
+        let (ra, rb, c) = (self.rows, other.rows, self.cols);
+        let mut out = Matrix::zeros(ra * rb, c);
+        for r in 0..c {
+            let (a, b) = (self.col(r), other.col(r));
+            let oc = out.col_mut(r);
+            for (i, &av) in a.iter().enumerate() {
+                for (k, &bv) in b.iter().enumerate() {
+                    oc[i * rb + k] = av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `vec(self)` — column-major flattening (paper convention). The storage
+    /// already is column-major, so this is a copy of `data`.
+    pub fn vec(&self) -> Vec<f64> {
+        self.data.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64); // [[0,1,2],[3,4,5]]
+        let b = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64); // [[0,1],[2,3],[4,5]]
+        let c = a.matmul(&b);
+        assert_eq!(c.rows, 2);
+        assert_eq!(c.cols, 2);
+        assert_eq!(c.get(0, 0), 10.0);
+        assert_eq!(c.get(0, 1), 13.0);
+        assert_eq!(c.get(1, 0), 28.0);
+        assert_eq!(c.get(1, 1), 40.0);
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Matrix::randn(&mut rng, 7, 4);
+        let b = Matrix::randn(&mut rng, 7, 5);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.sub(&slow).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Matrix::randn(&mut rng, 6, 4);
+        let x = rng.normal_vec(4);
+        let y = a.matvec(&x);
+        let xm = Matrix::from_data(4, 1, x);
+        let ym = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kron_shape_and_values() {
+        let a = Matrix::from_fn(2, 2, |i, j| (i * 2 + j + 1) as f64);
+        let b = Matrix::identity(2);
+        let k = a.kron(&b);
+        assert_eq!((k.rows, k.cols), (4, 4));
+        assert_eq!(k.get(0, 0), 1.0);
+        assert_eq!(k.get(1, 1), 1.0);
+        assert_eq!(k.get(0, 2), 2.0);
+        assert_eq!(k.get(2, 0), 3.0);
+        assert_eq!(k.get(2, 2), 4.0);
+        assert_eq!(k.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn khatri_rao_is_columnwise_kron() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Matrix::randn(&mut rng, 3, 2);
+        let b = Matrix::randn(&mut rng, 4, 2);
+        let kr = a.khatri_rao(&b);
+        assert_eq!((kr.rows, kr.cols), (12, 2));
+        for r in 0..2 {
+            for i in 0..3 {
+                for k in 0..4 {
+                    let expect = a.get(i, r) * b.get(k, r);
+                    assert!((kr.get(i * 4 + k, r) - expect).abs() < 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vec_is_column_major() {
+        let m = Matrix::from_fn(2, 2, |i, j| (10 * i + j) as f64);
+        // columns: [0, 10], [1, 11]
+        assert_eq!(m.vec(), vec![0.0, 10.0, 1.0, 11.0]);
+    }
+}

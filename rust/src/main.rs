@@ -1,0 +1,184 @@
+//! `fcs` — the leader binary: serve the sketch service, run CPD /
+//! compression workloads, train the sketched TRN, inspect artifacts.
+
+use fcs::coordinator::{Service, ServiceConfig};
+use fcs::cpd::{als_plain, als_sketched, rtpm_symmetric, AlsConfig, RtpmConfig};
+use fcs::data::synthetic_cp;
+use fcs::metrics::residual_norm;
+use fcs::sketch::Method;
+use fcs::util::cli::Args;
+use fcs::util::prng::Rng;
+use fcs::util::timing::Stopwatch;
+
+const USAGE: &str = "\
+fcs — Efficient Tensor Contraction via Fast Count Sketch (full reproduction)
+
+USAGE: fcs <command> [options]
+
+COMMANDS:
+  rtpm       sketched RTPM on a synthetic tensor
+             --dim 100 --rank 10 --j 5000 --d 10 --sigma 0.01 --method fcs
+  als        sketched ALS on a synthetic asymmetric tensor
+             --dim 200 --rank 10 --j 4000 --d 10 --sigma 0.01 --method fcs
+  trn        train the sketched TRN through the XLA artifacts
+             --method fcs --cr 20 --steps 300
+  serve      start the coordinator and print serving stats on Ctrl-D
+             --workers 8 --seconds 5
+  artifacts  list compiled artifacts in the manifest
+  help       this text
+
+Benchmarks (one per paper table/figure): `cargo bench --bench fig1_rtpm_synthetic`, …
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("rtpm") => cmd_rtpm(&args),
+        Some("als") => cmd_als(&args),
+        Some("trn") => cmd_trn(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_rtpm(args: &Args) -> anyhow::Result<()> {
+    let dim = args.get_usize("dim", 100);
+    let rank = args.get_usize("rank", 10);
+    let j = args.get_usize("j", 5000);
+    let d = args.get_usize("d", 10);
+    let sigma = args.get_f64("sigma", 0.01);
+    let method = Method::parse(&args.get_or("method", "fcs")).expect("bad --method");
+    let mut rng = Rng::seed_from_u64(args.get_usize("seed", 0) as u64);
+    println!("generating {dim}³ rank-{rank} symmetric tensor (σ={sigma})…");
+    let (t, _) = synthetic_cp(&mut rng, &[dim, dim, dim], rank, sigma, true);
+    let cfg = RtpmConfig {
+        rank,
+        n_init: args.get_usize("inits", 15),
+        n_iter: args.get_usize("iters", 20),
+        seed: 7,
+    };
+    let sw = Stopwatch::start();
+    let mut est = method.build(&t, d, j, &mut rng);
+    let cp = rtpm_symmetric(est.as_mut(), dim, &cfg);
+    println!(
+        "{}-RTPM: residual {:.4} in {:.2}s (hash memory {} B)",
+        method.name(),
+        residual_norm(&cp, &t),
+        sw.elapsed_secs(),
+        est.hash_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_als(args: &Args) -> anyhow::Result<()> {
+    let dim = args.get_usize("dim", 200);
+    let rank = args.get_usize("rank", 10);
+    let j = args.get_usize("j", 4000);
+    let d = args.get_usize("d", 10);
+    let sigma = args.get_f64("sigma", 0.01);
+    let method = Method::parse(&args.get_or("method", "fcs")).expect("bad --method");
+    let mut rng = Rng::seed_from_u64(args.get_usize("seed", 0) as u64);
+    println!("generating {dim}³ rank-{rank} asymmetric tensor (σ={sigma})…");
+    let (t, _) = synthetic_cp(&mut rng, &[dim, dim, dim], rank, sigma, false);
+    let cfg = AlsConfig { rank, n_iter: args.get_usize("iters", 20), seed: 11 };
+    let sw = Stopwatch::start();
+    let cp = if method == Method::Plain {
+        als_plain(&t, &cfg)
+    } else {
+        let est = method.build(&t, d, j, &mut rng);
+        als_sketched(&t.shape, est.as_ref(), &t, &cfg)
+    };
+    println!(
+        "{}-ALS: residual {:.4} in {:.2}s",
+        method.name(),
+        residual_norm(&cp, &t),
+        sw.elapsed_secs()
+    );
+    Ok(())
+}
+
+fn cmd_trn(args: &Args) -> anyhow::Result<()> {
+    let rt = fcs::runtime::spawn_runtime(None)?;
+    let method =
+        fcs::trn::TrnMethod::parse(&args.get_or("method", "fcs")).expect("bad --method");
+    let cfg = fcs::trn::TrnRunConfig {
+        method,
+        cr_tag: args.get_or("cr", "20").replace('.', "p"),
+        steps: args.get_usize("steps", 300),
+        lr: args.get_f64("lr", 0.05) as f32,
+        train_size: args.get_usize("train-size", 6400),
+        test_size: args.get_usize("test-size", 1024),
+        seed: args.get_usize("seed", 1234) as u64,
+        log_every: args.get_usize("log-every", 20),
+    };
+    let res = fcs::trn::train_and_eval(&rt, &cfg)?;
+    println!(
+        "{}-TRN @ CR {}: accuracy {:.4}, final loss {:.4}, {:.1}s",
+        res.method,
+        res.cr,
+        res.accuracy,
+        res.losses.last().unwrap(),
+        res.train_secs
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let runtime = fcs::runtime::spawn_runtime(None).ok();
+    println!(
+        "starting coordinator ({} backend)…",
+        if runtime.is_some() { "XLA" } else { "pure-Rust" }
+    );
+    let cfg = ServiceConfig {
+        workers: args.get_usize("workers", fcs::util::parallel::default_threads().min(8)),
+        ..Default::default()
+    };
+    let svc = Service::start(cfg, runtime)?;
+    let h = svc.handle();
+    let seconds = args.get_usize("seconds", 5);
+    println!("self-driving load for {seconds}s (dim {} → {})…", h.cs_in_dim, h.cs_out_dim);
+    let sw = Stopwatch::start();
+    let mut rng = Rng::seed_from_u64(0);
+    let x = rng.normal_vec(h.cs_in_dim);
+    let mut n = 0u64;
+    while sw.elapsed_secs() < seconds as f64 {
+        let mut pend = Vec::with_capacity(64);
+        for _ in 0..64 {
+            if let Ok(rx) = h.submit(fcs::coordinator::Request::CsVec { x: x.clone() }) {
+                pend.push(rx);
+            }
+        }
+        for rx in pend {
+            if rx.recv().is_ok() {
+                n += 1;
+            }
+        }
+    }
+    let report = svc.stats();
+    println!("served {n} requests → {:.0} req/s", n as f64 / sw.elapsed_secs());
+    for op in &report.per_op {
+        println!(
+            "  {:<12} n={:<8} p50 {:>7.0}µs p95 {:>7.0}µs p99 {:>7.0}µs",
+            op.op, op.completed, op.p50_us, op.p95_us, op.p99_us
+        );
+    }
+    println!("  batches {} (mean fill {:.1}), rejected {}", report.batches, report.mean_batch_fill, report.rejected_busy);
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let rt = fcs::runtime::spawn_runtime(None)?;
+    println!("artifacts at {}:", rt.dir.display());
+    let mut names: Vec<_> = rt.manifest().entries.keys().collect();
+    names.sort();
+    for name in names {
+        let e = &rt.manifest().entries[name];
+        println!("  {:<28} {} inputs  {}", name, e.inputs.len(), e.file);
+    }
+    Ok(())
+}

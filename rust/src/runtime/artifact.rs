@@ -1,0 +1,175 @@
+//! Artifact manifest + compiled-executable cache.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! HLO-text artifact (input shapes/dtypes + metadata). The store parses it,
+//! compiles artifacts on first use, and caches the loaded executables.
+
+use super::exec::Executable;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// (shape, dtype-string) per input.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Free-form metadata (method, cr, j, batch, …).
+    pub meta: HashMap<String, Json>,
+}
+
+impl ArtifactEntry {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|j| j.as_f64())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.as_str())
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let Json::Obj(map) = root else {
+            return Err(anyhow!("manifest root must be an object"));
+        };
+        let mut entries = HashMap::new();
+        for (name, entry) in map {
+            let file = entry
+                .get("file")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            if let Some(arr) = entry.get("inputs").and_then(|j| j.as_arr()) {
+                for spec in arr {
+                    let shape: Vec<usize> = spec
+                        .get("shape")
+                        .and_then(|j| j.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default();
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|j| j.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    inputs.push((shape, dtype));
+                }
+            }
+            let mut meta = HashMap::new();
+            if let Some(Json::Obj(m)) = entry.get("meta") {
+                for (k, v) in m {
+                    meta.insert(k.clone(), v.clone());
+                }
+            }
+            entries.insert(name.clone(), ArtifactEntry { name, file, inputs, meta });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Compiled-executable cache over an artifacts directory.
+///
+/// Not `Send`/`Sync` (the PJRT client is `Rc`-based): use it from one thread,
+/// or go through [`crate::runtime::RuntimeHandle`] for cross-thread access.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl ArtifactStore {
+    /// Open the store at an explicit directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        Ok(Self { dir, manifest, client: super::cpu_client()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open via `find_artifacts_dir()`.
+    pub fn discover() -> Result<Self> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::open(dir)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Load + compile (cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let exe = Arc::new(Executable::from_hlo_text_file(&self.client, &path, entry)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let text = r#"{
+            "cs_batch": {
+                "file": "cs_batch.hlo.txt",
+                "inputs": [
+                    {"shape": [32, 1568], "dtype": "float32"},
+                    {"shape": [1568], "dtype": "int32"}
+                ],
+                "meta": {"batch": 32, "out_dim": 256, "method": "fcs"}
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        let e = &m.entries["cs_batch"];
+        assert_eq!(e.file, "cs_batch.hlo.txt");
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].0, vec![32, 1568]);
+        assert_eq!(e.inputs[1].1, "int32");
+        assert_eq!(e.meta_usize("batch"), Some(32));
+        assert_eq!(e.meta_str("method"), Some("fcs"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Manifest::parse("[1,2,3]").is_err());
+        assert!(Manifest::parse("{\"x\": {}}").is_err()); // missing file
+    }
+}

@@ -1,0 +1,106 @@
+//! The XLA engine thread: owns the (thread-confined) PJRT client and the
+//! compiled-executable cache, and serves execution requests over a channel.
+//! Everything that needs cross-thread XLA access (the coordinator's worker
+//! pool, examples, benches) holds a cheap, cloneable [`RuntimeHandle`].
+
+use super::artifact::{ArtifactStore, Manifest};
+use super::exec::{TensorArg, TensorOut};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+enum Msg {
+    Run {
+        name: String,
+        args: Vec<TensorArg>,
+        reply: Sender<Result<Vec<TensorOut>>>,
+    },
+    /// Pre-compile an artifact (warm the cache off the latency path).
+    Warm {
+        name: String,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Msg>,
+    manifest: Arc<Manifest>,
+    pub dir: PathBuf,
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact by name (blocking until the result is ready).
+    pub fn run(&self, name: &str, args: Vec<TensorArg>) -> Result<Vec<TensorOut>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Run { name: name.to_string(), args, reply })
+            .map_err(|_| anyhow!("runtime engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime engine dropped the request"))?
+    }
+
+    /// Compile an artifact ahead of first use.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("runtime engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime engine dropped the request"))?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Spawn the engine thread over an artifacts directory (pass `None` to
+/// auto-discover). Returns once the manifest is loaded and the client is up.
+pub fn spawn_runtime(dir: Option<PathBuf>) -> Result<RuntimeHandle> {
+    let dir = match dir {
+        Some(d) => d,
+        None => super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?,
+    };
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let (tx, rx) = channel::<Msg>();
+    let thread_dir = dir.clone();
+    let (ready_tx, ready_rx) = channel();
+    std::thread::Builder::new()
+        .name("xla-engine".into())
+        .spawn(move || {
+            let store = match ArtifactStore::open(&thread_dir) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Run { name, args, reply } => {
+                        let result = store.load(&name).and_then(|exe| exe.run(&args));
+                        let _ = reply.send(result);
+                    }
+                    Msg::Warm { name, reply } => {
+                        let _ = reply.send(store.load(&name).map(|_| ()));
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn xla-engine");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("engine thread died during startup"))??;
+    Ok(RuntimeHandle { tx, manifest, dir })
+}

@@ -1,0 +1,152 @@
+//! Typed execution wrapper over `xla::PjRtLoadedExecutable`.
+//!
+//! Artifacts are lowered with `return_tuple=True`, so every execution yields
+//! one tuple literal; `run` decomposes it into per-output `f32` vectors.
+
+use super::artifact::ArtifactEntry;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A runtime argument: either f32 data or i32 data (hash tables, labels)
+/// plus its shape.
+#[derive(Debug, Clone)]
+pub enum TensorArg {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorArg {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorArg::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorArg::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        TensorArg::F32 { shape: vec![], data: vec![v] }
+    }
+
+    /// From f64 slice (the library's native dtype) with down-conversion.
+    pub fn f32_from_f64(shape: &[usize], data: &[f64]) -> Self {
+        Self::f32(shape, data.iter().map(|&x| x as f32).collect())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorArg::F32 { shape, .. } | TensorArg::I32 { shape, .. } => shape,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            TensorArg::F32 { shape, data } => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // scalar: reshape to rank-0
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+            TensorArg::I32 { shape, data } => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// One output tensor (always f32 in our artifacts).
+#[derive(Debug, Clone)]
+pub struct TensorOut {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+}
+
+impl Executable {
+    /// Load an HLO-text artifact and compile it on the given client.
+    pub fn from_hlo_text_file(
+        client: &xla::PjRtClient,
+        path: &Path,
+        entry: ArtifactEntry,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self { exe, entry })
+    }
+
+    /// Execute with typed args; returns the decomposed tuple outputs.
+    pub fn run(&self, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        if !self.entry.inputs.is_empty() && self.entry.inputs.len() != args.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        let mut tensors = Vec::with_capacity(outs.len());
+        for o in outs {
+            let shape = o.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            // convert non-f32 outputs (e.g. f64 losses) to f32 first
+            let o32 = o.convert(xla::PrimitiveType::F32)?;
+            tensors.push(TensorOut { shape: dims, data: o32.to_vec::<f32>()? });
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_arg_shape_check() {
+        let a = TensorArg::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(a.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_arg_shape_mismatch_panics() {
+        TensorArg::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn f64_conversion() {
+        let a = TensorArg::f32_from_f64(&[2], &[1.5, -2.5]);
+        match a {
+            TensorArg::F32 { data, .. } => assert_eq!(data, vec![1.5f32, -2.5]),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path. Python is never on the request path — `make artifacts`
+//! runs once, this module serves forever after.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`), following /opt/xla-example/load_hlo.
+
+pub mod artifact;
+pub mod engine;
+pub mod exec;
+
+pub use artifact::{ArtifactStore, Manifest};
+pub use engine::{spawn_runtime, RuntimeHandle};
+pub use exec::{Executable, TensorArg, TensorOut};
+
+/// CPU PJRT client. `xla::PjRtClient` is `Rc`-based (neither `Send` nor
+/// `Sync`), so each client is confined to the thread that created it; for
+/// cross-thread use go through [`engine::RuntimeHandle`].
+pub fn cpu_client() -> anyhow::Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Locate the `artifacts/` directory: `$FCS_ARTIFACTS_DIR`, else walk up
+/// from the current dir / executable looking for `artifacts/manifest.json`.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("FCS_ARTIFACTS_DIR") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut candidates = Vec::new();
+    if let Ok(cwd) = std::env::current_dir() {
+        candidates.push(cwd);
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        if let Some(dir) = exe.parent() {
+            candidates.push(dir.to_path_buf());
+        }
+    }
+    for base in candidates {
+        let mut cur = Some(base.as_path());
+        while let Some(dir) = cur {
+            let p = dir.join("artifacts");
+            if p.join("manifest.json").exists() {
+                return Some(p);
+            }
+            cur = dir.parent();
+        }
+    }
+    None
+}

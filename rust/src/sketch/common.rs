@@ -1,0 +1,162 @@
+//! Shared `O(nnz(T))` dense-tensor sketching core used by TS (Eq. 2) and FCS
+//! (Eq. 13). Both walk `vec(T)` once, accumulating under the composite hash
+//! `Σ_n h_n(i_n)` — TS folds it `mod J`, FCS keeps it un-folded.
+//!
+//! The hot loop is specialized for the first mode: within a mode-0 fiber only
+//! `h_0(i_0)` and `s_0(i_0)` change, so the outer-mode contributions are
+//! hoisted to a per-fiber `(hbase, sbase)`.
+
+use crate::hash::ModeHashes;
+use crate::tensor::Tensor;
+
+/// Accumulate the sketch of a dense tensor into `out`.
+///
+/// * `modulo = Some(J)` → TS bucket `(Σ h_n) mod J` (`out.len() == J`).
+/// * `modulo = None`   → FCS bucket `Σ h_n` (`out.len() == J̃`).
+pub fn sketch_dense_into(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>, out: &mut [f64]) {
+    assert_eq!(t.shape, mh.dims, "tensor/hash shape mismatch");
+    match modulo {
+        Some(j) => {
+            assert_eq!(out.len(), j);
+            assert!(
+                mh.modes.iter().all(|m| m.range == j),
+                "TS requires uniform mode ranges"
+            );
+        }
+        None => assert_eq!(out.len(), mh.composite_range()),
+    }
+    out.fill(0.0);
+    let n = t.order();
+    let i0 = t.shape[0];
+    let h0 = &mh.modes[0].h;
+    let s0 = &mh.modes[0].s;
+    let fibers = t.numel() / i0;
+    let mut idx_hi = vec![0usize; n - 1]; // indices of modes 1..N
+    let mut l = 0usize;
+    for _fiber in 0..fibers {
+        // Contributions of the fixed higher modes.
+        let mut hbase = 0usize;
+        let mut neg = 0usize;
+        for (d, &i) in idx_hi.iter().enumerate() {
+            let m = &mh.modes[d + 1];
+            hbase += m.h[i] as usize;
+            if m.s[i] < 0 {
+                neg += 1;
+            }
+        }
+        let sbase = if neg & 1 == 0 { 1.0 } else { -1.0 };
+        match modulo {
+            Some(j) => {
+                let hb = hbase % j;
+                for i in 0..i0 {
+                    let v = t.data[l];
+                    l += 1;
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let mut b = hb + h0[i] as usize;
+                    if b >= j {
+                        b -= j; // hb, h0 < J ⇒ sum < 2J: one subtract replaces `%`
+                    }
+                    out[b] += sbase * (s0[i] as f64) * v;
+                }
+            }
+            None => {
+                for i in 0..i0 {
+                    let v = t.data[l];
+                    l += 1;
+                    if v == 0.0 {
+                        continue;
+                    }
+                    out[hbase + h0[i] as usize] += sbase * (s0[i] as f64) * v;
+                }
+            }
+        }
+        // Increment the higher-mode multi-index.
+        for (d, ix) in idx_hi.iter_mut().enumerate() {
+            *ix += 1;
+            if *ix < t.shape[d + 1] {
+                break;
+            }
+            *ix = 0;
+        }
+    }
+}
+
+/// Convenience allocating wrapper.
+pub fn sketch_dense(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>) -> Vec<f64> {
+    let len = modulo.unwrap_or_else(|| mh.composite_range());
+    let mut out = vec![0.0; len];
+    sketch_dense_into(t, mh, modulo, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::unravel_colmajor;
+    use crate::util::prng::Rng;
+
+    /// Reference implementation straight from Eq. 2 / Eq. 13.
+    fn sketch_dense_naive(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>) -> Vec<f64> {
+        let len = modulo.unwrap_or_else(|| mh.composite_range());
+        let mut out = vec![0.0; len];
+        let mut idx = vec![0usize; t.order()];
+        for l in 0..t.numel() {
+            unravel_colmajor(l, &t.shape, &mut idx);
+            let h = mh.composite_h(&idx);
+            let b = match modulo {
+                Some(j) => h % j,
+                None => h,
+            };
+            out[b] += mh.composite_s(&idx) * t.data[l];
+        }
+        out
+    }
+
+    #[test]
+    fn fast_matches_naive_fcs() {
+        let mut rng = Rng::seed_from_u64(1);
+        for shape in [vec![7, 5, 3], vec![4, 4], vec![3, 2, 2, 3]] {
+            let t = Tensor::randn(&mut rng, &shape);
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, 6);
+            let fast = sketch_dense(&t, &mh, None);
+            let slow = sketch_dense_naive(&t, &mh, None);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matches_naive_ts() {
+        let mut rng = Rng::seed_from_u64(2);
+        for shape in [vec![7, 5, 3], vec![6, 6, 6]] {
+            let t = Tensor::randn(&mut rng, &shape);
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, 9);
+            let fast = sketch_dense(&t, &mh, Some(9));
+            let slow = sketch_dense_naive(&t, &mh, Some(9));
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ts_is_folded_fcs() {
+        // TS(T) = fold(FCS(T)) mod J — §3 point (2) of the paper.
+        let mut rng = Rng::seed_from_u64(3);
+        let shape = [5usize, 6, 4];
+        let t = Tensor::randn(&mut rng, &shape);
+        let mh = ModeHashes::draw_uniform(&mut rng, &shape, 8);
+        let fcs = sketch_dense(&t, &mh, None);
+        let ts = sketch_dense(&t, &mh, Some(8));
+        let mut folded = vec![0.0; 8];
+        for (k, &v) in fcs.iter().enumerate() {
+            folded[k % 8] += v;
+        }
+        for (a, b) in folded.iter().zip(&ts) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Count sketch (Definition 1, Charikar et al.): `CS(x)_j = Σ_{h(i)=j} s(i)·x(i)`.
+
+use crate::hash::HashTable;
+use crate::linalg::Matrix;
+
+/// Count sketch operator for vectors, defined by a materialized `(h, s)`
+/// table.
+#[derive(Debug, Clone)]
+pub struct CountSketch {
+    pub table: HashTable,
+}
+
+impl CountSketch {
+    pub fn new(table: HashTable) -> Self {
+        Self { table }
+    }
+
+    #[inline]
+    pub fn domain(&self) -> usize {
+        self.table.domain()
+    }
+
+    #[inline]
+    pub fn range(&self) -> usize {
+        self.table.range
+    }
+
+    /// Apply to a dense vector — `O(nnz(x))`.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.domain(), "CS domain mismatch");
+        let mut out = vec![0.0; self.range()];
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// Apply, accumulating into a caller-provided buffer (hot path: avoids
+    /// re-allocation inside power iterations).
+    pub fn apply_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.range());
+        out.fill(0.0);
+        let h = &self.table.h;
+        let s = &self.table.s;
+        for (i, &xi) in x.iter().enumerate() {
+            if xi != 0.0 {
+                // s as i8 → f64 multiply compiles to a select; branch-free.
+                out[h[i] as usize] += (s[i] as f64) * xi;
+            }
+        }
+    }
+
+    /// Apply to a sparse vector given as (index, value) pairs.
+    pub fn apply_sparse(&self, entries: &[(usize, f64)]) -> Vec<f64> {
+        let mut out = vec![0.0; self.range()];
+        for &(i, v) in entries {
+            out[self.table.h(i)] += self.table.s(i) * v;
+        }
+        out
+    }
+
+    /// Column-wise application to a matrix (`CS_n(U^{(n)})` in Eqs. 3/5/8).
+    pub fn apply_matrix(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.domain());
+        let mut out = Matrix::zeros(self.range(), m.cols);
+        for r in 0..m.cols {
+            let src = m.col(r);
+            let dst = out.col_mut(r);
+            for (i, &v) in src.iter().enumerate() {
+                if v != 0.0 {
+                    dst[self.table.h[i] as usize] += (self.table.s[i] as f64) * v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Sketch of a standard basis vector `e_i`: `s(i)·e_{h(i)}` — returned as
+    /// the (bucket, sign) pair to avoid materializing it (Eq. 17's
+    /// `⟨z, CS_1(e_i)⟩ = s_1(i)·z(h_1(i))` trick).
+    #[inline]
+    pub fn basis(&self, i: usize) -> (usize, f64) {
+        (self.table.h(i), self.table.s(i))
+    }
+
+    /// Unbiased single-entry decode: `x̂(i) = s(i)·CS(x)(h(i))`.
+    #[inline]
+    pub fn decode(&self, sketch: &[f64], i: usize) -> f64 {
+        self.table.s(i) * sketch[self.table.h(i)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashPair;
+    use crate::util::prng::Rng;
+    use crate::util::timing::median;
+
+    fn make(rng: &mut Rng, i: usize, j: usize) -> CountSketch {
+        CountSketch::new(HashPair::draw(rng, i, j).materialize())
+    }
+
+    #[test]
+    fn preserves_l2_in_expectation() {
+        // E[‖CS(x)‖²] = ‖x‖²
+        let mut rng = Rng::seed_from_u64(1);
+        let x = rng.normal_vec(200);
+        let x2: f64 = x.iter().map(|v| v * v).sum();
+        let trials = 500;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let cs = make(&mut rng, 200, 64);
+            let y = cs.apply(&x);
+            acc += y.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - x2).abs() / x2 < 0.1, "mean={mean} x2={x2}");
+    }
+
+    #[test]
+    fn inner_product_unbiased() {
+        // E[⟨CS(x), CS(y)⟩] = ⟨x, y⟩
+        let mut rng = Rng::seed_from_u64(2);
+        let x = rng.normal_vec(100);
+        let y = rng.normal_vec(100);
+        let xy: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let trials = 2000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let cs = make(&mut rng, 100, 32);
+            let sx = cs.apply(&x);
+            let sy = cs.apply(&y);
+            acc += crate::linalg::dot(&sx, &sy);
+        }
+        // Var per trial ≈ (‖x‖²‖y‖² + ⟨x,y⟩²)/J ≈ 320 ⇒ std of the mean over
+        // 2000 trials ≈ 0.4; allow ~3σ.
+        let mean = acc / trials as f64;
+        assert!((mean - xy).abs() < 1.2, "mean={mean} true={xy}");
+    }
+
+    #[test]
+    fn linear_operator() {
+        let mut rng = Rng::seed_from_u64(3);
+        let cs = make(&mut rng, 50, 16);
+        let x = rng.normal_vec(50);
+        let y = rng.normal_vec(50);
+        let alpha = 2.5;
+        let combo: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + alpha * b).collect();
+        let lhs = cs.apply(&combo);
+        let sx = cs.apply(&x);
+        let sy = cs.apply(&y);
+        for j in 0..16 {
+            assert!((lhs[j] - (sx[j] + alpha * sy[j])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let mut rng = Rng::seed_from_u64(4);
+        let cs = make(&mut rng, 80, 20);
+        let mut x = vec![0.0; 80];
+        x[3] = 1.5;
+        x[77] = -2.0;
+        let dense = cs.apply(&x);
+        let sparse = cs.apply_sparse(&[(3, 1.5), (77, -2.0)]);
+        assert_eq!(dense, sparse);
+    }
+
+    #[test]
+    fn basis_matches_apply() {
+        let mut rng = Rng::seed_from_u64(5);
+        let cs = make(&mut rng, 30, 10);
+        for i in 0..30 {
+            let mut e = vec![0.0; 30];
+            e[i] = 1.0;
+            let full = cs.apply(&e);
+            let (j, s) = cs.basis(i);
+            assert_eq!(full[j], s);
+            assert_eq!(full.iter().filter(|&&v| v != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn matrix_apply_is_columnwise() {
+        let mut rng = Rng::seed_from_u64(6);
+        let cs = make(&mut rng, 40, 12);
+        let m = Matrix::randn(&mut rng, 40, 3);
+        let out = cs.apply_matrix(&m);
+        for r in 0..3 {
+            let col = cs.apply(m.col(r));
+            assert_eq!(out.col(r), col.as_slice());
+        }
+    }
+
+    #[test]
+    fn median_decode_estimates_entries() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut x = vec![0.0; 64];
+        x[5] = 10.0;
+        x[20] = -4.0;
+        x[40] = 1.0;
+        let mut est5 = Vec::new();
+        for _ in 0..21 {
+            let cs = make(&mut rng, 64, 16);
+            let sk = cs.apply(&x);
+            est5.push(cs.decode(&sk, 5));
+        }
+        assert!((median(&est5) - 10.0).abs() < 2.0);
+    }
+}

@@ -1,0 +1,989 @@
+//! Contraction estimators — the interface RTPM/ALS program against.
+//!
+//! Each method (plain/CS/TS/HCS/FCS) preprocesses a tensor `T` once into `D`
+//! independent sketches, then answers the contraction queries of §4.1:
+//!
+//! * `t_uuu`   — `T(u, u, u)` (Eq. 16 for FCS),
+//! * `t_iuu`   — `T(I, u, u)` (Eq. 17 for FCS),
+//! * `t_mode`  — the general "free mode n, contract the rest" form used by
+//!   asymmetric RTPM and ALS (Eq. 18).
+//!
+//! All sketched estimators return the **median over D repetitions** (§4).
+
+use super::cs::CountSketch;
+use super::fcs::FastCountSketch;
+use super::hcs::HigherOrderCountSketch;
+use super::ts::TensorSketch;
+use crate::fft;
+use crate::hash::{HashPair, ModeHashes};
+use crate::tensor::{contract_all_but, t_iuu, t_uuu, Tensor};
+use crate::util::parallel::par_map;
+use crate::util::prng::Rng;
+
+/// Unified estimator interface. Implementations must be `Send + Sync` so the
+/// coordinator can serve them from a worker pool.
+pub trait ContractionEstimator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Estimate `T(u, u, u)` (cubical 3rd-order `T`).
+    fn t_uuu(&self, u: &[f64]) -> f64;
+
+    /// Estimate `T(I, u, u)` (cubical 3rd-order `T`).
+    fn t_iuu(&self, u: &[f64]) -> Vec<f64> {
+        let vs: Vec<&[f64]> = vec![u, u, u];
+        self.t_mode(0, &vs)
+    }
+
+    /// Estimate the mode-`mode` contraction with `vs[d]` at every other mode
+    /// (`vs[mode]` is ignored). Returns a vector of length `I_mode`.
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64>;
+
+    /// Estimate of `‖T‖_F` from the sketched representation (median of
+    /// per-repetition sketch norms; exact for `plain`). RTPM uses it to cap
+    /// eigenvalue estimates: `|λ| = |T(u,v,w)| ≤ ‖T‖_F` for unit vectors, so
+    /// clamping prevents a noisy λ from blowing up the deflation.
+    fn norm_estimate(&self) -> f64;
+
+    /// Rank-1 deflation `T ← T − λ·v_1 ∘ … ∘ v_N`, applied *in the sketch
+    /// domain* for sketched estimators (sketches are linear operators, so
+    /// `sketch(T − λ u∘v∘w) = sketch(T) − λ·sketch(u∘v∘w)` — no re-sketching
+    /// of the full tensor, the trick RTPM-with-sketching relies on).
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]);
+
+    /// Bytes held by the sketched representation of `T`.
+    fn sketch_bytes(&self) -> usize;
+
+    /// Bytes held by the stored hash functions (the paper's memory metric).
+    fn hash_bytes(&self) -> usize;
+}
+
+/// Elementwise median across `D` equal-length vectors.
+pub fn elementwise_median(rows: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rows.is_empty());
+    let n = rows[0].len();
+    if rows.len() == 1 {
+        return rows[0].clone();
+    }
+    let mut out = vec![0.0; n];
+    let mut buf = vec![0.0; rows.len()];
+    for i in 0..n {
+        for (b, row) in buf.iter_mut().zip(rows) {
+            *b = row[i];
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out[i] = crate::util::timing::percentile_sorted(&buf, 50.0);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Plain (exact) estimator
+// ---------------------------------------------------------------------------
+
+/// Exact contractions on the dense tensor — the "plain" baseline.
+pub struct PlainEstimator {
+    pub t: Tensor,
+}
+
+impl PlainEstimator {
+    pub fn new(t: Tensor) -> Self {
+        Self { t }
+    }
+}
+
+impl ContractionEstimator for PlainEstimator {
+    fn name(&self) -> &'static str {
+        "plain"
+    }
+
+    fn t_uuu(&self, u: &[f64]) -> f64 {
+        t_uuu(&self.t, u)
+    }
+
+    fn t_iuu(&self, u: &[f64]) -> Vec<f64> {
+        t_iuu(&self.t, u)
+    }
+
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+        contract_all_but(&self.t, mode, vs)
+    }
+
+    fn norm_estimate(&self) -> f64 {
+        self.t.frob_norm()
+    }
+
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
+        let rank1 = crate::tensor::outer(vs);
+        crate::linalg::axpy(-lambda, &rank1.data, &mut self.t.data);
+    }
+
+    fn sketch_bytes(&self) -> usize {
+        self.t.numel() * 8
+    }
+
+    fn hash_bytes(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CS baseline: one long hash pair over vec(T) (Definition 1 applied naively)
+// ---------------------------------------------------------------------------
+
+struct CsRep {
+    cs: CountSketch,
+    st: Vec<f64>,
+}
+
+/// CS on `vec(T)` with an *independent long* hash pair per repetition —
+/// the strawman the paper contrasts FCS against: `O(Ĩ)` hash storage, and
+/// rank-1 queries must enumerate `nnz(u)^N` entries of `u ∘ u ∘ u`.
+pub struct CsEstimator {
+    shape: Vec<usize>,
+    reps: Vec<CsRep>,
+}
+
+impl CsEstimator {
+    pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let total = t.numel();
+        let seeds: Vec<u64> = (0..d).map(|_| rng.next_u64()).collect();
+        let reps = par_map(d, crate::util::parallel::default_threads(), |i| {
+            let mut r = Rng::seed_from_u64(seeds[i]);
+            let cs = CountSketch::new(HashPair::draw(&mut r, total, j).materialize());
+            let st = cs.apply(t.as_vec());
+            CsRep { cs, st }
+        });
+        Self { shape: t.shape.clone(), reps }
+    }
+}
+
+impl ContractionEstimator for CsEstimator {
+    fn name(&self) -> &'static str {
+        "cs"
+    }
+
+    fn t_uuu(&self, u: &[f64]) -> f64 {
+        let i = self.shape[0];
+        assert_eq!(u.len(), i);
+        let ests: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                // ⟨CS(vec T), CS(vec(u∘u∘u))⟩ without materializing either:
+                // Σ_{ijk} s(l) st[h(l)] u_i u_j u_k, l = i + I(j + I k).
+                let h = &rep.cs.table.h;
+                let s = &rep.cs.table.s;
+                let mut acc = 0.0;
+                for k in 0..i {
+                    let uk = u[k];
+                    if uk == 0.0 {
+                        continue;
+                    }
+                    for j in 0..i {
+                        let c = u[j] * uk;
+                        if c == 0.0 {
+                            continue;
+                        }
+                        let base = (k * i + j) * i;
+                        let mut inner = 0.0;
+                        for (ii, &ui) in u.iter().enumerate() {
+                            let l = base + ii;
+                            inner += (s[l] as f64) * rep.st[h[l] as usize] * ui;
+                        }
+                        acc += c * inner;
+                    }
+                }
+                acc
+            })
+            .collect();
+        crate::util::timing::median(&ests)
+    }
+
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+        assert_eq!(self.shape.len(), 3, "CS estimator supports 3rd-order tensors");
+        let dims = &self.shape;
+        let rows: Vec<Vec<f64>> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                let h = &rep.cs.table.h;
+                let s = &rep.cs.table.s;
+                let mut out = vec![0.0; dims[mode]];
+                // iterate the two contracted modes; for each free index read
+                // the hashed bucket — O(Ĩ) worst case, O(nnz² I) sparse.
+                let (d0, d1, d2) = (dims[0], dims[1], dims[2]);
+                for k in 0..d2 {
+                    let vk = if mode == 2 { 1.0 } else { vs[2][k] };
+                    if vk == 0.0 {
+                        continue;
+                    }
+                    for j in 0..d1 {
+                        let vj = if mode == 1 { 1.0 } else { vs[1][j] };
+                        if vj == 0.0 {
+                            continue;
+                        }
+                        let base = (k * d1 + j) * d0;
+                        match mode {
+                            0 => {
+                                let c = vj * vk;
+                                for (o, ov) in out.iter_mut().enumerate() {
+                                    let l = base + o;
+                                    *ov += c * (s[l] as f64) * rep.st[h[l] as usize];
+                                }
+                            }
+                            1 => {
+                                let mut inner = 0.0;
+                                for (ii, &vi) in vs[0].iter().enumerate() {
+                                    let l = base + ii;
+                                    inner += vi * (s[l] as f64) * rep.st[h[l] as usize];
+                                }
+                                out[j] += vk * inner;
+                            }
+                            _ => {
+                                let mut inner = 0.0;
+                                for (ii, &vi) in vs[0].iter().enumerate() {
+                                    let l = base + ii;
+                                    inner += vi * (s[l] as f64) * rep.st[h[l] as usize];
+                                }
+                                out[k] += vj * inner;
+                            }
+                        }
+                    }
+                }
+                out
+            })
+            .collect();
+        elementwise_median(&rows)
+    }
+
+    fn norm_estimate(&self) -> f64 {
+        let norms: Vec<f64> = self.reps.iter().map(|r| crate::linalg::norm2(&r.st)).collect();
+        crate::util::timing::median(&norms)
+    }
+
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
+        // CS has no structure to exploit: sketch the dense rank-1 tensor
+        // entry by entry, O(Ĩ) per repetition.
+        assert_eq!(vs.len(), 3);
+        let (u, v, w) = (vs[0], vs[1], vs[2]);
+        let (d0, d1) = (self.shape[0], self.shape[1]);
+        for rep in &mut self.reps {
+            let h = &rep.cs.table.h;
+            let s = &rep.cs.table.s;
+            for (k, &wk) in w.iter().enumerate() {
+                if wk == 0.0 {
+                    continue;
+                }
+                for (j, &vj) in v.iter().enumerate() {
+                    let c = lambda * vj * wk;
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let base = (k * d1 + j) * d0;
+                    for (i, &ui) in u.iter().enumerate() {
+                        let l = base + i;
+                        rep.st[h[l] as usize] -= c * (s[l] as f64) * ui;
+                    }
+                }
+            }
+        }
+    }
+
+    fn sketch_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.st.len() * 8).sum()
+    }
+
+    fn hash_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.cs.table.memory_bytes()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TS estimator (circular convolution, Eq. 3 + TS analogue of Eq. 17)
+// ---------------------------------------------------------------------------
+
+struct TsRep {
+    ts: TensorSketch,
+    st: Vec<f64>,
+    /// Cached forward FFT of `st` at length J (the circular-convolution
+    /// length). `st` is fixed between deflations, so `F(st)` is hoisted out
+    /// of every `t_mode` call (§Perf).
+    st_fft: Vec<crate::fft::C64>,
+}
+
+impl TsRep {
+    fn refresh_fft(&mut self) {
+        self.st_fft = crate::fft::fft_real(&self.st, self.st.len());
+    }
+}
+
+pub struct TsEstimator {
+    reps: Vec<TsRep>,
+    j: usize,
+}
+
+impl TsEstimator {
+    /// Build with freshly drawn hashes.
+    pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let hashes: Vec<ModeHashes> = (0..d)
+            .map(|_| ModeHashes::draw_uniform(rng, &t.shape, j))
+            .collect();
+        Self::build_with_hashes(t, &hashes)
+    }
+
+    /// Build reusing existing hash draws (for TS/FCS equalization).
+    pub fn build_with_hashes(t: &Tensor, hashes: &[ModeHashes]) -> Self {
+        let j = hashes[0].modes[0].range;
+        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
+            let ts = TensorSketch::new(hashes[i].clone());
+            let st = ts.apply_dense(t);
+            let mut rep = TsRep { ts, st, st_fft: Vec::new() };
+            rep.refresh_fft();
+            rep
+        });
+        Self { reps, j }
+    }
+}
+
+impl ContractionEstimator for TsEstimator {
+    fn name(&self) -> &'static str {
+        "ts"
+    }
+
+    fn t_uuu(&self, u: &[f64]) -> f64 {
+        let ests: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                let sk = rep.ts.apply_rank1(&[u, u, u]);
+                crate::linalg::dot(&rep.st, &sk)
+            })
+            .collect();
+        crate::util::timing::median(&ests)
+    }
+
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+        let rows: Vec<Vec<f64>> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                // z = F⁻¹( F(st) · Π_{d≠mode} conj(F(CS_d(v_d))) ), circular J,
+                // with F(st) served from the per-rep cache.
+                let mut fz = rep.st_fft.clone();
+                for d in (0..rep.ts.order()).filter(|&d| d != mode) {
+                    let cs = rep.ts.modes[d].apply(vs[d]);
+                    let fs = fft::fft_real(&cs, self.j);
+                    for (x, y) in fz.iter_mut().zip(&fs) {
+                        *x = *x * y.conj();
+                    }
+                }
+                let z = fft::ifft_to_real(fz);
+                let cs_m = &rep.ts.modes[mode];
+                (0..cs_m.domain())
+                    .map(|i| {
+                        let (b, s) = cs_m.basis(i);
+                        s * z[b]
+                    })
+                    .collect()
+            })
+            .collect();
+        elementwise_median(&rows)
+    }
+
+    fn norm_estimate(&self) -> f64 {
+        let norms: Vec<f64> = self.reps.iter().map(|r| crate::linalg::norm2(&r.st)).collect();
+        crate::util::timing::median(&norms)
+    }
+
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
+        for rep in &mut self.reps {
+            let sk = rep.ts.apply_rank1(vs);
+            crate::linalg::axpy(-lambda, &sk, &mut rep.st);
+            // Keep the spectral cache coherent (F is linear).
+            let fs = fft::fft_real(&sk, rep.st.len());
+            for (x, y) in rep.st_fft.iter_mut().zip(&fs) {
+                *x = *x - y.scale(lambda);
+            }
+        }
+    }
+
+    fn sketch_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.st.len() * 8).sum()
+    }
+
+    fn hash_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.ts.hashes.memory_bytes()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HCS estimator (Eq. 4/5, Shi et al.)
+// ---------------------------------------------------------------------------
+
+struct HcsRep {
+    hcs: HigherOrderCountSketch,
+    st: Tensor,
+}
+
+pub struct HcsEstimator {
+    reps: Vec<HcsRep>,
+}
+
+impl HcsEstimator {
+    pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let hashes: Vec<ModeHashes> = (0..d)
+            .map(|_| ModeHashes::draw_uniform(rng, &t.shape, j))
+            .collect();
+        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
+            let hcs = HigherOrderCountSketch::new(hashes[i].clone());
+            let st = hcs.apply_dense(t);
+            HcsRep { hcs, st }
+        });
+        Self { reps }
+    }
+}
+
+impl ContractionEstimator for HcsEstimator {
+    fn name(&self) -> &'static str {
+        "hcs"
+    }
+
+    fn t_uuu(&self, u: &[f64]) -> f64 {
+        let ests: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                let cs: Vec<Vec<f64>> =
+                    rep.hcs.modes.iter().map(|m| m.apply(u)).collect();
+                let refs: Vec<&[f64]> = cs.iter().map(|v| v.as_slice()).collect();
+                crate::tensor::multilinear_form(&rep.st, &refs)
+            })
+            .collect();
+        crate::util::timing::median(&ests)
+    }
+
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+        let rows: Vec<Vec<f64>> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                // Contract the sketched tensor with CS_d(v_d) at d ≠ mode
+                // (O(Π J_n)), then decode the free sketched mode per index.
+                let cs: Vec<Vec<f64>> = (0..rep.hcs.order())
+                    .map(|d| {
+                        if d == mode {
+                            Vec::new()
+                        } else {
+                            rep.hcs.modes[d].apply(vs[d])
+                        }
+                    })
+                    .collect();
+                let dummy = vec![0.0; rep.st.shape[mode]];
+                let refs: Vec<&[f64]> = (0..rep.hcs.order())
+                    .map(|d| if d == mode { dummy.as_slice() } else { cs[d].as_slice() })
+                    .collect();
+                let m = contract_all_but(&rep.st, mode, &refs);
+                let cs_m = &rep.hcs.modes[mode];
+                (0..cs_m.domain())
+                    .map(|i| {
+                        let (b, s) = cs_m.basis(i);
+                        s * m[b]
+                    })
+                    .collect()
+            })
+            .collect();
+        elementwise_median(&rows)
+    }
+
+    fn norm_estimate(&self) -> f64 {
+        let norms: Vec<f64> = self.reps.iter().map(|r| r.st.frob_norm()).collect();
+        crate::util::timing::median(&norms)
+    }
+
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
+        for rep in &mut self.reps {
+            // Materialized outer product of the CS'd vectors (Eq. 5 cost).
+            let cs: Vec<Vec<f64>> = rep
+                .hcs
+                .modes
+                .iter()
+                .zip(vs)
+                .map(|(m, v)| m.apply(v))
+                .collect();
+            let refs: Vec<&[f64]> = cs.iter().map(|v| v.as_slice()).collect();
+            let rank1 = crate::tensor::outer(&refs);
+            crate::linalg::axpy(-lambda, &rank1.data, &mut rep.st.data);
+        }
+    }
+
+    fn sketch_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.st.numel() * 8).sum()
+    }
+
+    fn hash_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.hcs.hash_memory_bytes()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FCS estimator (Eqs. 8, 16, 17 — the paper's method)
+// ---------------------------------------------------------------------------
+
+struct FcsRep {
+    fcs: FastCountSketch,
+    st: Vec<f64>,
+    /// Cached forward FFT of `st` at length `fft_len` (see below).
+    st_fft: Vec<crate::fft::C64>,
+}
+
+impl FcsRep {
+    fn refresh_fft(&mut self, n: usize) {
+        self.st_fft = crate::fft::fft_real(&self.st, n);
+    }
+}
+
+pub struct FcsEstimator {
+    reps: Vec<FcsRep>,
+    j_tilde: usize,
+    /// FFT length for the Eq. 17 correlation. FCS's linear (non-modular)
+    /// structure means *any* `n ≥ J̃` is exact — no wraparound can reach the
+    /// gathered buckets — so we round up to a power of two and skip
+    /// Bluestein entirely (§Perf: ~3–6× on the t_mode hot path).
+    fft_len: usize,
+}
+
+impl FcsEstimator {
+    pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let hashes: Vec<ModeHashes> = (0..d)
+            .map(|_| ModeHashes::draw_uniform(rng, &t.shape, j))
+            .collect();
+        Self::build_with_hashes(t, &hashes)
+    }
+
+    /// Build reusing existing hash draws (TS/FCS equalization, §4.1).
+    pub fn build_with_hashes(t: &Tensor, hashes: &[ModeHashes]) -> Self {
+        let j_tilde = hashes[0].composite_range();
+        let fft_len = j_tilde.next_power_of_two();
+        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
+            let fcs = FastCountSketch::new(hashes[i].clone());
+            let st = fcs.apply_dense(t);
+            let mut rep = FcsRep { fcs, st, st_fft: Vec::new() };
+            rep.refresh_fft(fft_len);
+            rep
+        });
+        Self { reps, j_tilde, fft_len }
+    }
+
+    /// Build directly from a CP representation (uses the Eq. 8 FFT path —
+    /// `O(nnz(U) + R·J̃ log J̃)` instead of `O(nnz(T))`).
+    pub fn build_from_cp(cp: &crate::tensor::CpTensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let hashes: Vec<ModeHashes> = (0..d)
+            .map(|_| ModeHashes::draw_uniform(rng, &cp.shape(), j))
+            .collect();
+        let j_tilde = hashes[0].composite_range();
+        let fft_len = j_tilde.next_power_of_two();
+        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
+            let fcs = FastCountSketch::new(hashes[i].clone());
+            let st = fcs.apply_cp(cp);
+            let mut rep = FcsRep { fcs, st, st_fft: Vec::new() };
+            rep.refresh_fft(fft_len);
+            rep
+        });
+        Self { reps, j_tilde, fft_len }
+    }
+}
+
+impl ContractionEstimator for FcsEstimator {
+    fn name(&self) -> &'static str {
+        "fcs"
+    }
+
+    fn t_uuu(&self, u: &[f64]) -> f64 {
+        // Eq. 16: ⟨FCS(T), CS₁(u) ⊛ CS₂(u) ⊛ CS₃(u)⟩ (linear convolution).
+        let ests: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                let sk = rep.fcs.apply_rank1(&[u, u, u]);
+                crate::linalg::dot(&rep.st, &sk)
+            })
+            .collect();
+        crate::util::timing::median(&ests)
+    }
+
+    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+        // Eq. 17 generalized: z = F⁻¹(F(FCS(T)) · Π_{d≠mode} conj(F(CS_d(v_d))))
+        // over n ≥ J̃ points; out_i = s_mode(i) · z(h_mode(i)). No wraparound
+        // can occur because h_mode(i) + Σ_{d≠mode}(J_d − 1) ≤ J̃ − 1 < n, so
+        // a power-of-two n is exact and F(st) is served from the cache.
+        let _ = self.j_tilde;
+        let rows: Vec<Vec<f64>> = self
+            .reps
+            .iter()
+            .map(|rep| {
+                let mut fz = rep.st_fft.clone();
+                for d in (0..rep.fcs.order()).filter(|&d| d != mode) {
+                    let cs = rep.fcs.modes[d].apply(vs[d]);
+                    let fs = fft::fft_real(&cs, self.fft_len);
+                    for (x, y) in fz.iter_mut().zip(&fs) {
+                        *x = *x * y.conj();
+                    }
+                }
+                let z = fft::ifft_to_real(fz);
+                let cs_m = &rep.fcs.modes[mode];
+                (0..cs_m.domain())
+                    .map(|i| {
+                        let (b, s) = cs_m.basis(i);
+                        s * z[b]
+                    })
+                    .collect()
+            })
+            .collect();
+        elementwise_median(&rows)
+    }
+
+    fn norm_estimate(&self) -> f64 {
+        let norms: Vec<f64> = self.reps.iter().map(|r| crate::linalg::norm2(&r.st)).collect();
+        crate::util::timing::median(&norms)
+    }
+
+    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
+        for rep in &mut self.reps {
+            let sk = rep.fcs.apply_rank1(vs);
+            crate::linalg::axpy(-lambda, &sk, &mut rep.st);
+            // Keep the spectral cache coherent (F is linear).
+            let fs = fft::fft_real(&sk, self.fft_len);
+            for (x, y) in rep.st_fft.iter_mut().zip(&fs) {
+                *x = *x - y.scale(lambda);
+            }
+        }
+    }
+
+    fn sketch_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.st.len() * 8).sum()
+    }
+
+    fn hash_bytes(&self) -> usize {
+        self.reps.iter().map(|r| r.fcs.hash_memory_bytes()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Method tag + factory (what the CLI / benches select on)
+// ---------------------------------------------------------------------------
+
+/// Sketching method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Plain,
+    Cs,
+    Ts,
+    Hcs,
+    Fcs,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "plain" => Some(Method::Plain),
+            "cs" => Some(Method::Cs),
+            "ts" => Some(Method::Ts),
+            "hcs" => Some(Method::Hcs),
+            "fcs" => Some(Method::Fcs),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Plain => "plain",
+            Method::Cs => "cs",
+            Method::Ts => "ts",
+            Method::Hcs => "hcs",
+            Method::Fcs => "fcs",
+        }
+    }
+
+    /// Build an estimator for `t` with `d` repetitions and hash length `j`.
+    pub fn build(&self, t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Box<dyn ContractionEstimator> {
+        match self {
+            Method::Plain => Box::new(PlainEstimator::new(t.clone())),
+            Method::Cs => Box::new(CsEstimator::build(t, d, j, rng)),
+            Method::Ts => Box::new(TsEstimator::build(t, d, j, rng)),
+            Method::Hcs => Box::new(HcsEstimator::build(t, d, j, rng)),
+            Method::Fcs => Box::new(FcsEstimator::build(t, d, j, rng)),
+        }
+    }
+}
+
+/// Build TS and FCS estimators sharing the *same* hash draws — the paper's
+/// equalized-hash comparison protocol (§4.1).
+pub fn build_equalized(
+    t: &Tensor,
+    d: usize,
+    j: usize,
+    rng: &mut Rng,
+) -> (TsEstimator, FcsEstimator) {
+    let hashes: Vec<ModeHashes> = (0..d)
+        .map(|_| ModeHashes::draw_uniform(rng, &t.shape, j))
+        .collect();
+    (
+        TsEstimator::build_with_hashes(t, &hashes),
+        FcsEstimator::build_with_hashes(t, &hashes),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::CpTensor;
+
+    fn test_tensor(rng: &mut Rng, dim: usize) -> Tensor {
+        let cp = CpTensor::random_orthogonal_symmetric(rng, dim, 3, 3);
+        let mut t = cp.to_dense();
+        t.add_noise(rng, 0.01);
+        t
+    }
+
+    #[test]
+    fn all_methods_approximate_t_uuu() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = test_tensor(&mut rng, 20);
+        let mut u = rng.normal_vec(20);
+        crate::linalg::normalize(&mut u);
+        let truth = t_uuu(&t, &u);
+        for method in [Method::Cs, Method::Ts, Method::Hcs, Method::Fcs] {
+            // hash length: HCS uses per-mode J (sketched dim J³), others J=400
+            let j = if method == Method::Hcs { 12 } else { 400 };
+            let est = method.build(&t, 9, j, &mut rng);
+            let got = est.t_uuu(&u);
+            assert!(
+                (got - truth).abs() < 0.35 * truth.abs().max(1.0),
+                "{}: {got} vs {truth}",
+                est.name()
+            );
+        }
+    }
+
+    #[test]
+    fn all_methods_approximate_t_iuu() {
+        let mut rng = Rng::seed_from_u64(2);
+        let t = test_tensor(&mut rng, 16);
+        let mut u = rng.normal_vec(16);
+        crate::linalg::normalize(&mut u);
+        let truth = t_iuu(&t, &u);
+        let tn = crate::linalg::norm2(&truth);
+        for method in [Method::Cs, Method::Ts, Method::Hcs, Method::Fcs] {
+            // CS gets a longer hash: its single-hash estimator has no
+            // composite-structure variance reduction (that is the paper's
+            // point), so at equal J it is markedly noisier.
+            let j = match method {
+                Method::Hcs => 14,
+                Method::Cs => 3000,
+                _ => 1500,
+            };
+            let est = method.build(&t, 15, j, &mut rng);
+            let got = est.t_iuu(&u);
+            let err: f64 = got
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            // TS carries the circular-wraparound collision variance
+            // (Proposition 1 says it is the worst of TS/FCS) and HCS's
+            // sketched dim (J³≈2700) is the smallest here, so both get a
+            // looser statistical bound than CS/FCS.
+            let bound = match method {
+                Method::Ts | Method::Hcs => 1.0,
+                _ => 0.5,
+            };
+            assert!(err / tn < bound, "{}: rel err {}", est.name(), err / tn);
+        }
+    }
+
+    #[test]
+    fn cs_estimator_matches_materialized_sketches() {
+        // D=1 CS estimate must equal ⟨CS(vec T), CS(vec(u∘u∘u))⟩ and, per
+        // coordinate, ⟨CS(vec T), CS(vec(e_i∘u∘u))⟩ — the literal Def. 1
+        // computation with everything materialized.
+        let mut rng = Rng::seed_from_u64(42);
+        let t = test_tensor(&mut rng, 8);
+        let u = rng.normal_vec(8);
+        let est = CsEstimator::build(&t, 1, 64, &mut rng);
+        let rep = &est.reps[0];
+        let cube = crate::tensor::outer(&[&u[..], &u[..], &u[..]]);
+        let s_cube = rep.cs.apply(cube.as_vec());
+        let expect_uuu = crate::linalg::dot(&rep.st, &s_cube);
+        assert!((est.t_uuu(&u) - expect_uuu).abs() < 1e-10);
+        let got = est.t_iuu(&u);
+        for i in 0..8 {
+            let mut e = vec![0.0; 8];
+            e[i] = 1.0;
+            let t3 = crate::tensor::outer(&[&e[..], &u[..], &u[..]]);
+            let s3 = rep.cs.apply(t3.as_vec());
+            let expect = crate::linalg::dot(&rep.st, &s3);
+            assert!((got[i] - expect).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn plain_is_exact() {
+        let mut rng = Rng::seed_from_u64(3);
+        let t = test_tensor(&mut rng, 10);
+        let u = rng.normal_vec(10);
+        let est = PlainEstimator::new(t.clone());
+        assert_eq!(est.t_uuu(&u), t_uuu(&t, &u));
+        assert_eq!(est.t_iuu(&u), t_iuu(&t, &u));
+    }
+
+    #[test]
+    fn fcs_t_mode_consistent_with_eq16() {
+        // dot(t_mode(0, u), u) should approximate t_uuu ≈ the Eq.16 estimate.
+        let mut rng = Rng::seed_from_u64(4);
+        let t = test_tensor(&mut rng, 12);
+        let mut u = rng.normal_vec(12);
+        crate::linalg::normalize(&mut u);
+        let est = FcsEstimator::build(&t, 1, 600, &mut rng);
+        let via_iuu = crate::linalg::dot(&est.t_iuu(&u), &u);
+        let direct = est.t_uuu(&u);
+        // Same sketch, same hashes, D=1 ⇒ identical up to FFT roundoff.
+        assert!((via_iuu - direct).abs() < 1e-8, "{via_iuu} vs {direct}");
+    }
+
+    #[test]
+    fn ts_t_mode_consistent_with_sketch_inner() {
+        let mut rng = Rng::seed_from_u64(5);
+        let t = test_tensor(&mut rng, 12);
+        let mut u = rng.normal_vec(12);
+        crate::linalg::normalize(&mut u);
+        let est = TsEstimator::build(&t, 1, 500, &mut rng);
+        let via_iuu = crate::linalg::dot(&est.t_iuu(&u), &u);
+        let direct = est.t_uuu(&u);
+        assert!((via_iuu - direct).abs() < 1e-8, "{via_iuu} vs {direct}");
+    }
+
+    #[test]
+    fn equalized_hashes_share_draws() {
+        let mut rng = Rng::seed_from_u64(6);
+        let t = test_tensor(&mut rng, 10);
+        let (ts, fcs) = build_equalized(&t, 2, 100, &mut rng);
+        for (tr, fr) in ts.reps.iter().zip(&fcs.reps) {
+            for (tm, fm) in tr.ts.hashes.modes.iter().zip(&fr.fcs.hashes.modes) {
+                assert_eq!(tm.h, fm.h);
+                assert_eq!(tm.s, fm.s);
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_t_mode_all_modes() {
+        // non-cubical tensor: check each free mode against the exact value.
+        let mut rng = Rng::seed_from_u64(7);
+        let cp = CpTensor::random_orthogonal(&mut rng, &[10, 14, 12], 2);
+        let mut t = cp.to_dense();
+        t.add_noise(&mut rng, 0.01);
+        let v0 = rng.normal_vec(10);
+        let v1 = rng.normal_vec(14);
+        let v2 = rng.normal_vec(12);
+        let vs: Vec<&[f64]> = vec![&v0, &v1, &v2];
+        let est = FcsEstimator::build(&t, 9, 500, &mut rng);
+        for mode in 0..3 {
+            let truth = contract_all_but(&t, mode, &vs);
+            let got = est.t_mode(mode, &vs);
+            let err = got
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+                / crate::linalg::norm2(&truth);
+            assert!(err < 0.45, "mode {mode}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn deflation_matches_resketching() {
+        // For every sketched method, deflating in the sketch domain must
+        // equal sketching the deflated tensor with the same hashes.
+        let mut rng = Rng::seed_from_u64(9);
+        let t = test_tensor(&mut rng, 8);
+        let mut u = rng.normal_vec(8);
+        crate::linalg::normalize(&mut u);
+        let lambda = 1.7;
+        let deflated = {
+            let r1 = crate::tensor::outer(&[&u[..], &u[..], &u[..]]);
+            t.sub(&r1.scaled(lambda))
+        };
+        let vs: Vec<&[f64]> = vec![&u, &u, &u];
+
+        // FCS
+        let hashes: Vec<ModeHashes> =
+            (0..2).map(|_| ModeHashes::draw_uniform(&mut rng, &t.shape, 50)).collect();
+        let mut fcs = FcsEstimator::build_with_hashes(&t, &hashes);
+        fcs.deflate(lambda, &vs);
+        let fcs2 = FcsEstimator::build_with_hashes(&deflated, &hashes);
+        for (a, b) in fcs.reps.iter().zip(&fcs2.reps) {
+            for (x, y) in a.st.iter().zip(&b.st) {
+                assert!((x - y).abs() < 1e-9, "fcs sketch mismatch");
+            }
+        }
+
+        // TS
+        let mut ts = TsEstimator::build_with_hashes(&t, &hashes);
+        ts.deflate(lambda, &vs);
+        let ts2 = TsEstimator::build_with_hashes(&deflated, &hashes);
+        for (a, b) in ts.reps.iter().zip(&ts2.reps) {
+            for (x, y) in a.st.iter().zip(&b.st) {
+                assert!((x - y).abs() < 1e-9, "ts sketch mismatch");
+            }
+        }
+
+        // Plain
+        let mut plain = PlainEstimator::new(t.clone());
+        plain.deflate(lambda, &vs);
+        assert!(plain.t.sub(&deflated).frob_norm() < 1e-12);
+
+        // CS: deflate then compare t_uuu against an estimator built on the
+        // deflated tensor is statistical; instead check the sketch update
+        // algebra on a single rep with a fresh build sharing the RNG draw.
+        let mut rng2 = Rng::seed_from_u64(77);
+        let mut cs1 = CsEstimator::build(&t, 1, 64, &mut rng2.clone());
+        let cs2 = CsEstimator::build(&deflated, 1, 64, &mut rng2);
+        cs1.deflate(lambda, &vs);
+        for (x, y) in cs1.reps[0].st.iter().zip(&cs2.reps[0].st) {
+            assert!((x - y).abs() < 1e-9, "cs sketch mismatch");
+        }
+
+        // HCS
+        let mut rng3 = Rng::seed_from_u64(88);
+        let mut h1 = HcsEstimator::build(&t, 2, 5, &mut rng3.clone());
+        let h2 = HcsEstimator::build(&deflated, 2, 5, &mut rng3);
+        h1.deflate(lambda, &vs);
+        for (a, b) in h1.reps.iter().zip(&h2.reps) {
+            assert!(a.st.sub(&b.st).frob_norm() < 1e-9, "hcs sketch mismatch");
+        }
+    }
+
+    #[test]
+    fn elementwise_median_basic() {
+        let rows = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![100.0, -5.0],
+        ];
+        assert_eq!(elementwise_median(&rows), vec![2.0, 10.0]);
+    }
+
+    #[test]
+    fn memory_accounting_ordering() {
+        // hash memory: CS >> TS ≈ FCS ≈ HCS (paper Table 1 last row).
+        let mut rng = Rng::seed_from_u64(8);
+        let t = test_tensor(&mut rng, 12);
+        let cs = CsEstimator::build(&t, 2, 100, &mut rng);
+        let ts = TsEstimator::build(&t, 2, 100, &mut rng);
+        let fcs = FcsEstimator::build(&t, 2, 100, &mut rng);
+        assert!(cs.hash_bytes() > 10 * fcs.hash_bytes());
+        assert_eq!(ts.hash_bytes(), fcs.hash_bytes());
+    }
+}

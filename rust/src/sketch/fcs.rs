@@ -1,0 +1,227 @@
+//! Fast count sketch (Definition 4, the paper's contribution).
+//!
+//! `FCS(T) := CS(vec(T); h̃, s̃)` with the composite hash pair of Eq. 7 —
+//! equivalently, for CP tensors, the zero-padded **linear** convolution of
+//! the per-mode count sketches (Eq. 8). Output length `J̃ = Σ J_n − N + 1`.
+
+use super::common::{sketch_dense, sketch_dense_into};
+use super::cs::CountSketch;
+use crate::fft;
+use crate::hash::ModeHashes;
+use crate::tensor::{CpTensor, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct FastCountSketch {
+    pub hashes: ModeHashes,
+    pub modes: Vec<CountSketch>,
+    /// `J̃ = Σ J_n − N + 1`
+    pub j_tilde: usize,
+}
+
+impl FastCountSketch {
+    pub fn new(hashes: ModeHashes) -> Self {
+        let j_tilde = hashes.composite_range();
+        let modes = hashes.modes.iter().map(|t| CountSketch::new(t.clone())).collect();
+        Self { hashes, modes, j_tilde }
+    }
+
+    pub fn order(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Sketch a general dense tensor — `O(nnz(T))` (Eq. 13).
+    pub fn apply_dense(&self, t: &Tensor) -> Vec<f64> {
+        sketch_dense(t, &self.hashes, None)
+    }
+
+    /// In-place variant for the hot path.
+    pub fn apply_dense_into(&self, t: &Tensor, out: &mut [f64]) {
+        sketch_dense_into(t, &self.hashes, None, out);
+    }
+
+    /// Sketch a CP tensor by **linear** convolution of per-mode count
+    /// sketches (Eq. 8) — `O(max_n nnz(U^{(n)}) + R·J̃ log J̃)`.
+    pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let mut out = vec![0.0; self.j_tilde];
+        for r in 0..cp.rank() {
+            let sketched: Vec<Vec<f64>> = self
+                .modes
+                .iter()
+                .zip(&cp.factors)
+                .map(|(cs, u)| cs.apply(u.col(r)))
+                .collect();
+            let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
+            let conv = fft::conv_linear_many(&refs);
+            debug_assert_eq!(conv.len(), self.j_tilde);
+            crate::linalg::axpy(cp.lambda[r], &conv, &mut out);
+        }
+        out
+    }
+
+    /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` (used by Eq. 16).
+    pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
+        assert_eq!(vs.len(), self.order());
+        let sketched: Vec<Vec<f64>> = self
+            .modes
+            .iter()
+            .zip(vs)
+            .map(|(cs, v)| cs.apply(v))
+            .collect();
+        let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
+        fft::conv_linear_many(&refs)
+    }
+
+    /// The defining equivalence (Eq. 6): CS of `vec(T)` under the
+    /// *materialized* composite hash pair. O(Ĩ) memory — used by tests and
+    /// by the CS baseline comparison, never by the fast path.
+    pub fn apply_via_composite_cs(&self, t: &Tensor) -> Vec<f64> {
+        let comp = CountSketch::new(self.hashes.materialize_composite());
+        comp.apply(t.as_vec())
+    }
+
+    /// Elementwise decompression (§4.3 rule):
+    /// `T̂[i_1..i_N] = Π s_n(i_n) · FCS(T)[Σ h_n(i_n)]`.
+    pub fn decode(&self, sketch: &[f64], idx: &[usize]) -> f64 {
+        debug_assert_eq!(sketch.len(), self.j_tilde);
+        self.hashes.composite_s(idx) * sketch[self.hashes.composite_h(idx)]
+    }
+
+    /// Memory of the stored hash functions (bytes) — `O(Σ I_n)`.
+    pub fn hash_memory_bytes(&self) -> usize {
+        self.hashes.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn definition_equivalence_eq6() {
+        // FCS(T) (fast path) == CS(vec(T); composite hashes) (Definition 4).
+        let mut rng = Rng::seed_from_u64(1);
+        let shape = [5usize, 4, 6];
+        let t = Tensor::randn(&mut rng, &shape);
+        let mh = ModeHashes::draw_uniform(&mut rng, &shape, 7);
+        let fcs = FastCountSketch::new(mh);
+        let fast = fcs.apply_dense(&t);
+        let def = fcs.apply_via_composite_cs(&t);
+        for (a, b) in fast.iter().zip(&def) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cp_fft_path_matches_dense_path_eq8() {
+        // Eq. 8 (FFT linear convolution) == Eq. 13 on the materialized CP.
+        let mut rng = Rng::seed_from_u64(2);
+        let mut cp = CpTensor::randn(&mut rng, &[6, 5, 4], 3);
+        cp.lambda = vec![1.0, -0.5, 2.0];
+        let mh = ModeHashes::draw_uniform(&mut rng, &[6, 5, 4], 8);
+        let fcs = FastCountSketch::new(mh);
+        let via_cp = fcs.apply_cp(&cp);
+        let via_dense = fcs.apply_dense(&cp.to_dense());
+        assert_eq!(via_cp.len(), 3 * 8 - 3 + 1);
+        for (a, b) in via_cp.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_ranges_supported() {
+        // FCS (unlike TS) allows J_n to differ per mode.
+        let mut rng = Rng::seed_from_u64(3);
+        let shape = [5usize, 7, 3];
+        let t = Tensor::randn(&mut rng, &shape);
+        let mh = ModeHashes::draw(&mut rng, &shape, &[4, 9, 5]);
+        let fcs = FastCountSketch::new(mh);
+        let fast = fcs.apply_dense(&t);
+        assert_eq!(fast.len(), 4 + 9 + 5 - 3 + 1);
+        let def = fcs.apply_via_composite_cs(&t);
+        for (a, b) in fast.iter().zip(&def) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rank1_matches_dense() {
+        let mut rng = Rng::seed_from_u64(4);
+        let u = rng.normal_vec(5);
+        let v = rng.normal_vec(6);
+        let w = rng.normal_vec(4);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[5, 6, 4], 9);
+        let fcs = FastCountSketch::new(mh);
+        let fast = fcs.apply_rank1(&[&u, &v, &w]);
+        let dense = fcs.apply_dense(&crate::tensor::outer(&[&u, &v, &w]));
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inner_product_unbiased() {
+        let mut rng = Rng::seed_from_u64(5);
+        let m = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let n = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let truth = m.inner(&n);
+        let trials = 1500;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &[5, 5, 5], 24);
+            let f = FastCountSketch::new(mh);
+            acc += crate::linalg::dot(&f.apply_dense(&m), &f.apply_dense(&n));
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - truth).abs() < 0.75, "mean={mean} truth={truth}");
+    }
+
+    #[test]
+    fn fcs_variance_not_worse_than_ts() {
+        // Empirical check of Proposition 1: with equalized hashes the FCS
+        // inner-product estimator has variance ≤ the TS one.
+        let mut rng = Rng::seed_from_u64(6);
+        let m = Tensor::randn(&mut rng, &[6, 6, 6]);
+        let n = Tensor::randn(&mut rng, &[6, 6, 6]);
+        let trials = 800;
+        let mut fcs_est = Vec::with_capacity(trials);
+        let mut ts_est = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &[6, 6, 6], 16);
+            let f = FastCountSketch::new(mh.clone());
+            let t = super::super::ts::TensorSketch::new(mh);
+            fcs_est.push(crate::linalg::dot(&f.apply_dense(&m), &f.apply_dense(&n)));
+            ts_est.push(crate::linalg::dot(&t.apply_dense(&m), &t.apply_dense(&n)));
+        }
+        let var = |xs: &[f64]| {
+            let mu = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / xs.len() as f64
+        };
+        let (vf, vt) = (var(&fcs_est), var(&ts_est));
+        assert!(
+            vf <= vt * 1.15, // sampling slack; systematic relation is ≤
+            "Var[FCS]={vf} should be ≤ Var[TS]={vt}"
+        );
+    }
+
+    #[test]
+    fn decode_roundtrip_expectation() {
+        // E[decode] = entry value.
+        let mut rng = Rng::seed_from_u64(7);
+        let shape = [4usize, 4, 4];
+        let mut t = Tensor::zeros(&shape);
+        t.set(&[1, 2, 3], 5.0);
+        t.set(&[0, 0, 0], -2.0);
+        let trials = 3000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, 16);
+            let f = FastCountSketch::new(mh);
+            let sk = f.apply_dense(&t);
+            acc += f.decode(&sk, &[1, 2, 3]);
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 5.0).abs() < 0.25, "mean={mean}");
+    }
+}

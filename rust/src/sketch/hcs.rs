@@ -1,0 +1,186 @@
+//! Higher-order count sketch (Definition 3, Shi et al.): sketches an order-N
+//! tensor into a *smaller order-N tensor* `HCS(T) ∈ R^{J_1 × … × J_N}`
+//! (Eq. 4); for CP tensors, the outer product of the per-mode count sketches
+//! must be materialized (Eq. 5) — the `O(R·Π J_n)` cost FCS avoids.
+
+use super::cs::CountSketch;
+use crate::hash::ModeHashes;
+use crate::tensor::{CpTensor, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct HigherOrderCountSketch {
+    pub hashes: ModeHashes,
+    pub modes: Vec<CountSketch>,
+    pub ranges: Vec<usize>,
+}
+
+impl HigherOrderCountSketch {
+    pub fn new(hashes: ModeHashes) -> Self {
+        let ranges = hashes.modes.iter().map(|m| m.range).collect();
+        let modes = hashes.modes.iter().map(|t| CountSketch::new(t.clone())).collect();
+        Self { hashes, modes, ranges }
+    }
+
+    pub fn order(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Sketch a general dense tensor — `O(nnz(T))` (Eq. 4).
+    pub fn apply_dense(&self, t: &Tensor) -> Tensor {
+        assert_eq!(t.shape, self.hashes.dims);
+        let mut out = Tensor::zeros(&self.ranges);
+        let n = t.order();
+        let i0 = t.shape[0];
+        let h0 = &self.hashes.modes[0].h;
+        let s0 = &self.hashes.modes[0].s;
+        let fibers = t.numel() / i0;
+        let mut idx_hi = vec![0usize; n - 1];
+        // strides of the output tensor (column-major)
+        let mut strides = vec![1usize; n];
+        for d in 1..n {
+            strides[d] = strides[d - 1] * self.ranges[d - 1];
+        }
+        let mut l = 0usize;
+        for _ in 0..fibers {
+            let mut base = 0usize;
+            let mut neg = 0usize;
+            for (d, &i) in idx_hi.iter().enumerate() {
+                let m = &self.hashes.modes[d + 1];
+                base += (m.h[i] as usize) * strides[d + 1];
+                if m.s[i] < 0 {
+                    neg += 1;
+                }
+            }
+            let sbase = if neg & 1 == 0 { 1.0 } else { -1.0 };
+            for i in 0..i0 {
+                let v = t.data[l];
+                l += 1;
+                if v != 0.0 {
+                    out.data[base + h0[i] as usize] += sbase * (s0[i] as f64) * v;
+                }
+            }
+            for (d, ix) in idx_hi.iter_mut().enumerate() {
+                *ix += 1;
+                if *ix < t.shape[d + 1] {
+                    break;
+                }
+                *ix = 0;
+            }
+        }
+        out
+    }
+
+    /// Sketch a CP tensor via materialized outer products (Eq. 5) —
+    /// `O(max_n nnz(U^{(n)}) + R·Π J_n)`.
+    pub fn apply_cp(&self, cp: &CpTensor) -> Tensor {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let mut out = Tensor::zeros(&self.ranges);
+        for r in 0..cp.rank() {
+            let sketched: Vec<Vec<f64>> = self
+                .modes
+                .iter()
+                .zip(&cp.factors)
+                .map(|(cs, u)| cs.apply(u.col(r)))
+                .collect();
+            let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
+            let rank1 = crate::tensor::outer(&refs); // the unavoidable materialization
+            crate::linalg::axpy(cp.lambda[r], &rank1.data, &mut out.data);
+        }
+        out
+    }
+
+    /// Elementwise decompression (Shi et al.):
+    /// `T̂[i_1..i_N] = Π s_n(i_n) · HCS(T)[h_1(i_1), …, h_N(i_N)]`.
+    pub fn decode(&self, sketch: &Tensor, idx: &[usize]) -> f64 {
+        let j: Vec<usize> = idx
+            .iter()
+            .zip(&self.hashes.modes)
+            .map(|(&i, m)| m.h(i))
+            .collect();
+        self.hashes.composite_s(idx) * sketch.get(&j)
+    }
+
+    /// Memory of the stored hash functions (bytes) — `O(Σ I_n)`.
+    pub fn hash_memory_bytes(&self) -> usize {
+        self.hashes.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn dense_matches_definition() {
+        let mut rng = Rng::seed_from_u64(1);
+        let shape = [4usize, 5, 3];
+        let t = Tensor::randn(&mut rng, &shape);
+        let mh = ModeHashes::draw(&mut rng, &shape, &[3, 4, 2]);
+        let hcs = HigherOrderCountSketch::new(mh);
+        let out = hcs.apply_dense(&t);
+        assert_eq!(out.shape, vec![3, 4, 2]);
+        // Brute-force Eq. 4.
+        let mut expect = Tensor::zeros(&[3, 4, 2]);
+        for i in 0..4 {
+            for j in 0..5 {
+                for k in 0..3 {
+                    let idx = [i, j, k];
+                    let dst = [
+                        hcs.hashes.modes[0].h(i),
+                        hcs.hashes.modes[1].h(j),
+                        hcs.hashes.modes[2].h(k),
+                    ];
+                    let s = hcs.hashes.composite_s(&idx);
+                    expect.set(&dst, expect.get(&dst) + s * t.get(&idx));
+                }
+            }
+        }
+        assert!(out.sub(&expect).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn cp_path_matches_dense_path() {
+        let mut rng = Rng::seed_from_u64(2);
+        let cp = CpTensor::randn(&mut rng, &[6, 5, 4], 3);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[6, 5, 4], 3);
+        let hcs = HigherOrderCountSketch::new(mh);
+        let via_cp = hcs.apply_cp(&cp);
+        let via_dense = hcs.apply_dense(&cp.to_dense());
+        assert!(via_cp.sub(&via_dense).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn decode_unbiased() {
+        let mut rng = Rng::seed_from_u64(3);
+        let shape = [4usize, 4, 4];
+        let mut t = Tensor::zeros(&shape);
+        t.set(&[2, 1, 3], 4.0);
+        let trials = 3000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, 3);
+            let hcs = HigherOrderCountSketch::new(mh);
+            let sk = hcs.apply_dense(&t);
+            acc += hcs.decode(&sk, &[2, 1, 3]);
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 4.0).abs() < 0.35, "mean={mean}");
+    }
+
+    #[test]
+    fn preserves_frobenius_in_expectation() {
+        let mut rng = Rng::seed_from_u64(4);
+        let t = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let t2 = t.frob_norm().powi(2);
+        let trials = 400;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &[5, 5, 5], 4);
+            let hcs = HigherOrderCountSketch::new(mh);
+            acc += hcs.apply_dense(&t).frob_norm().powi(2);
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - t2).abs() / t2 < 0.15, "mean={mean} t2={t2}");
+    }
+}

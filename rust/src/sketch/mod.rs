@@ -1,0 +1,25 @@
+//! The paper's four sketching operators and the contraction estimators built
+//! on them.
+//!
+//! | Operator | Definition | CP fast path | Output |
+//! |---|---|---|---|
+//! | [`cs::CountSketch`] | Def. 1 | — | `R^J` |
+//! | [`ts::TensorSketch`] | Def. 2 | circular conv (Eq. 3) | `R^J` |
+//! | [`hcs::HigherOrderCountSketch`] | Def. 3 | outer product (Eq. 5) | `R^{J_1×…×J_N}` |
+//! | [`fcs::FastCountSketch`] | Def. 4 | **linear conv (Eq. 8)** | `R^{J̃}`, `J̃ = ΣJ_n−N+1` |
+
+pub mod common;
+pub mod cs;
+pub mod estimator;
+pub mod fcs;
+pub mod hcs;
+pub mod ts;
+
+pub use cs::CountSketch;
+pub use estimator::{
+    build_equalized, elementwise_median, ContractionEstimator, CsEstimator, FcsEstimator,
+    HcsEstimator, Method, PlainEstimator, TsEstimator,
+};
+pub use fcs::FastCountSketch;
+pub use hcs::HigherOrderCountSketch;
+pub use ts::TensorSketch;

@@ -1,0 +1,132 @@
+//! Tensor sketch (Definition 2, Pham & Pagh): buckets by
+//! `(Σ_n h_n(i_n)) mod J`, which for CP tensors is the mode-J **circular**
+//! convolution of the per-mode count sketches (Eq. 3).
+
+use super::common::{sketch_dense, sketch_dense_into};
+use super::cs::CountSketch;
+use crate::fft;
+use crate::hash::ModeHashes;
+use crate::tensor::{CpTensor, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct TensorSketch {
+    pub hashes: ModeHashes,
+    pub modes: Vec<CountSketch>,
+    pub j: usize,
+}
+
+impl TensorSketch {
+    /// Build from shared hash draws (TS and FCS are "equalized" by handing
+    /// both the same `ModeHashes`, as the paper does in §4.1).
+    pub fn new(hashes: ModeHashes) -> Self {
+        let j = hashes.modes[0].range;
+        assert!(
+            hashes.modes.iter().all(|m| m.range == j),
+            "TS needs uniform hash ranges"
+        );
+        let modes = hashes.modes.iter().map(|t| CountSketch::new(t.clone())).collect();
+        Self { hashes, modes, j }
+    }
+
+    pub fn order(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// Sketch a general dense tensor — `O(nnz(T))` (Eq. 2).
+    pub fn apply_dense(&self, t: &Tensor) -> Vec<f64> {
+        sketch_dense(t, &self.hashes, Some(self.j))
+    }
+
+    /// In-place variant for the hot path.
+    pub fn apply_dense_into(&self, t: &Tensor, out: &mut [f64]) {
+        sketch_dense_into(t, &self.hashes, Some(self.j), out);
+    }
+
+    /// Sketch a CP tensor by circular convolution of per-mode count sketches
+    /// (Eq. 3) — `O(max_n nnz(U^{(n)}) + R·J log J)`.
+    pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let mut out = vec![0.0; self.j];
+        for r in 0..cp.rank() {
+            let sketched: Vec<Vec<f64>> = self
+                .modes
+                .iter()
+                .zip(&cp.factors)
+                .map(|(cs, u)| cs.apply(u.col(r)))
+                .collect();
+            let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
+            let conv = fft::conv_circular_many(&refs);
+            crate::linalg::axpy(cp.lambda[r], &conv, &mut out);
+        }
+        out
+    }
+
+    /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` without materializing it.
+    pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
+        assert_eq!(vs.len(), self.order());
+        let sketched: Vec<Vec<f64>> = self
+            .modes
+            .iter()
+            .zip(vs)
+            .map(|(cs, v)| cs.apply(v))
+            .collect();
+        let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
+        fft::conv_circular_many(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn cp_path_matches_dense_path() {
+        // Eq. 3 == Eq. 2 on the materialized tensor.
+        let mut rng = Rng::seed_from_u64(1);
+        let cp = CpTensor::randn(&mut rng, &[6, 5, 4], 3);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[6, 5, 4], 8);
+        let ts = TensorSketch::new(mh);
+        let via_cp = ts.apply_cp(&cp);
+        let via_dense = ts.apply_dense(&cp.to_dense());
+        for (a, b) in via_cp.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rank1_matches_dense() {
+        let mut rng = Rng::seed_from_u64(2);
+        let u = rng.normal_vec(7);
+        let v = rng.normal_vec(5);
+        let w = rng.normal_vec(6);
+        let mh = ModeHashes::draw_uniform(&mut rng, &[7, 5, 6], 10);
+        let ts = TensorSketch::new(mh);
+        let fast = ts.apply_rank1(&[&u, &v, &w]);
+        let dense = ts.apply_dense(&crate::tensor::outer(&[&u, &v, &w]));
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inner_product_unbiased() {
+        // E[⟨TS(M), TS(N)⟩] = ⟨M, N⟩
+        let mut rng = Rng::seed_from_u64(3);
+        let m = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let n = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let truth = m.inner(&n);
+        let trials = 1500;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(&mut rng, &[5, 5, 5], 24);
+            let ts = TensorSketch::new(mh);
+            acc += crate::linalg::dot(&ts.apply_dense(&m), &ts.apply_dense(&n));
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - truth).abs() < 0.75,
+            "mean={mean} truth={truth}"
+        );
+    }
+}

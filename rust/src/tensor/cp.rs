@@ -1,0 +1,200 @@
+//! CP (CANDECOMP/PARAFAC) tensor: `T ≈ Σ_r λ_r u_r^{(1)} ∘ … ∘ u_r^{(N)}
+//! = [λ; U^{(1)}, …, U^{(N)}]`.
+
+use super::dense::Tensor;
+use crate::linalg::Matrix;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpTensor {
+    pub lambda: Vec<f64>,
+    /// factors[n] is `U^{(n)} ∈ R^{I_n × R}`.
+    pub factors: Vec<Matrix>,
+}
+
+impl CpTensor {
+    pub fn new(lambda: Vec<f64>, factors: Vec<Matrix>) -> Self {
+        let r = lambda.len();
+        assert!(!factors.is_empty());
+        for f in &factors {
+            assert_eq!(f.cols, r, "factor rank mismatch");
+        }
+        Self { lambda, factors }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lambda.len()
+    }
+
+    pub fn order(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.rows).collect()
+    }
+
+    /// Random CP tensor with iid Gaussian factors.
+    pub fn randn(rng: &mut Rng, shape: &[usize], rank: usize) -> Self {
+        let factors = shape.iter().map(|&d| Matrix::randn(rng, d, rank)).collect();
+        Self::new(vec![1.0; rank], factors)
+    }
+
+    /// Symmetric CP tensor `Σ_r u_r ∘ u_r ∘ u_r` with orthonormal `{u_r}`
+    /// (the paper's synthetic setup, §4.1.1).
+    pub fn random_orthogonal_symmetric(rng: &mut Rng, dim: usize, rank: usize, order: usize) -> Self {
+        let u = crate::linalg::random_orthonormal(rng, dim, rank);
+        Self::new(vec![1.0; rank], vec![u; order])
+    }
+
+    /// Asymmetric CP tensor with per-mode random orthonormal factors
+    /// (§4.1.2 synthetic setup).
+    pub fn random_orthogonal(rng: &mut Rng, shape: &[usize], rank: usize) -> Self {
+        let factors = shape
+            .iter()
+            .map(|&d| crate::linalg::random_orthonormal(rng, d, rank))
+            .collect();
+        Self::new(vec![1.0; rank], factors)
+    }
+
+    /// `vec(T) = (U^{(N)} ⊙ … ⊙ U^{(1)}) λ` (column-major Khatri-Rao chain).
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut acc = self.factors[0].clone();
+        for f in &self.factors[1..] {
+            acc = f.khatri_rao(&acc);
+        }
+        acc.matvec(&self.lambda)
+    }
+
+    /// Materialize to a dense tensor.
+    pub fn to_dense(&self) -> Tensor {
+        Tensor::from_data(&self.shape(), self.to_vec())
+    }
+
+    /// Frobenius norm via the Gram trick:
+    /// `‖T‖² = λ^T (⊛_n U^{(n)T} U^{(n)}) λ` — no materialization.
+    pub fn frob_norm(&self) -> f64 {
+        let r = self.rank();
+        let mut g = Matrix::from_fn(r, r, |_, _| 1.0);
+        for f in &self.factors {
+            g = g.hadamard(&f.t_matmul(f));
+        }
+        let gl = g.matvec(&self.lambda);
+        crate::linalg::dot(&self.lambda, &gl).max(0.0).sqrt()
+    }
+
+    /// Inner product with a dense tensor without materializing `self`:
+    /// `⟨T, X⟩ = Σ_r λ_r X(u_r^{(1)}, …, u_r^{(N)})`.
+    pub fn inner_dense(&self, x: &Tensor) -> f64 {
+        assert_eq!(self.shape(), x.shape);
+        let mut acc = 0.0;
+        for r in 0..self.rank() {
+            let vs: Vec<&[f64]> = self.factors.iter().map(|f| f.col(r)).collect();
+            acc += self.lambda[r] * super::ops::multilinear_form(x, &vs);
+        }
+        acc
+    }
+
+    /// Normalize each factor column to unit norm, absorbing magnitudes into
+    /// `lambda`. Standard CPD post-processing.
+    pub fn normalize(&mut self) {
+        for r in 0..self.rank() {
+            let mut mag = 1.0;
+            for f in self.factors.iter_mut() {
+                let n = crate::linalg::normalize(f.col_mut(r));
+                mag *= n;
+            }
+            self.lambda[r] *= mag;
+        }
+    }
+
+    /// Residual `‖X − T̂‖ / ‖X‖` against a dense reference.
+    pub fn residual(&self, x: &Tensor) -> f64 {
+        // ‖X − T‖² = ‖X‖² − 2⟨T, X⟩ + ‖T‖² — avoids materializing T for
+        // large X... but for numerical safety at small residuals we
+        // materialize when modest size.
+        if x.numel() <= 1 << 24 {
+            self.to_dense().sub(x).frob_norm() / x.frob_norm()
+        } else {
+            let t2 = self.frob_norm().powi(2);
+            let x2 = x.frob_norm().powi(2);
+            let tx = self.inner_dense(x);
+            ((x2 - 2.0 * tx + t2).max(0.0)).sqrt() / x2.sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_dense_matches_elementwise() {
+        let mut rng = Rng::seed_from_u64(1);
+        let cp = CpTensor::randn(&mut rng, &[3, 4, 5], 2);
+        let t = cp.to_dense();
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    let mut expect = 0.0;
+                    for r in 0..2 {
+                        expect += cp.lambda[r]
+                            * cp.factors[0].get(i, r)
+                            * cp.factors[1].get(j, r)
+                            * cp.factors[2].get(k, r);
+                    }
+                    assert!((t.get(&[i, j, k]) - expect).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_norm_matches_dense() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut cp = CpTensor::randn(&mut rng, &[4, 5, 6], 3);
+        cp.lambda = vec![0.5, -2.0, 1.5];
+        let dense_norm = cp.to_dense().frob_norm();
+        assert!((cp.frob_norm() - dense_norm).abs() < 1e-10);
+    }
+
+    #[test]
+    fn symmetric_orthogonal_unit_lambda_norm() {
+        let mut rng = Rng::seed_from_u64(3);
+        let cp = CpTensor::random_orthogonal_symmetric(&mut rng, 10, 4, 3);
+        // orthonormal factors => ‖T‖² = Σ λ_r² = R
+        assert!((cp.frob_norm() - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn inner_dense_matches_materialized() {
+        let mut rng = Rng::seed_from_u64(4);
+        let cp = CpTensor::randn(&mut rng, &[3, 3, 3], 2);
+        let x = Tensor::randn(&mut rng, &[3, 3, 3]);
+        let direct = cp.to_dense().inner(&x);
+        assert!((cp.inner_dense(&x) - direct).abs() < 1e-10);
+    }
+
+    #[test]
+    fn normalize_preserves_tensor() {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut cp = CpTensor::randn(&mut rng, &[4, 4, 4], 3);
+        let before = cp.to_dense();
+        cp.normalize();
+        let after = cp.to_dense();
+        assert!(before.sub(&after).frob_norm() < 1e-10);
+        for f in &cp.factors {
+            for r in 0..3 {
+                assert!((crate::linalg::norm2(f.col(r)) - 1.0).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_zero_for_exact() {
+        let mut rng = Rng::seed_from_u64(6);
+        let cp = CpTensor::randn(&mut rng, &[5, 5, 5], 2);
+        let x = cp.to_dense();
+        assert!(cp.residual(&x) < 1e-12);
+    }
+}

@@ -1,0 +1,244 @@
+//! Dense tensor in **column-major** (MATLAB / paper) layout: the first index
+//! varies fastest, so `data` *is* `vec(T)` in the paper's sense
+//! (`l = Σ_n (i_n − 1) Π_{j<n} I_j + 1`, 0-based here).
+
+use crate::hash::{ravel_colmajor, unravel_colmajor};
+use crate::linalg::Matrix;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    /// Column-major flattened entries — equal to `vec(T)`.
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_data(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> f64) -> Self {
+        let mut t = Self::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for l in 0..t.numel() {
+            unravel_colmajor(l, shape, &mut idx);
+            t.data[l] = f(&idx);
+        }
+        t
+    }
+
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[ravel_colmajor(idx, &self.shape)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let l = ravel_colmajor(idx, &self.shape);
+        self.data[l] = v;
+    }
+
+    /// `vec(T)` — a borrow of the column-major data.
+    #[inline]
+    pub fn as_vec(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        crate::linalg::norm2(&self.data)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor::from_data(&self.shape, data)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor::from_data(&self.shape, data)
+    }
+
+    pub fn scaled(&self, k: f64) -> Tensor {
+        Tensor::from_data(&self.shape, self.data.iter().map(|v| v * k).collect())
+    }
+
+    /// Add iid Gaussian noise with std `sigma` in place.
+    pub fn add_noise(&mut self, rng: &mut Rng, sigma: f64) {
+        for v in self.data.iter_mut() {
+            *v += sigma * rng.normal();
+        }
+    }
+
+    /// Mode-n matricization `T_(n) ∈ R^{I_n × Π_{i≠n} I_i}` with the other
+    /// modes flattened column-major in increasing mode order (MATLAB
+    /// convention, as used by the paper's ALS Eq. 18).
+    pub fn matricize(&self, mode: usize) -> Matrix {
+        let n = self.order();
+        assert!(mode < n);
+        let rows = self.shape[mode];
+        let cols = self.numel() / rows;
+        let mut m = Matrix::zeros(rows, cols);
+        let mut idx = vec![0usize; n];
+        for l in 0..self.numel() {
+            unravel_colmajor(l, &self.shape, &mut idx);
+            let i = idx[mode];
+            // column index: flatten remaining modes in increasing order
+            let mut col = 0usize;
+            let mut stride = 1usize;
+            for d in 0..n {
+                if d == mode {
+                    continue;
+                }
+                col += idx[d] * stride;
+                stride *= self.shape[d];
+            }
+            m.set(i, col, self.data[l]);
+        }
+        m
+    }
+
+    /// Inverse of `matricize`: fold a matrix back along `mode`.
+    pub fn fold(m: &Matrix, mode: usize, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let n = shape.len();
+        let mut idx = vec![0usize; n];
+        for l in 0..t.numel() {
+            unravel_colmajor(l, shape, &mut idx);
+            let i = idx[mode];
+            let mut col = 0usize;
+            let mut stride = 1usize;
+            for d in 0..n {
+                if d == mode {
+                    continue;
+                }
+                col += idx[d] * stride;
+                stride *= shape[d];
+            }
+            t.data[l] = m.get(i, col);
+        }
+        t
+    }
+
+    /// Tensor inner product `⟨M, N⟩ = vec(M)^T vec(N)`.
+    pub fn inner(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        crate::linalg::dot(&self.data, &other.data)
+    }
+
+    /// Relative Frobenius error `‖self − other‖ / ‖other‖`.
+    pub fn rel_error(&self, reference: &Tensor) -> f64 {
+        self.sub(reference).frob_norm() / reference.frob_norm()
+    }
+
+    /// A random dense tensor with iid uniform entries.
+    pub fn rand_uniform(rng: &mut Rng, shape: &[usize], lo: f64, hi: f64) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_data(shape, rng.uniform_vec(n, lo, hi))
+    }
+
+    /// A random dense tensor with iid standard normal entries.
+    pub fn randn(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_data(shape, rng.normal_vec(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colmajor_layout() {
+        // 2x3 tensor: vec order is (0,0),(1,0),(0,1),(1,1),(0,2),(1,2)
+        let t = Tensor::from_fn(&[2, 3], |idx| (idx[0] * 10 + idx[1]) as f64);
+        assert_eq!(t.data, vec![0.0, 10.0, 1.0, 11.0, 2.0, 12.0]);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = Tensor::zeros(&[3, 4, 5]);
+        t.set(&[2, 1, 4], 7.0);
+        assert_eq!(t.get(&[2, 1, 4]), 7.0);
+        assert_eq!(t.nnz(), 1);
+    }
+
+    #[test]
+    fn matricize_mode0_of_matrix_is_identityish() {
+        let t = Tensor::from_fn(&[3, 4], |idx| (idx[0] * 4 + idx[1]) as f64);
+        let m = t.matricize(0);
+        assert_eq!((m.rows, m.cols), (3, 4));
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(m.get(i, j), t.get(&[i, j]));
+            }
+        }
+    }
+
+    #[test]
+    fn matricize_fold_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tensor::randn(&mut rng, &[3, 4, 5]);
+        for mode in 0..3 {
+            let m = t.matricize(mode);
+            let back = Tensor::fold(&m, mode, &t.shape);
+            assert_eq!(back, t, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn matricize_shapes() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!((t.matricize(0).rows, t.matricize(0).cols), (2, 12));
+        assert_eq!((t.matricize(1).rows, t.matricize(1).cols), (3, 8));
+        assert_eq!((t.matricize(2).rows, t.matricize(2).cols), (4, 6));
+    }
+
+    #[test]
+    fn inner_product_is_vec_dot() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Tensor::randn(&mut rng, &[4, 4, 4]);
+        let b = Tensor::randn(&mut rng, &[4, 4, 4]);
+        let byhand: f64 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        assert!((a.inner(&b) - byhand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frob_matches_vec_norm() {
+        let mut rng = Rng::seed_from_u64(3);
+        let t = Tensor::randn(&mut rng, &[5, 6]);
+        assert!((t.frob_norm() - crate::linalg::norm2(t.as_vec())).abs() < 1e-14);
+    }
+
+    #[test]
+    fn noise_changes_entries() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut t = Tensor::zeros(&[10, 10]);
+        t.add_noise(&mut rng, 0.5);
+        assert!(t.frob_norm() > 0.0);
+        let std = t.frob_norm() / (t.numel() as f64).sqrt();
+        assert!((std - 0.5).abs() < 0.1, "std={std}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Tensor substrate: dense column-major tensors, CP decomposed tensors, and
+//! the contraction operations the paper accelerates.
+
+pub mod cp;
+pub mod dense;
+pub mod ops;
+
+pub use cp::CpTensor;
+pub use dense::Tensor;
+pub use ops::{
+    contract_all_but, contract_pair, kron_vecs_rev, mode_product_t, multilinear_form,
+    multilinear_transform, outer, t_iuu, t_uuu,
+};

@@ -1,0 +1,336 @@
+//! Tensor contractions — the operations the paper accelerates.
+//!
+//! Includes the RTPM contractions `T(u,u,u)` / `T(I,u,u)` (§2.1), the general
+//! multilinear form, mode-wise contractions for ALS (Eq. 18), the pairwise
+//! contraction `A ⊙_{p,q} B` (§4.3.2), and Kronecker/outer products.
+
+use super::dense::Tensor;
+use crate::linalg::Matrix;
+
+/// `T(u, u, u) = ⟨T, u ∘ u ∘ u⟩` for a 3rd-order cubical tensor — the RTPM
+/// eigenvalue evaluation.
+pub fn t_uuu(t: &Tensor, u: &[f64]) -> f64 {
+    crate::linalg::dot(&t_iuu(t, u), u)
+}
+
+/// `T(I, u, u)_i = Σ_{j,k} T_{ijk} u_j u_k` — the RTPM power-iteration map.
+/// Column-major fibers `T[:, j, k]` are contiguous, so this runs at memory
+/// bandwidth.
+pub fn t_iuu(t: &Tensor, u: &[f64]) -> Vec<f64> {
+    assert_eq!(t.order(), 3);
+    let (i1, i2, i3) = (t.shape[0], t.shape[1], t.shape[2]);
+    assert_eq!(u.len(), i2.max(i3));
+    assert_eq!(i2, i3, "t_iuu expects T with equal mode-2/3 dims");
+    let mut out = vec![0.0; i1];
+    for k in 0..i3 {
+        let uk = u[k];
+        if uk == 0.0 {
+            continue;
+        }
+        for j in 0..i2 {
+            let c = u[j] * uk;
+            if c == 0.0 {
+                continue;
+            }
+            let fiber = &t.data[(k * i2 + j) * i1..(k * i2 + j + 1) * i1];
+            crate::linalg::axpy(c, fiber, &mut out);
+        }
+    }
+    out
+}
+
+/// General multilinear form `T(v^{(1)}, …, v^{(N)}) = ⟨T, v^{(1)} ∘ … ⟩`.
+pub fn multilinear_form(t: &Tensor, vs: &[&[f64]]) -> f64 {
+    assert_eq!(vs.len(), t.order());
+    for (v, &d) in vs.iter().zip(&t.shape) {
+        assert_eq!(v.len(), d);
+    }
+    // Contract modes from last to first; each step reduces the trailing mode.
+    let mut cur = t.data.clone();
+    let mut shape = t.shape.clone();
+    while let Some(&last_dim) = shape.last() {
+        if shape.len() == 1 {
+            return crate::linalg::dot(&cur, vs[0]);
+        }
+        let v = vs[shape.len() - 1];
+        let inner: usize = shape[..shape.len() - 1].iter().product();
+        let mut next = vec![0.0; inner];
+        for k in 0..last_dim {
+            let c = v[k];
+            if c == 0.0 {
+                continue;
+            }
+            crate::linalg::axpy(c, &cur[k * inner..(k + 1) * inner], &mut next);
+        }
+        cur = next;
+        shape.pop();
+    }
+    unreachable!("empty tensor shape")
+}
+
+/// Contract every mode except `free_mode` with the given vectors:
+/// `out_j = Σ_{i_d, d≠free} T_{…} Π_{d≠free} v_d(i_d)`.
+/// `vs` has one entry per mode; `vs[free_mode]` is ignored.
+pub fn contract_all_but(t: &Tensor, free_mode: usize, vs: &[&[f64]]) -> Vec<f64> {
+    let n = t.order();
+    assert!(free_mode < n);
+    assert_eq!(vs.len(), n);
+    // Contract trailing modes down to free_mode, then leading modes.
+    let mut cur = t.data.clone();
+    let mut shape = t.shape.clone();
+    // Fold trailing modes (> free_mode), last first.
+    while shape.len() - 1 > free_mode {
+        let last = shape.len() - 1;
+        let v = vs[last];
+        assert_eq!(v.len(), shape[last]);
+        let inner: usize = shape[..last].iter().product();
+        let mut next = vec![0.0; inner];
+        for k in 0..shape[last] {
+            let c = v[k];
+            if c == 0.0 {
+                continue;
+            }
+            crate::linalg::axpy(c, &cur[k * inner..(k + 1) * inner], &mut next);
+        }
+        cur = next;
+        shape.pop();
+    }
+    // Fold leading modes (< free_mode), first mode fastest ⇒ contract mode 0
+    // repeatedly.
+    for d in 0..free_mode {
+        let v = vs[d];
+        let first = shape[0];
+        assert_eq!(v.len(), first);
+        let outer: usize = shape[1..].iter().product();
+        let mut next = vec![0.0; outer];
+        for (o, onext) in next.iter_mut().enumerate() {
+            let base = o * first;
+            *onext = crate::linalg::dot(&cur[base..base + first], v);
+        }
+        cur = next;
+        shape.remove(0);
+        let _ = d;
+    }
+    assert_eq!(shape.len(), 1);
+    cur
+}
+
+/// Multilinear (Tucker-style) transform `T(M_1, …, M_N)` with
+/// `M_n ∈ R^{I_n × J_n}` (§2.1). Implemented as successive mode-n products.
+pub fn multilinear_transform(t: &Tensor, mats: &[&Matrix]) -> Tensor {
+    assert_eq!(mats.len(), t.order());
+    let mut cur = t.clone();
+    for (mode, m) in mats.iter().enumerate() {
+        assert_eq!(m.rows, cur.shape[mode], "mode-{mode} dim mismatch");
+        cur = mode_product_t(&cur, mode, m);
+    }
+    cur
+}
+
+/// Mode-n product with `M^T`: replaces mode `n` of size `I_n` by size `J_n`
+/// where `M ∈ R^{I_n × J_n}` (i.e. contracts over the first index of `M`,
+/// matching the paper's `T(M_1, …, M_N)` convention).
+pub fn mode_product_t(t: &Tensor, mode: usize, m: &Matrix) -> Tensor {
+    let unfolded = t.matricize(mode); // I_n × rest
+    let new_unfolded = m.t_matmul(&unfolded); // J_n × rest
+    let mut new_shape = t.shape.clone();
+    new_shape[mode] = m.cols;
+    Tensor::fold(&new_unfolded, mode, &new_shape)
+}
+
+/// Outer product of vectors into a dense tensor (`u ∘ v ∘ …`).
+pub fn outer(vs: &[&[f64]]) -> Tensor {
+    let shape: Vec<usize> = vs.iter().map(|v| v.len()).collect();
+    // vec(u ∘ v ∘ w) = w ⊗ v ⊗ u; build iteratively.
+    let mut data = vs[0].to_vec();
+    for v in &vs[1..] {
+        let mut next = Vec::with_capacity(data.len() * v.len());
+        for &b in v.iter() {
+            for &a in data.iter() {
+                next.push(a * b);
+            }
+        }
+        data = next;
+    }
+    Tensor::from_data(&shape, data)
+}
+
+/// Kronecker product of vectors `⊗_{n=N}^{1} v_n = v_N ⊗ … ⊗ v_1` (which
+/// equals `vec(v_1 ∘ … ∘ v_N)`).
+pub fn kron_vecs_rev(vs: &[&[f64]]) -> Vec<f64> {
+    outer(vs).data
+}
+
+/// Pairwise contraction `A ⊙_{p,q} B`: contracts mode `p` of `A` with mode
+/// `q` of `B` (0-based), producing a tensor whose shape is A's other modes
+/// followed by B's other modes (§4.3.2 uses p = last, q = first).
+pub fn contract_pair(a: &Tensor, p: usize, b: &Tensor, q: usize) -> Tensor {
+    assert_eq!(a.shape[p], b.shape[q], "contraction dim mismatch");
+    let l = a.shape[p];
+    let ma = a.matricize(p); // L × (rest of A)
+    let mb = b.matricize(q); // L × (rest of B)
+    let prod = ma.t_matmul(&mb); // (rest A) × (rest B)
+    let mut shape: Vec<usize> = Vec::new();
+    for (d, &s) in a.shape.iter().enumerate() {
+        if d != p {
+            shape.push(s);
+        }
+    }
+    for (d, &s) in b.shape.iter().enumerate() {
+        if d != q {
+            shape.push(s);
+        }
+    }
+    let _ = l;
+    Tensor::from_data(&shape, prod.data)
+}
+
+/// Dense Kronecker product of two matrices as a `Tensor` of shape
+/// `[I1·I3, I2·I4]` (paper §4.3.1 compresses `A ⊗ B`).
+pub fn kron_matrix(a: &Matrix, b: &Matrix) -> Matrix {
+    a.kron(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::qcheck::qcheck;
+
+    fn naive_t_iuu(t: &Tensor, u: &[f64]) -> Vec<f64> {
+        let (i1, i2, i3) = (t.shape[0], t.shape[1], t.shape[2]);
+        let mut out = vec![0.0; i1];
+        for i in 0..i1 {
+            for j in 0..i2 {
+                for k in 0..i3 {
+                    out[i] += t.get(&[i, j, k]) * u[j] * u[k];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn t_iuu_matches_naive() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tensor::randn(&mut rng, &[6, 5, 5]);
+        let u = rng.normal_vec(5);
+        let fast = t_iuu(&t, &u);
+        let slow = naive_t_iuu(&t, &u);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn t_uuu_matches_inner_with_outer() {
+        let mut rng = Rng::seed_from_u64(2);
+        let t = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let u = rng.normal_vec(5);
+        let cube = outer(&[&u, &u, &u]);
+        assert!((t_uuu(&t, &u) - t.inner(&cube)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn multilinear_form_matches_outer_inner() {
+        qcheck(20, |g| {
+            let shape = g.shape(3, 2, 6);
+            let t = Tensor::randn(g.rng(), &shape);
+            let vs: Vec<Vec<f64>> = shape.iter().map(|&d| g.normal_vec(d)).collect();
+            let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+            let direct = multilinear_form(&t, &refs);
+            let viaouter = t.inner(&outer(&refs));
+            assert!((direct - viaouter).abs() < 1e-9, "{direct} vs {viaouter}");
+        });
+    }
+
+    #[test]
+    fn contract_all_but_matches_basis_trick() {
+        // contract_all_but(t, m, vs)[i] == multilinear_form with e_i at mode m
+        let mut rng = Rng::seed_from_u64(3);
+        let t = Tensor::randn(&mut rng, &[4, 3, 5]);
+        let v0 = rng.normal_vec(4);
+        let v1 = rng.normal_vec(3);
+        let v2 = rng.normal_vec(5);
+        for mode in 0..3 {
+            let out = contract_all_but(&t, mode, &[&v0, &v1, &v2]);
+            assert_eq!(out.len(), t.shape[mode]);
+            for i in 0..t.shape[mode] {
+                let mut basis = vec![0.0; t.shape[mode]];
+                basis[i] = 1.0;
+                let mut vs: Vec<&[f64]> = vec![&v0, &v1, &v2];
+                vs[mode] = &basis;
+                let expect = multilinear_form(&t, &vs);
+                assert!((out[i] - expect).abs() < 1e-9, "mode={mode} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn t_iuu_equals_contract_all_but() {
+        let mut rng = Rng::seed_from_u64(4);
+        let t = Tensor::randn(&mut rng, &[5, 5, 5]);
+        let u = rng.normal_vec(5);
+        let a = t_iuu(&t, &u);
+        let b = contract_all_but(&t, 0, &[&u, &u, &u]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn outer_vec_is_reversed_kron() {
+        // vec(u ∘ v) = v ⊗ u
+        let u = [1.0, 2.0];
+        let v = [3.0, 4.0, 5.0];
+        let t = outer(&[&u, &v]);
+        assert_eq!(t.data, vec![3.0, 6.0, 4.0, 8.0, 5.0, 10.0]);
+    }
+
+    #[test]
+    fn contract_pair_matches_naive() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = Tensor::randn(&mut rng, &[3, 4, 6]);
+        let b = Tensor::randn(&mut rng, &[6, 2, 5]);
+        let c = contract_pair(&a, 2, &b, 0);
+        assert_eq!(c.shape, vec![3, 4, 2, 5]);
+        for i1 in 0..3 {
+            for i2 in 0..4 {
+                for i3 in 0..2 {
+                    for i4 in 0..5 {
+                        let mut expect = 0.0;
+                        for l in 0..6 {
+                            expect += a.get(&[i1, i2, l]) * b.get(&[l, i3, i4]);
+                        }
+                        assert!((c.get(&[i1, i2, i3, i4]) - expect).abs() < 1e-10);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multilinear_transform_identity_is_noop() {
+        let mut rng = Rng::seed_from_u64(6);
+        let t = Tensor::randn(&mut rng, &[3, 4, 5]);
+        let i3 = Matrix::identity(3);
+        let i4 = Matrix::identity(4);
+        let i5 = Matrix::identity(5);
+        let out = multilinear_transform(&t, &[&i3, &i4, &i5]);
+        assert!(out.sub(&t).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn multilinear_transform_rank1_check() {
+        // T = u∘v, T(a, b) = (u·a)(v·b) for column "matrices"
+        let u = [1.0, 2.0];
+        let v = [1.0, -1.0, 0.5];
+        let t = outer(&[&u, &v]);
+        let a = Matrix::from_data(2, 1, vec![3.0, 4.0]);
+        let b = Matrix::from_data(3, 1, vec![1.0, 1.0, 2.0]);
+        let out = multilinear_transform(&t, &[&a, &b]);
+        let expect = (1.0 * 3.0 + 2.0 * 4.0) * (1.0 - 1.0 + 1.0);
+        assert_eq!(out.shape, vec![1, 1]);
+        assert!((out.data[0] - expect).abs() < 1e-12);
+    }
+}

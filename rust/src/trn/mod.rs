@@ -1,0 +1,295 @@
+//! TRN training driver (Table 4 + the end-to-end example): owns parameter
+//! state in Rust, feeds the AOT-compiled XLA train-step in a loop, and
+//! evaluates accuracy with the infer artifact. Python never runs here.
+
+use crate::data::fmnist::{FmnistLike, IMG};
+use crate::hash::ModeHashes;
+use crate::runtime::{RuntimeHandle, TensorArg};
+use crate::util::prng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Activation tensor shape fed to the TRL (mirrors python model.ACT_SHAPE).
+pub const ACT_SHAPE: [usize; 3] = [7, 7, 32];
+pub const ACT_DIM: usize = 7 * 7 * 32;
+pub const NUM_CLASSES: usize = 10;
+
+/// Which sketched head a TRN artifact uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrnMethod {
+    Cs,
+    Ts,
+    Fcs,
+}
+
+impl TrnMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrnMethod::Cs => "cs",
+            TrnMethod::Ts => "ts",
+            TrnMethod::Fcs => "fcs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cs" => Some(TrnMethod::Cs),
+            "ts" => Some(TrnMethod::Ts),
+            "fcs" => Some(TrnMethod::Fcs),
+            _ => None,
+        }
+    }
+}
+
+/// The hash tables an artifact expects (per-mode + composite).
+pub struct TrnTables {
+    pub args: Vec<TensorArg>,
+}
+
+/// Build the eight table inputs for a (method, j, sketch_dim) artifact.
+/// `j` is the per-mode hash length; `sketch_dim` the sketch length.
+pub fn build_tables(rng: &mut Rng, method: TrnMethod, j: usize, sketch_dim: usize) -> TrnTables {
+    let mh = ModeHashes::draw_uniform(rng, &ACT_SHAPE, j);
+    let comp = mh.materialize_composite(); // col-major, buckets = Σ h_n
+    let (hx, sx): (Vec<i32>, Vec<f32>) = match method {
+        TrnMethod::Fcs => (
+            comp.h.iter().map(|&v| v as i32).collect(),
+            comp.s.iter().map(|&v| v as f32).collect(),
+        ),
+        TrnMethod::Ts => (
+            comp.h.iter().map(|&v| (v as usize % j) as i32).collect(),
+            comp.s.iter().map(|&v| v as f32).collect(),
+        ),
+        TrnMethod::Cs => {
+            // independent long hash pair over vec(act)
+            let pair = crate::hash::HashPair::draw(rng, ACT_DIM, sketch_dim);
+            let t = pair.materialize();
+            (
+                t.h.iter().map(|&v| v as i32).collect(),
+                t.s.iter().map(|&v| v as f32).collect(),
+            )
+        }
+    };
+    let mut args = Vec::with_capacity(8);
+    for m in &mh.modes {
+        args.push(TensorArg::i32(
+            &[m.domain()],
+            m.h.iter().map(|&v| v as i32).collect(),
+        ));
+        args.push(TensorArg::f32(
+            &[m.domain()],
+            m.s.iter().map(|&v| v as f32).collect(),
+        ));
+    }
+    args.push(TensorArg::i32(&[ACT_DIM], hx));
+    args.push(TensorArg::f32(&[ACT_DIM], sx));
+    TrnTables { args }
+}
+
+/// Initialize parameters to match the artifact's first 9 inputs
+/// (He-style init for conv kernels, small Gaussians for factors).
+pub fn init_params(rng: &mut Rng, shapes: &[(Vec<usize>, String)]) -> Vec<TensorArg> {
+    assert!(shapes.len() >= 9, "artifact should begin with 9 params");
+    shapes[..9]
+        .iter()
+        .map(|(shape, _)| {
+            let n: usize = shape.iter().product();
+            let fan_in: usize = if shape.len() == 4 {
+                shape[0] * shape[1] * shape[2] // HWIO conv kernel
+            } else {
+                shape.first().copied().unwrap_or(1)
+            };
+            let std = (2.0 / fan_in.max(1) as f64).sqrt() * 0.5;
+            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+            TensorArg::f32(shape, data)
+        })
+        .collect()
+}
+
+/// Configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct TrnRunConfig {
+    pub method: TrnMethod,
+    /// CR tag as used in artifact names, e.g. "20", "33p33".
+    pub cr_tag: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub seed: u64,
+    /// Print loss every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+/// Result of a run.
+#[derive(Debug, Clone)]
+pub struct TrnRunResult {
+    pub method: &'static str,
+    pub cr: f64,
+    pub losses: Vec<f64>,
+    pub accuracy: f64,
+    pub train_secs: f64,
+}
+
+/// Train a sketched TRN end-to-end through the XLA artifacts and report
+/// test accuracy.
+pub fn train_and_eval(rt: &RuntimeHandle, cfg: &TrnRunConfig) -> Result<TrnRunResult> {
+    let train_name = format!("trn_train_{}_cr{}", cfg.method.name(), cfg.cr_tag);
+    let infer_name = format!("trn_infer_{}_cr{}", cfg.method.name(), cfg.cr_tag);
+    let entry = rt
+        .manifest()
+        .entries
+        .get(&train_name)
+        .ok_or_else(|| anyhow!("artifact {train_name} missing — run `make artifacts`"))?
+        .clone();
+    let batch = entry.meta_usize("batch").unwrap_or(64);
+    let j = entry
+        .meta_usize("j")
+        .ok_or_else(|| anyhow!("{train_name}: missing j"))?;
+    let sketch_dim = entry.meta_usize("sketch_dim").unwrap_or(j);
+    let cr = entry.meta_f64("cr").unwrap_or(0.0);
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut params = init_params(&mut rng, &entry.inputs);
+    let tables = build_tables(&mut rng, cfg.method, j, sketch_dim);
+    let train = FmnistLike::generate(&mut rng, cfg.train_size);
+    let test = FmnistLike::generate(&mut rng, cfg.test_size);
+
+    rt.warm(&train_name)?;
+    let sw = crate::util::timing::Stopwatch::start();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let (x, y) = train.batch(step * batch, batch);
+        let mut args = params.clone();
+        args.push(TensorArg::f32(&[batch, IMG, IMG, 1], x));
+        args.push(TensorArg::i32(&[batch], y));
+        args.push(TensorArg::scalar_f32(cfg.lr));
+        args.extend(tables.args.iter().cloned());
+        let outs = rt.run(&train_name, args)?;
+        // outputs: 9 updated params + loss
+        if outs.len() != 10 {
+            return Err(anyhow!("{train_name}: expected 10 outputs, got {}", outs.len()));
+        }
+        let loss = outs[9].data[0] as f64;
+        losses.push(loss);
+        params = outs[..9]
+            .iter()
+            .map(|t| TensorArg::f32(&t.shape, t.data.clone()))
+            .collect();
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            log::info!("{} step {step}: loss {loss:.4}", cfg.method.name());
+            println!("  [{}] step {step:4}: loss {loss:.4}", cfg.method.name());
+        }
+    }
+    let train_secs = sw.elapsed_secs();
+
+    // Evaluation.
+    rt.warm(&infer_name)?;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let nbatches = cfg.test_size / batch;
+    for bi in 0..nbatches.max(1) {
+        let (x, y) = test.batch(bi * batch, batch);
+        let mut args = params.clone();
+        args.push(TensorArg::f32(&[batch, IMG, IMG, 1], x));
+        args.extend(tables.args.iter().cloned());
+        let outs = rt.run(&infer_name, args)?;
+        let logits = &outs[0];
+        for row in 0..batch {
+            let pred = (0..NUM_CLASSES)
+                .max_by(|&a, &b| {
+                    logits.data[row * NUM_CLASSES + a]
+                        .partial_cmp(&logits.data[row * NUM_CLASSES + b])
+                        .unwrap()
+                })
+                .unwrap();
+            if pred as i32 == y[row] {
+                correct += 1;
+            }
+            seen += 1;
+        }
+    }
+    Ok(TrnRunResult {
+        method: cfg.method.name(),
+        cr,
+        losses,
+        accuracy: correct as f64 / seen as f64,
+        train_secs,
+    })
+}
+
+/// All CR tags present in the manifest for a given method, sorted ascending
+/// by CR value.
+pub fn available_cr_tags(rt: &RuntimeHandle, method: TrnMethod) -> Vec<(f64, String)> {
+    let prefix = format!("trn_train_{}_cr", method.name());
+    let mut out: Vec<(f64, String)> = rt
+        .manifest()
+        .entries
+        .iter()
+        .filter_map(|(name, e)| {
+            name.strip_prefix(&prefix)
+                .map(|tag| (e.meta_f64("cr").unwrap_or(0.0), tag.to_string()))
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_right_shapes_and_ranges() {
+        let mut rng = Rng::seed_from_u64(1);
+        for method in [TrnMethod::Cs, TrnMethod::Ts, TrnMethod::Fcs] {
+            let j = 11;
+            let sdim = match method {
+                TrnMethod::Fcs => 3 * j - 2,
+                _ => j,
+            };
+            let t = build_tables(&mut rng, method, j, sdim);
+            assert_eq!(t.args.len(), 8);
+            // composite bucket range check
+            let TensorArg::I32 { data, .. } = &t.args[6] else { panic!() };
+            assert_eq!(data.len(), ACT_DIM);
+            assert!(data.iter().all(|&v| (v as usize) < sdim), "{method:?}");
+            let TensorArg::F32 { data: s, .. } = &t.args[7] else { panic!() };
+            assert!(s.iter().all(|&v| v == 1.0 || v == -1.0));
+        }
+    }
+
+    #[test]
+    fn ts_composite_is_fcs_mod_j() {
+        let mut rng1 = Rng::seed_from_u64(5);
+        let mut rng2 = Rng::seed_from_u64(5);
+        let j = 9;
+        let f = build_tables(&mut rng1, TrnMethod::Fcs, j, 3 * j - 2);
+        let t = build_tables(&mut rng2, TrnMethod::Ts, j, j);
+        let TensorArg::I32 { data: hf, .. } = &f.args[6] else { panic!() };
+        let TensorArg::I32 { data: ht, .. } = &t.args[6] else { panic!() };
+        for (a, b) in hf.iter().zip(ht) {
+            assert_eq!((a % j as i32), *b);
+        }
+    }
+
+    #[test]
+    fn init_params_match_shapes() {
+        let mut rng = Rng::seed_from_u64(2);
+        let shapes: Vec<(Vec<usize>, String)> = vec![
+            (vec![3, 3, 1, 16], "float32".into()),
+            (vec![16], "float32".into()),
+            (vec![3, 3, 16, 32], "float32".into()),
+            (vec![32], "float32".into()),
+            (vec![7, 5], "float32".into()),
+            (vec![7, 5], "float32".into()),
+            (vec![32, 5], "float32".into()),
+            (vec![10, 5], "float32".into()),
+            (vec![10], "float32".into()),
+        ];
+        let params = init_params(&mut rng, &shapes);
+        assert_eq!(params.len(), 9);
+        for (p, (s, _)) in params.iter().zip(&shapes) {
+            assert_eq!(p.shape(), s.as_slice());
+        }
+    }
+}

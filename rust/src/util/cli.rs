@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `subcommand --key value --key=value --flag positional` layouts,
+//! which is all the `fcs` binary and the bench drivers need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut items: Vec<String> = iter.into_iter().collect();
+        if !items.is_empty() && !items[0].starts_with('-') {
+            out.subcommand = Some(items.remove(0));
+        }
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--lens 1000,2000,5000`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: `--key value` binds greedily, so bare flags go last (or use
+        // `--flag=1`); positionals come before the first option.
+        let a = parse("rtpm input.bin --dim 100 --rank=10 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("rtpm"));
+        assert_eq!(a.get("dim"), Some("100"));
+        assert_eq!(a.get_usize("rank", 0), 10);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --verbose");
+        assert!(a.flag("verbose"));
+        assert!(a.get("verbose").is_none());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("x --lens 1,2,3");
+        assert_eq!(a.get_usize_list("lens", &[9]), vec![1, 2, 3]);
+        assert_eq!(a.get_usize_list("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

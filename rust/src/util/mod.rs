@@ -1,0 +1,14 @@
+//! General-purpose substrates: PRNG, timing, JSON, parallelism, CLI parsing,
+//! and a mini property-testing framework. These replace crates that are not
+//! available in the offline build environment (rand, serde_json, rayon,
+//! clap, proptest).
+
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod prng;
+pub mod qcheck;
+pub mod timing;
+
+pub use prng::Rng;
+pub use timing::{median, timeit, Stopwatch, Summary};

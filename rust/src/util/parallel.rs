@@ -1,0 +1,115 @@
+//! Minimal data-parallel helpers built on `std::thread` (rayon is not
+//! available offline). Used for the D independent sketch repetitions and for
+//! embarrassingly-parallel bench sweeps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (logical cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Parallel map over `0..n` with dynamic (work-stealing-ish atomic counter)
+/// scheduling. Results are returned in index order. `f` must be `Sync`.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|_| {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                let mut guard = out.lock().unwrap();
+                for (i, v) in local {
+                    guard[i] = Some(v);
+                }
+            });
+        }
+    })
+    .expect("par_map worker panicked");
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|x| x.expect("par_map missing result"))
+        .collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    let threads = threads.max(1);
+    if threads == 1 || data.len() <= chunk {
+        for (ci, c) in data.chunks_mut(chunk).enumerate() {
+            f(ci, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let work = Mutex::new(chunks);
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|_| loop {
+                let item = work.lock().unwrap().pop();
+                match item {
+                    Some((ci, c)) => f(ci, c),
+                    None => break,
+                }
+            });
+        }
+    })
+    .expect("par_chunks_mut worker panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        let parallel = par_map(1000, 8, |i| i * i);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let v: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_all() {
+        let mut data = vec![0usize; 1003];
+        par_chunks_mut(&mut data, 64, 8, |_ci, c| {
+            for x in c.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+}

@@ -1,0 +1,124 @@
+//! Mini property-based testing framework (proptest is not available
+//! offline). Deterministic: every case derives from a fixed seed, and a
+//! failing case reports the seed + case index so it can be replayed.
+//!
+//! ```text
+//! use fcs::util::qcheck::{qcheck, Gen};
+//! qcheck(100, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.f64_vec(n, -1.0, 1.0);
+//!     let sum: f64 = xs.iter().sum();
+//!     assert!(sum.abs() <= n as f64);
+//! });
+//! ```
+//! (fenced as text: doctest binaries don't inherit the xla rpath)
+
+use crate::util::prng::Rng;
+
+/// Case-local generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Which case (0-based) is running — useful in failure messages.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn f64_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        self.rng.uniform_vec(n, lo, hi)
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normal_vec(n)
+    }
+
+    /// A random shape with `order` modes, each dim in `[lo, hi]`.
+    pub fn shape(&mut self, order: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..order).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Default seed; override with env var `QCHECK_SEED` to replay.
+fn base_seed() -> u64 {
+    std::env::var("QCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_BEEF)
+}
+
+/// Run `prop` against `cases` generated inputs. Panics (with replay info) on
+/// the first failing case. Catches property panics so the report includes
+/// seed and case index.
+pub fn qcheck<F: FnMut(&mut Gen)>(cases: usize, mut prop: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::seed_from_u64(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "qcheck property failed at case {case}/{cases} (replay: QCHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        qcheck(50, |g| {
+            let n = g.usize_in(0, 10);
+            assert!(n <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "qcheck property failed")]
+    fn reports_failure_with_seed() {
+        qcheck(50, |g| {
+            let n = g.usize_in(0, 10);
+            assert!(n < 10, "boom");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        qcheck(10, |g| {
+            first.push(g.usize_in(0, 1000));
+        });
+        let mut second: Vec<usize> = Vec::new();
+        qcheck(10, |g| {
+            second.push(g.usize_in(0, 1000));
+        });
+        assert_eq!(first, second);
+    }
+}

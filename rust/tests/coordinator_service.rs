@@ -1,0 +1,224 @@
+//! Coordinator invariants: exactly-once responses, backpressure, XLA/Rust
+//! numeric parity, batching behaviour, concurrent clients.
+
+use fcs::coordinator::{Request, Response, Service, ServiceConfig, ServiceError, SketchMethod};
+use fcs::runtime::spawn_runtime;
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use std::time::Duration;
+
+fn start_rust_only(workers: usize, cap: usize) -> Service {
+    Service::start(
+        ServiceConfig {
+            workers,
+            queue_capacity: cap,
+            batch_deadline: Duration::from_micros(300),
+            seed: 1,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+#[test]
+fn every_request_answered_exactly_once() {
+    let svc = start_rust_only(4, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(2);
+    let n = 200;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let x = rng.normal_vec(h.cs_in_dim);
+        rxs.push(h.submit(Request::CsVec { x }).unwrap());
+    }
+    for _ in 0..n {
+        let t = Tensor::randn(&mut rng, &[4, 5, 6]);
+        rxs.push(
+            h.submit(Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 16 })
+                .unwrap(),
+        );
+    }
+    let mut answered = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("one response").unwrap();
+        match resp {
+            Response::Sketch(v) => assert!(!v.is_empty()),
+            Response::Scalar(_) => panic!("unexpected scalar"),
+        }
+        // second recv must fail — exactly once
+        assert!(rx.try_recv().is_err());
+        answered += 1;
+    }
+    assert_eq!(answered, 2 * n);
+    let report = svc.stats();
+    assert_eq!(report.total_completed, 2 * n as u64);
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_returns_busy() {
+    // 1 worker, tiny queue, slow-ish jobs → must observe Busy.
+    let svc = start_rust_only(1, 2);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(3);
+    let mut busy = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..300 {
+        let t = Tensor::randn(&mut rng, &[12, 12, 12]);
+        match h.submit(Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 64 }) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServiceError::Busy) => busy += 1,
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    assert!(busy > 0, "expected at least one Busy rejection");
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(svc.stats().rejected_busy, busy as u64);
+    svc.shutdown();
+}
+
+#[test]
+fn bad_requests_rejected_upfront() {
+    let svc = start_rust_only(1, 8);
+    let h = svc.handle();
+    // wrong cs_vec dimension
+    assert!(matches!(
+        h.submit(Request::CsVec { x: vec![1.0; 3] }),
+        Err(ServiceError::BadRequest(_))
+    ));
+    // shape mismatch
+    let mut rng = Rng::seed_from_u64(4);
+    let a = Tensor::randn(&mut rng, &[3, 3, 3]);
+    let b = Tensor::randn(&mut rng, &[3, 3, 4]);
+    assert!(matches!(
+        h.submit(Request::InnerEstimate { a, b, method: SketchMethod::Fcs, j: 8, d: 3 }),
+        Err(ServiceError::BadRequest(_))
+    ));
+    svc.shutdown();
+}
+
+#[test]
+fn inner_estimate_converges_to_truth() {
+    let svc = start_rust_only(4, 256);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(5);
+    let a = Tensor::randn(&mut rng, &[8, 8, 8]);
+    let truth = a.inner(&a); // ⟨A, A⟩ = ‖A‖² — positive, easy target
+    let Response::Scalar(est) = h
+        .call(Request::InnerEstimate {
+            a: a.clone(),
+            b: a,
+            method: SketchMethod::Fcs,
+            j: 4096,
+            d: 15,
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert!(
+        (est - truth).abs() / truth < 0.25,
+        "estimate {est} vs truth {truth}"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn xla_and_rust_paths_agree() {
+    // When artifacts exist, the XLA-batched cs_vec must match the pure-Rust
+    // service (same seed ⇒ same shared hash table).
+    let Ok(rt) = spawn_runtime(None) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = ServiceConfig { seed: 99, ..Default::default() };
+    let xla_svc = Service::start(cfg.clone(), Some(rt.clone())).unwrap();
+    let rust_svc = Service::start(cfg, None).unwrap();
+    let (hx, hr) = (xla_svc.handle(), rust_svc.handle());
+    assert_eq!(hx.cs_in_dim, hr.cs_in_dim);
+    let mut rng = Rng::seed_from_u64(6);
+    for _ in 0..8 {
+        let x = rng.normal_vec(hx.cs_in_dim);
+        let Response::Sketch(a) = hx.call(Request::CsVec { x: x.clone() }).unwrap() else {
+            panic!()
+        };
+        let Response::Sketch(b) = hr.call(Request::CsVec { x }).unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.len(), b.len());
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-3 * (1.0 + q.abs()), "{p} vs {q}");
+        }
+    }
+    // CP sketching through the fcs_rank1 artifact must return the right
+    // length and finite values.
+    let e = rt.manifest().entries.get("fcs_rank1").unwrap().clone();
+    let dim = e.meta_usize("dim").unwrap();
+    let rank = e.meta_usize("rank").unwrap();
+    let j = e.meta_usize("j").unwrap();
+    let cp = CpTensor::randn(&mut rng, &[dim, dim, dim], rank);
+    let Response::Sketch(sk) = hx.call(Request::SketchCp { cp, j }).unwrap() else {
+        panic!()
+    };
+    assert_eq!(sk.len(), 3 * j - 2);
+    assert!(sk.iter().all(|v| v.is_finite()));
+    xla_svc.shutdown();
+    rust_svc.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let svc = start_rust_only(4, 4096);
+    let h = svc.handle();
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(t);
+                let mut ok = 0;
+                for _ in 0..50 {
+                    let x = rng.normal_vec(h.cs_in_dim);
+                    loop {
+                        match h.call(Request::CsVec { x: x.clone() }) {
+                            Ok(Response::Sketch(v)) => {
+                                assert_eq!(v.len(), h.cs_out_dim);
+                                ok += 1;
+                                break;
+                            }
+                            Ok(_) => panic!("wrong response type"),
+                            Err(ServiceError::Busy) => std::thread::yield_now(),
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(total, 400);
+    let report = svc.stats();
+    assert!(report.batches > 0);
+    assert!(report.mean_batch_fill >= 1.0);
+    svc.shutdown();
+}
+
+#[test]
+fn batches_respect_capacity() {
+    // mean batch fill must never exceed the artifact batch size (32).
+    let svc = start_rust_only(2, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut rxs = Vec::new();
+    for _ in 0..500 {
+        rxs.push(h.submit(Request::CsVec { x: rng.normal_vec(h.cs_in_dim) }).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = svc.stats();
+    assert!(report.mean_batch_fill <= 32.0 + 1e-9);
+    svc.shutdown();
+}

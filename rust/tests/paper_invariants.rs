@@ -1,0 +1,132 @@
+//! Cross-module property tests of the paper's core identities, using the
+//! qcheck mini-framework over randomized shapes.
+
+use fcs::hash::ModeHashes;
+use fcs::sketch::{FastCountSketch, HigherOrderCountSketch, TensorSketch};
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::qcheck::qcheck;
+
+#[test]
+fn fcs_definition_eq6_random_shapes() {
+    // FCS(T) == CS(vec(T); composite hashes) for random shapes/orders.
+    qcheck(40, |g| {
+        let order = g.usize_in(2, 4);
+        let shape = g.shape(order, 2, 6);
+        let j = g.usize_in(2, 12);
+        let t = Tensor::randn(g.rng(), &shape);
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+        let fcs = FastCountSketch::new(mh);
+        let fast = fcs.apply_dense(&t);
+        let def = fcs.apply_via_composite_cs(&t);
+        for (a, b) in fast.iter().zip(&def) {
+            assert!((a - b).abs() < 1e-10, "case {}", g.case);
+        }
+    });
+}
+
+#[test]
+fn cp_fast_paths_match_dense_random() {
+    // Eq. 3 (TS circular), Eq. 5 (HCS outer), Eq. 8 (FCS linear) all equal
+    // their dense-path counterparts on random CP tensors.
+    qcheck(25, |g| {
+        let shape = g.shape(3, 2, 6);
+        let rank = g.usize_in(1, 3);
+        let j = g.usize_in(2, 8);
+        let cp = CpTensor::randn(g.rng(), &shape, rank);
+        let dense = cp.to_dense();
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+
+        let ts = TensorSketch::new(mh.clone());
+        let (a, b) = (ts.apply_cp(&cp), ts.apply_dense(&dense));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-8, "ts case {}", g.case);
+        }
+
+        let fcs = FastCountSketch::new(mh.clone());
+        let (a, b) = (fcs.apply_cp(&cp), fcs.apply_dense(&dense));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-8, "fcs case {}", g.case);
+        }
+
+        let hcs = HigherOrderCountSketch::new(mh);
+        let (a, b) = (hcs.apply_cp(&cp), hcs.apply_dense(&dense));
+        assert!(a.sub(&b).frob_norm() < 1e-8, "hcs case {}", g.case);
+    });
+}
+
+#[test]
+fn ts_is_modular_fold_of_fcs_random() {
+    // The structural relation behind Proposition 1.
+    qcheck(30, |g| {
+        let order = g.usize_in(2, 4);
+        let shape = g.shape(order, 2, 5);
+        let j = g.usize_in(2, 9);
+        let t = Tensor::randn(g.rng(), &shape);
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+        let fcs = FastCountSketch::new(mh.clone()).apply_dense(&t);
+        let ts = TensorSketch::new(mh).apply_dense(&t);
+        let mut folded = vec![0.0; j];
+        for (k, &v) in fcs.iter().enumerate() {
+            folded[k % j] += v;
+        }
+        for (x, y) in folded.iter().zip(&ts) {
+            assert!((x - y).abs() < 1e-10, "case {}", g.case);
+        }
+    });
+}
+
+#[test]
+fn sketch_linearity_random() {
+    // sketch(αA + B) = α·sketch(A) + sketch(B) — the property deflation
+    // relies on.
+    qcheck(30, |g| {
+        let shape = g.shape(3, 2, 5);
+        let j = g.usize_in(2, 10);
+        let a = Tensor::randn(g.rng(), &shape);
+        let b = Tensor::randn(g.rng(), &shape);
+        let alpha = g.f64_in(-3.0, 3.0);
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+        let fcs = FastCountSketch::new(mh);
+        let lhs = fcs.apply_dense(&a.scaled(alpha).add(&b));
+        let ra = fcs.apply_dense(&a);
+        let rb = fcs.apply_dense(&b);
+        for (k, &l) in lhs.iter().enumerate() {
+            assert!((l - (alpha * ra[k] + rb[k])).abs() < 1e-9, "case {}", g.case);
+        }
+    });
+}
+
+#[test]
+fn frobenius_preserved_in_expectation_fcs() {
+    // Consistency backbone of Proposition 1: E‖FCS(T)‖² = ‖T‖².
+    let mut errs = Vec::new();
+    qcheck(6, |g| {
+        let shape = g.shape(3, 3, 5);
+        let t = Tensor::randn(g.rng(), &shape);
+        let t2 = t.frob_norm().powi(2);
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mh = ModeHashes::draw_uniform(g.rng(), &shape, 24);
+            acc += fcs::linalg::norm2(&FastCountSketch::new(mh).apply_dense(&t)).powi(2);
+        }
+        errs.push(((acc / trials as f64) - t2).abs() / t2);
+    });
+    let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(mean_err < 0.12, "mean rel err {mean_err}");
+}
+
+#[test]
+fn j_tilde_formula_random() {
+    qcheck(40, |g| {
+        let order = g.usize_in(2, 5);
+        let shape = g.shape(order, 2, 5);
+        let ranges: Vec<usize> = (0..order).map(|_| g.usize_in(2, 9)).collect();
+        let mh = ModeHashes::draw(g.rng(), &shape, &ranges);
+        let expect: usize = ranges.iter().sum::<usize>() - order + 1;
+        assert_eq!(mh.composite_range(), expect);
+        // max composite bucket is exactly J̃ − 1-reachable bound
+        let maxh: usize = mh.modes.iter().map(|m| m.range - 1).sum();
+        assert_eq!(maxh, expect - 1);
+    });
+}

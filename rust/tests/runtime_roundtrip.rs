@@ -1,0 +1,137 @@
+//! Integration: AOT HLO-text artifacts load, compile, and execute through
+//! the PJRT runtime with numerics matching the pure-Rust implementation.
+
+use fcs::hash::ModeHashes;
+use fcs::runtime::{spawn_runtime, TensorArg};
+use fcs::sketch::{CountSketch, FastCountSketch};
+use fcs::tensor::CpTensor;
+use fcs::util::prng::Rng;
+
+fn runtime() -> Option<fcs::runtime::RuntimeHandle> {
+    match spawn_runtime(None) {
+        Ok(h) => Some(h),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cs_batch_artifact_matches_rust_kernel() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.manifest().entries.get("cs_batch").expect("cs_batch in manifest").clone();
+    let b = entry.meta_usize("batch").unwrap();
+    let i = entry.meta_usize("in_dim").unwrap();
+    let j = entry.meta_usize("out_dim").unwrap();
+
+    let mut rng = Rng::seed_from_u64(42);
+    let pair = fcs::hash::HashPair::draw(&mut rng, i, j);
+    let table = pair.materialize();
+    let cs = CountSketch::new(table.clone());
+
+    let x: Vec<f64> = rng.normal_vec(b * i);
+    // row-major [B, I] for XLA; rust side sketches each row
+    let args = vec![
+        TensorArg::f32_from_f64(&[b, i], &x),
+        TensorArg::i32(&[i], table.h.iter().map(|&v| v as i32).collect()),
+        TensorArg::f32(&[i], table.s.iter().map(|&v| v as f32).collect()),
+    ];
+    let out = rt.run("cs_batch", args).expect("execute cs_batch");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![b, j]);
+    for row in 0..b {
+        let xrow: Vec<f64> = x[row * i..(row + 1) * i].to_vec();
+        let expect = cs.apply(&xrow);
+        for col in 0..j {
+            let got = out[0].data[row * j + col] as f64;
+            assert!(
+                (got - expect[col]).abs() < 1e-3 * (1.0 + expect[col].abs()),
+                "row {row} col {col}: {got} vs {}",
+                expect[col]
+            );
+        }
+    }
+}
+
+#[test]
+fn fcs_rank1_artifact_matches_rust_fft_path() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.manifest().entries.get("fcs_rank1").expect("fcs_rank1").clone();
+    let dim = entry.meta_usize("dim").unwrap();
+    let rank = entry.meta_usize("rank").unwrap();
+    let j = entry.meta_usize("j").unwrap();
+
+    let mut rng = Rng::seed_from_u64(7);
+    let cp = CpTensor::randn(&mut rng, &[dim, dim, dim], rank);
+    let mh = ModeHashes::draw_uniform(&mut rng, &[dim, dim, dim], j);
+    let fcs = FastCountSketch::new(mh.clone());
+    let expect = fcs.apply_cp(&cp);
+
+    // XLA factor matrices are row-major [I, R]; our Matrix is col-major.
+    let to_rowmajor = |m: &fcs::linalg::Matrix| -> Vec<f32> {
+        let mut v = Vec::with_capacity(m.rows * m.cols);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                v.push(m.get(r, c) as f32);
+            }
+        }
+        v
+    };
+    let mut args = Vec::new();
+    for f in &cp.factors {
+        args.push(TensorArg::f32(&[dim, rank], to_rowmajor(f)));
+    }
+    args.push(TensorArg::f32(&[rank], cp.lambda.iter().map(|&l| l as f32).collect()));
+    for m in &mh.modes {
+        args.push(TensorArg::i32(&[dim], m.h.iter().map(|&v| v as i32).collect()));
+        args.push(TensorArg::f32(&[dim], m.s.iter().map(|&v| v as f32).collect()));
+    }
+    let out = rt.run("fcs_rank1", args).expect("execute fcs_rank1");
+    assert_eq!(out[0].shape, vec![3 * j - 2]);
+    let scale = fcs::linalg::norm2(&expect).max(1.0);
+    for (k, (&got, &want)) in out[0].data.iter().zip(&expect).enumerate() {
+        assert!(
+            ((got as f64) - want).abs() < 2e-4 * scale,
+            "k={k}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn runtime_handle_is_cloneable_and_concurrent() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.manifest().entries.get("cs_batch").unwrap().clone();
+    let b = entry.meta_usize("batch").unwrap();
+    let i = entry.meta_usize("in_dim").unwrap();
+    let j = entry.meta_usize("out_dim").unwrap();
+    rt.warm("cs_batch").unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(t);
+                let pair = fcs::hash::HashPair::draw(&mut rng, i, j);
+                let table = pair.materialize();
+                let x: Vec<f64> = rng.normal_vec(b * i);
+                let args = vec![
+                    TensorArg::f32_from_f64(&[b, i], &x),
+                    TensorArg::i32(&[i], table.h.iter().map(|&v| v as i32).collect()),
+                    TensorArg::f32(&[i], table.s.iter().map(|&v| v as f32).collect()),
+                ];
+                let out = rt.run("cs_batch", args).unwrap();
+                assert_eq!(out[0].shape, vec![b, j]);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.run("no_such_artifact", vec![]).unwrap_err();
+    assert!(err.to_string().contains("no_such_artifact"));
+}

@@ -1,0 +1,69 @@
+//! End-to-end TRN pipeline: train through the AOT XLA train-step artifact
+//! and verify learning actually happens (loss decreases, accuracy beats
+//! chance) for each sketched head.
+
+use fcs::runtime::spawn_runtime;
+use fcs::trn::{train_and_eval, TrnMethod, TrnRunConfig};
+
+fn quick_cfg(method: TrnMethod) -> TrnRunConfig {
+    TrnRunConfig {
+        method,
+        cr_tag: "200".into(), // smallest sketch → fastest artifact
+        steps: 40,
+        lr: 0.05,
+        train_size: 640,
+        test_size: 128,
+        seed: 42,
+        log_every: 0,
+    }
+}
+
+#[test]
+fn fcs_trn_learns() {
+    let Ok(rt) = spawn_runtime(None) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let res = train_and_eval(&rt, &quick_cfg(TrnMethod::Fcs)).unwrap();
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert!(
+        res.accuracy > 0.2,
+        "accuracy {} should beat chance (0.1)",
+        res.accuracy
+    );
+    assert!(res.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn all_methods_run_and_learn() {
+    let Ok(rt) = spawn_runtime(None) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for method in [TrnMethod::Cs, TrnMethod::Ts, TrnMethod::Fcs] {
+        let res = train_and_eval(&rt, &quick_cfg(method)).unwrap();
+        let first = res.losses.first().copied().unwrap();
+        let last = res.losses.last().copied().unwrap();
+        assert!(
+            last < first,
+            "{}: loss should fall: {first} -> {last}",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn cr_tags_enumerate() {
+    let Ok(rt) = spawn_runtime(None) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let tags = fcs::trn::available_cr_tags(&rt, TrnMethod::Fcs);
+    assert!(tags.len() >= 4, "expected ≥4 CRs, got {tags:?}");
+    // sorted ascending by CR value
+    for w in tags.windows(2) {
+        assert!(w[0].0 <= w[1].0);
+    }
+}
