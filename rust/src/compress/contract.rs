@@ -12,7 +12,7 @@
 //! that is exact by linearity of F⁻¹).
 
 use super::{fcs_j_for_size, hcs_j_for_size, median_inplace, Codec};
-use crate::fft::{self, C64};
+use crate::fft::{self, C64, FftWorkspace};
 use crate::hash::{HashPair, HashTable, ModeHashes};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
@@ -97,16 +97,17 @@ fn sketch_slice_2d(
     out
 }
 
-/// FCS (length 2J−1) of a matrix slice.
-fn fcs_slice(
+/// FCS (length 2J−1) of a matrix slice, accumulated into a caller-owned
+/// buffer — the slice loop in `compress` reuses it `L` times (§Perf).
+fn fcs_slice_into(
     slice: impl Fn(usize, usize) -> f64,
     rows: usize,
     cols: usize,
     hr: &HashTable,
     hc: &HashTable,
-    j: usize,
-) -> Vec<f64> {
-    let mut out = vec![0.0; 2 * j - 1];
+    out: &mut [f64],
+) {
+    out.fill(0.0);
     for c in 0..cols {
         let bc = hc.h(c);
         let sc = hc.s(c);
@@ -117,7 +118,6 @@ fn fcs_slice(
             }
         }
     }
-    out
 }
 
 impl ContractCodec {
@@ -193,31 +193,38 @@ impl ContractCodec {
                     let n = j_tilde.next_power_of_two();
                     // Accumulate Σ_l F(FCS(A_l))·F(FCS(B_l)) spectrally,
                     // using the real-pair packing trick (one FFT per slice
-                    // pair instead of two — §Perf).
+                    // pair instead of two), one workspace and one pair of
+                    // slice buffers reused across all L slices, and a single
+                    // inverse FFT at the end (§Perf).
+                    let mut ws = FftWorkspace::new();
                     let mut acc = vec![C64::default(); n];
+                    let mut prod: Vec<C64> = Vec::with_capacity(n);
+                    let mut fa = vec![0.0; 2 * j - 1];
+                    let mut fb = vec![0.0; 2 * j - 1];
                     for l in 0..l_dim {
-                        let fa = fcs_slice(
+                        fcs_slice_into(
                             |r, c| a.data[(l * i2n + c) * i1n + r],
                             i1n,
                             i2n,
                             &hashes.modes[0],
                             &hashes.modes[1],
-                            j,
+                            &mut fa,
                         );
-                        let fb = fcs_slice(
+                        fcs_slice_into(
                             |r, c| b.data[(c * i3n + r) * l_dim + l],
                             i3n,
                             i4n,
                             &hashes.modes[2],
                             &hashes.modes[3],
-                            j,
+                            &mut fb,
                         );
-                        let prod = fft::convolve::packed_product_spectrum(&fa, &fb, n);
+                        fft::convolve::packed_product_spectrum_into(&fa, &fb, n, &mut ws, &mut prod);
                         for (z, p) in acc.iter_mut().zip(&prod) {
                             *z += *p;
                         }
                     }
-                    let mut sketch = fft::ifft_to_real(acc);
+                    let mut sketch = Vec::with_capacity(n);
+                    fft::inverse_real_into(&mut acc, &mut ws, &mut sketch);
                     sketch.truncate(j_tilde);
                     Rep::Fcs { hashes, sketch }
                 }

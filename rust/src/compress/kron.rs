@@ -138,10 +138,15 @@ impl KronCodec {
                     let hashes = ModeHashes::draw_uniform(rng, &dims, j);
                     let j_tilde = 4 * j - 3;
                     // FCS(A) over modes (1,2): length 2J−1; same for B; then
-                    // one linear convolution — A⊗B never materialized.
+                    // one linear convolution — A⊗B never materialized. The
+                    // workspace keeps the convolution allocation-free.
                     let fa = fcs_matrix(a, &hashes.modes[0], &hashes.modes[1], j);
                     let fb = fcs_matrix(b, &hashes.modes[2], &hashes.modes[3], j);
-                    let mut sketch = fft::conv_linear(&fa, &fb);
+                    let mut ws = crate::fft::FftWorkspace::new();
+                    // Capacity = padded FFT length conv_linear_into fills
+                    // before truncating to 4J−3.
+                    let mut sketch = Vec::with_capacity(j_tilde.next_power_of_two());
+                    fft::conv_linear_into(&fa, &fb, &mut ws, &mut sketch);
                     debug_assert_eq!(sketch.len(), j_tilde);
                     sketch.truncate(j_tilde);
                     Rep::Fcs { hashes, sketch }

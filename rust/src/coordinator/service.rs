@@ -344,6 +344,9 @@ fn worker_loop(
     counter: Arc<AtomicU64>,
     stats: Arc<Stats>,
 ) {
+    // One FFT workspace per worker: sketch_cp requests at a steady shape run
+    // allocation-free after the first request (§Perf).
+    let mut ws = crate::fft::FftWorkspace::new();
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -355,7 +358,7 @@ fn worker_loop(
         let op = job.req.op_name();
         let req_id = counter.fetch_add(1, Ordering::Relaxed);
         let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
-        let result = execute_work(job.req, &runtime, &mut rng);
+        let result = execute_work(job.req, &runtime, &mut rng, &mut ws);
         let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
         stats.record(op, latency);
         let _ = job.reply.send(result);
@@ -366,6 +369,7 @@ fn execute_work(
     req: Request,
     runtime: &Option<RuntimeHandle>,
     rng: &mut Rng,
+    ws: &mut crate::fft::FftWorkspace,
 ) -> Result<Response, ServiceError> {
     match req {
         Request::CsVec { .. } => unreachable!("cs_vec is routed to the batcher"),
@@ -392,7 +396,11 @@ fn execute_work(
                 }
             }
             let mh = ModeHashes::draw_uniform(rng, &cp.shape(), j);
-            Ok(Response::Sketch(FastCountSketch::new(mh).apply_cp(&cp)))
+            // Workers are already a pool: run the serial spectral path with
+            // this worker's reusable workspace (one IFFT per request).
+            let mut out = Vec::new();
+            FastCountSketch::new(mh).apply_cp_into(&cp, ws, &mut out);
+            Ok(Response::Sketch(out))
         }
         Request::InnerEstimate { a, b, method, j, d } => {
             let mut estimates = Vec::with_capacity(d);

@@ -120,12 +120,16 @@ pub fn als_sketched(
         Matrix::randn(&mut rng, t_shape[1], cfg.rank),
         Matrix::randn(&mut rng, t_shape[2], cfg.rank),
     ];
+    // The inner loop reuses one output buffer across every (iter, mode, rank)
+    // estimate; with the sketched estimators' workspace paths the whole
+    // MTTKRP estimation runs allocation-free in steady state (§Perf).
+    let mut est_col: Vec<f64> = Vec::new();
     for _it in 0..cfg.n_iter {
         for mode in 0..3 {
             let mut m = Matrix::zeros(t_shape[mode], cfg.rank);
             for r in 0..cfg.rank {
-                let cols: Vec<&[f64]> = (0..3).map(|d| factors[d].col(r)).collect();
-                let est_col = est.t_mode(mode, &cols);
+                let cols = [factors[0].col(r), factors[1].col(r), factors[2].col(r)];
+                est.t_mode_into(mode, &cols, &mut est_col);
                 m.set_col(r, &est_col);
             }
             factors[mode] = als_update(&m, &factors, mode);

@@ -50,6 +50,9 @@ pub fn rtpm_symmetric(
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let mut lambda = Vec::with_capacity(cfg.rank);
     let mut factors = Matrix::zeros(dim, cfg.rank);
+    // Single iterate buffer reused across every power step (the estimator's
+    // `t_iuu_into` path is allocation-free in steady state, §Perf).
+    let mut next: Vec<f64> = Vec::new();
 
     for r in 0..cfg.rank {
         // L candidates, T power iterations each.
@@ -58,11 +61,12 @@ pub fn rtpm_symmetric(
         for _tau in 0..cfg.n_init {
             let mut u = random_unit(&mut rng, dim);
             for _t in 0..cfg.n_iter {
-                let mut next = est.t_iuu(&u);
+                est.t_iuu_into(&u, &mut next);
                 if crate::linalg::normalize(&mut next) == 0.0 {
-                    next = random_unit(&mut rng, dim);
+                    u = random_unit(&mut rng, dim);
+                } else {
+                    std::mem::swap(&mut u, &mut next);
                 }
-                u = next;
             }
             let val = est.t_uuu(&u);
             if val > best_val {
@@ -73,11 +77,11 @@ pub fn rtpm_symmetric(
         // Refinement run on the winner.
         let mut u = best_u.expect("n_init >= 1");
         for _t in 0..cfg.n_iter {
-            let mut next = est.t_iuu(&u);
+            est.t_iuu_into(&u, &mut next);
             if crate::linalg::normalize(&mut next) == 0.0 {
                 break;
             }
-            u = next;
+            std::mem::swap(&mut u, &mut next);
         }
         // |λ| = |T(u,u,u)| ≤ ‖T‖_F for unit u: clamp the noisy estimate so a
         // bad draw cannot blow up the deflation (runaway feedback otherwise).
@@ -107,6 +111,8 @@ pub fn rtpm_asymmetric(
     let mut f1 = Matrix::zeros(shape[1], cfg.rank);
     let mut f2 = Matrix::zeros(shape[2], cfg.rank);
 
+    // Shared iterate buffer for all three alternating updates (§Perf).
+    let mut next: Vec<f64> = Vec::new();
     for r in 0..cfg.rank {
         let mut best: Option<(Vec<f64>, Vec<f64>, Vec<f64>)> = None;
         let mut best_val = f64::NEG_INFINITY;
@@ -115,21 +121,22 @@ pub fn rtpm_asymmetric(
             let mut v = random_unit(&mut rng, shape[1]);
             let mut w = random_unit(&mut rng, shape[2]);
             for _t in 0..cfg.n_iter {
-                let mut nu = est.t_mode(0, &[&u, &v, &w]);
-                if crate::linalg::normalize(&mut nu) > 0.0 {
-                    u = nu;
+                est.t_mode_into(0, &[&u, &v, &w], &mut next);
+                if crate::linalg::normalize(&mut next) > 0.0 {
+                    std::mem::swap(&mut u, &mut next);
                 }
-                let mut nv = est.t_mode(1, &[&u, &v, &w]);
-                if crate::linalg::normalize(&mut nv) > 0.0 {
-                    v = nv;
+                est.t_mode_into(1, &[&u, &v, &w], &mut next);
+                if crate::linalg::normalize(&mut next) > 0.0 {
+                    std::mem::swap(&mut v, &mut next);
                 }
-                let mut nw = est.t_mode(2, &[&u, &v, &w]);
-                if crate::linalg::normalize(&mut nw) > 0.0 {
-                    w = nw;
+                est.t_mode_into(2, &[&u, &v, &w], &mut next);
+                if crate::linalg::normalize(&mut next) > 0.0 {
+                    std::mem::swap(&mut w, &mut next);
                 }
             }
             // λ candidate = u^T T(I, v, w)
-            let val = crate::linalg::dot(&est.t_mode(0, &[&u, &v, &w]), &u).abs();
+            est.t_mode_into(0, &[&u, &v, &w], &mut next);
+            let val = crate::linalg::dot(&next, &u).abs();
             if val > best_val {
                 best_val = val;
                 best = Some((u, v, w));
@@ -137,22 +144,23 @@ pub fn rtpm_asymmetric(
         }
         let (mut u, mut v, mut w) = best.expect("n_init >= 1");
         for _t in 0..cfg.n_iter {
-            let mut nu = est.t_mode(0, &[&u, &v, &w]);
-            if crate::linalg::normalize(&mut nu) > 0.0 {
-                u = nu;
+            est.t_mode_into(0, &[&u, &v, &w], &mut next);
+            if crate::linalg::normalize(&mut next) > 0.0 {
+                std::mem::swap(&mut u, &mut next);
             }
-            let mut nv = est.t_mode(1, &[&u, &v, &w]);
-            if crate::linalg::normalize(&mut nv) > 0.0 {
-                v = nv;
+            est.t_mode_into(1, &[&u, &v, &w], &mut next);
+            if crate::linalg::normalize(&mut next) > 0.0 {
+                std::mem::swap(&mut v, &mut next);
             }
-            let mut nw = est.t_mode(2, &[&u, &v, &w]);
-            if crate::linalg::normalize(&mut nw) > 0.0 {
-                w = nw;
+            est.t_mode_into(2, &[&u, &v, &w], &mut next);
+            if crate::linalg::normalize(&mut next) > 0.0 {
+                std::mem::swap(&mut w, &mut next);
             }
         }
         // Same clamp as the symmetric case: |T(u,v,w)| ≤ ‖T‖_F.
         let cap = est.norm_estimate();
-        let lam = crate::linalg::dot(&est.t_mode(0, &[&u, &v, &w]), &u).clamp(-cap, cap);
+        est.t_mode_into(0, &[&u, &v, &w], &mut next);
+        let lam = crate::linalg::dot(&next, &u).clamp(-cap, cap);
         est.deflate(lam, &[&u, &v, &w]);
         lambda.push(lam);
         f0.set_col(r, &u);

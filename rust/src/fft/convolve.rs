@@ -5,120 +5,210 @@
 //! circular convolution of the per-mode count sketches; FCS (Eq. 8) uses
 //! linear convolution, which preserves the composite hash `Σ h_n(i_n) − N + 1`
 //! without the modulo that destroys spatial structure.
+//!
+//! Every kernel has a `_into` variant taking a caller-owned
+//! [`FftWorkspace`]: the hot loops (ALS/RTPM inner iterations, the
+//! coordinator workers) rent scratch from the workspace and perform zero
+//! heap allocations in steady state. The classic allocating signatures
+//! remain as thin wrappers over the thread-local workspace.
 
 use super::complex::{C64, ZERO};
-use super::plan::{fft_inplace, fft_real, ifft_inplace, ifft_to_real};
+use super::plan::Dir;
+use super::workspace::{fft_real_into, inverse_real_into, with_thread_workspace, FftWorkspace};
 
 /// Product spectrum `F(a)·F(b)` of two real signals at length `n`, computed
 /// with **one** complex FFT via the real-pair packing identity: with
 /// `Z = F(a + i·b)`, Hermitian symmetry gives
 /// `F(a)[k]·F(b)[k] = (Z[k]² − conj(Z[n−k])²) · (−i/4)` (§Perf: halves the
 /// forward-FFT work in every convolution).
-pub fn packed_product_spectrum(a: &[f64], b: &[f64], n: usize) -> Vec<C64> {
+pub fn packed_product_spectrum_into(
+    a: &[f64],
+    b: &[f64],
+    n: usize,
+    ws: &mut FftWorkspace,
+    out: &mut Vec<C64>,
+) {
     debug_assert!(a.len() <= n && b.len() <= n);
-    let mut z = vec![ZERO; n];
+    let mut z = ws.take_c64(n);
     for (i, &v) in a.iter().enumerate() {
         z[i].re = v;
     }
     for (i, &v) in b.iter().enumerate() {
         z[i].im = v;
     }
-    fft_inplace(&mut z);
+    ws.process(&mut z, Dir::Forward);
+    out.clear();
+    out.resize(n, ZERO);
     let quarter_negi = C64::new(0.0, -0.25);
-    let mut out = vec![ZERO; n];
-    for k in 0..n {
+    for (k, o) in out.iter_mut().enumerate() {
         let zk = z[k];
         let zmk = z[(n - k) % n].conj();
-        out[k] = (zk * zk - zmk * zmk) * quarter_negi;
+        *o = (zk * zk - zmk * zmk) * quarter_negi;
     }
-    out
+    ws.give_c64(z);
 }
 
-/// Linear convolution of real signals, output length `a.len() + b.len() - 1`,
-/// computed via zero-padded FFT (one packed forward + one inverse).
-pub fn conv_linear(a: &[f64], b: &[f64]) -> Vec<f64> {
-    if a.is_empty() || b.is_empty() {
-        return Vec::new();
-    }
-    let out_len = a.len() + b.len() - 1;
-    let n = out_len.next_power_of_two();
-    let spec = packed_product_spectrum(a, b, n);
-    let mut out = ifft_to_real(spec);
-    out.truncate(out_len);
-    out
+/// Allocating wrapper over [`packed_product_spectrum_into`].
+pub fn packed_product_spectrum(a: &[f64], b: &[f64], n: usize) -> Vec<C64> {
+    with_thread_workspace(|ws| {
+        let mut out = Vec::with_capacity(n);
+        packed_product_spectrum_into(a, b, n, ws, &mut out);
+        out
+    })
 }
 
-/// Linear convolution of several real signals, all zero-padded to the final
-/// output length `Σ len − (k−1)` before a single pointwise product in the
-/// spectral domain (this is exactly Eq. 8 of the paper with `J̃`-point FFTs).
-pub fn conv_linear_many(signals: &[&[f64]]) -> Vec<f64> {
+/// Product spectrum `Π_i F(signals[i])` at length `n`, written into `out`.
+/// Signals are consumed pairwise through the packing trick; an odd leftover
+/// goes through the half-length real transform.
+pub fn product_spectrum_into(
+    signals: &[&[f64]],
+    n: usize,
+    ws: &mut FftWorkspace,
+    out: &mut Vec<C64>,
+) {
     assert!(!signals.is_empty());
     if signals.len() == 1 {
-        return signals[0].to_vec();
+        fft_real_into(signals[0], n, ws, out);
+        return;
     }
-    let out_len = signals.iter().map(|s| s.len()).sum::<usize>() - (signals.len() - 1);
-    let n = out_len.next_power_of_two();
-    // Consume signals pairwise through the packing trick.
-    let mut acc = packed_product_spectrum(signals[0], signals[1], n);
+    packed_product_spectrum_into(signals[0], signals[1], n, ws, out);
     let mut rest = &signals[2..];
+    let mut tmp = ws.take_c64(n);
     while rest.len() >= 2 {
-        let spec = packed_product_spectrum(rest[0], rest[1], n);
-        for (x, y) in acc.iter_mut().zip(&spec) {
+        packed_product_spectrum_into(rest[0], rest[1], n, ws, &mut tmp);
+        for (x, y) in out.iter_mut().zip(tmp.iter()) {
             *x = *x * *y;
         }
         rest = &rest[2..];
     }
     if let Some(s) = rest.first() {
-        let fs = fft_real(s, n);
-        for (x, y) in acc.iter_mut().zip(fs.iter()) {
+        fft_real_into(s, n, ws, &mut tmp);
+        for (x, y) in out.iter_mut().zip(tmp.iter()) {
             *x = *x * *y;
         }
     }
-    let mut out = ifft_to_real(acc);
+    ws.give_c64(tmp);
+}
+
+/// Linear convolution of real signals into `out`, output length
+/// `a.len() + b.len() - 1`, via zero-padded FFT (one packed forward + one
+/// half-length inverse).
+pub fn conv_linear_into(a: &[f64], b: &[f64], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+    out.clear();
+    if a.is_empty() || b.is_empty() {
+        return;
+    }
+    let out_len = a.len() + b.len() - 1;
+    let n = out_len.next_power_of_two();
+    let mut spec = ws.take_c64(n);
+    packed_product_spectrum_into(a, b, n, ws, &mut spec);
+    inverse_real_into(&mut spec, ws, out);
     out.truncate(out_len);
-    out
+    ws.give_c64(spec);
+}
+
+/// Allocating wrapper over [`conv_linear_into`].
+pub fn conv_linear(a: &[f64], b: &[f64]) -> Vec<f64> {
+    with_thread_workspace(|ws| {
+        let mut out = Vec::new();
+        conv_linear_into(a, b, ws, &mut out);
+        out
+    })
+}
+
+/// Linear convolution of several real signals, all zero-padded to the final
+/// output length `Σ len − (k−1)` before a single pointwise product in the
+/// spectral domain (this is exactly Eq. 8 of the paper with `J̃`-point FFTs).
+pub fn conv_linear_many_into(signals: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+    assert!(!signals.is_empty());
+    if signals.len() == 1 {
+        out.clear();
+        out.extend_from_slice(signals[0]);
+        return;
+    }
+    let out_len = signals.iter().map(|s| s.len()).sum::<usize>() - (signals.len() - 1);
+    let n = out_len.next_power_of_two();
+    let mut acc = ws.take_c64(n);
+    product_spectrum_into(signals, n, ws, &mut acc);
+    inverse_real_into(&mut acc, ws, out);
+    out.truncate(out_len);
+    ws.give_c64(acc);
+}
+
+/// Allocating wrapper over [`conv_linear_many_into`].
+pub fn conv_linear_many(signals: &[&[f64]]) -> Vec<f64> {
+    with_thread_workspace(|ws| {
+        let mut out = Vec::new();
+        conv_linear_many_into(signals, ws, &mut out);
+        out
+    })
 }
 
 /// Circular convolution of real signals of identical length `J`
 /// (the TS mode-J convolution, Eq. 3).
 pub fn conv_circular(a: &[f64], b: &[f64]) -> Vec<f64> {
     assert_eq!(a.len(), b.len(), "circular convolution needs equal lengths");
-    let j = a.len();
-    let mut fa = fft_real(a, j);
-    let fb = fft_real(b, j);
-    for (x, y) in fa.iter_mut().zip(fb.iter()) {
-        *x = *x * *y;
-    }
-    ifft_to_real(fa)
+    conv_circular_many(&[a, b])
 }
 
-/// Circular convolution of several equal-length real signals.
-pub fn conv_circular_many(signals: &[&[f64]]) -> Vec<f64> {
+/// Circular convolution of several equal-length real signals into `out`.
+pub fn conv_circular_many_into(signals: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
     assert!(!signals.is_empty());
     let j = signals[0].len();
-    let mut acc = fft_real(signals[0], j);
-    for s in &signals[1..] {
-        assert_eq!(s.len(), j);
-        let fs = fft_real(s, j);
-        for (x, y) in acc.iter_mut().zip(fs.iter()) {
-            *x = *x * *y;
-        }
+    for s in signals {
+        assert_eq!(s.len(), j, "circular convolution needs equal lengths");
     }
-    ifft_to_real(acc)
+    if signals.len() == 1 {
+        out.clear();
+        out.extend_from_slice(signals[0]);
+        return;
+    }
+    let mut acc = ws.take_c64(j);
+    product_spectrum_into(signals, j, ws, &mut acc);
+    inverse_real_into(&mut acc, ws, out);
+    ws.give_c64(acc);
+}
+
+/// Allocating wrapper over [`conv_circular_many_into`].
+pub fn conv_circular_many(signals: &[&[f64]]) -> Vec<f64> {
+    with_thread_workspace(|ws| {
+        let mut out = Vec::new();
+        conv_circular_many_into(signals, ws, &mut out);
+        out
+    })
 }
 
 /// Cross-correlation style product used in Eq. 17:
 /// `F^{-1}( F(z) * conj(F(a)) * conj(F(b)) )` over a common length `n`
-/// (signals zero-padded). Returns real parts, length `n`.
-pub fn spectral_corr(z: &[f64], conj_with: &[&[f64]], n: usize) -> Vec<f64> {
-    let mut fz = fft_real(z, n);
+/// (signals zero-padded). Writes real parts, length `n`, into `out`.
+pub fn spectral_corr_into(
+    z: &[f64],
+    conj_with: &[&[f64]],
+    n: usize,
+    ws: &mut FftWorkspace,
+    out: &mut Vec<f64>,
+) {
+    let mut fz = ws.take_c64(n);
+    fft_real_into(z, n, ws, &mut fz);
+    let mut fs = ws.take_c64(n);
     for s in conj_with {
-        let fs = fft_real(s, n);
+        fft_real_into(s, n, ws, &mut fs);
         for (x, y) in fz.iter_mut().zip(fs.iter()) {
             *x = *x * y.conj();
         }
     }
-    ifft_to_real(fz)
+    inverse_real_into(&mut fz, ws, out);
+    ws.give_c64(fs);
+    ws.give_c64(fz);
+}
+
+/// Allocating wrapper over [`spectral_corr_into`].
+pub fn spectral_corr(z: &[f64], conj_with: &[&[f64]], n: usize) -> Vec<f64> {
+    with_thread_workspace(|ws| {
+        let mut out = Vec::with_capacity(n);
+        spectral_corr_into(z, conj_with, n, ws, &mut out);
+        out
+    })
 }
 
 /// Naive O(n·m) linear convolution — oracle for tests.
@@ -157,13 +247,14 @@ pub fn spectra_mul(a: &[C64], b: &[C64]) -> Vec<C64> {
 /// Forward FFT of a real signal at its own length (no padding), exposed for
 /// parity tests with the python reference.
 pub fn spectrum(x: &[f64]) -> Vec<C64> {
-    fft_real(x, x.len())
+    super::plan::fft_real(x, x.len())
 }
 
-/// Inverse of `spectrum`.
-pub fn inverse_spectrum(mut s: Vec<C64>) -> Vec<f64> {
-    ifft_inplace(&mut s);
-    s.into_iter().map(|z| z.re).collect()
+/// Inverse of `spectrum` — unified with `ifft_to_real` (both delegate to
+/// [`inverse_real_into`], which debug-asserts the imaginary residue instead
+/// of silently discarding it).
+pub fn inverse_spectrum(spec: Vec<C64>) -> Vec<f64> {
+    super::plan::ifft_to_real(spec)
 }
 
 /// Zero-pad helper.
@@ -171,13 +262,6 @@ pub fn zero_pad(x: &[f64], n: usize) -> Vec<f64> {
     let mut v = vec![0.0; n];
     v[..x.len()].copy_from_slice(x);
     v
-}
-
-#[allow(dead_code)]
-fn _unused(_: C64) {
-    let _ = ZERO;
-    let mut v = vec![ZERO; 2];
-    fft_inplace(&mut v);
 }
 
 #[cfg(test)]
@@ -225,6 +309,28 @@ mod tests {
         let many = conv_linear_many(&[&a, &b, &c]);
         assert_eq!(chained.len(), many.len());
         assert!(max_err(&chained, &many) < 1e-8);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_and_reuse_workspace() {
+        let mut rng = Rng::seed_from_u64(15);
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let a = rng.normal_vec(21);
+            let b = rng.normal_vec(33);
+            let c = rng.normal_vec(5);
+            conv_linear_many_into(&[&a, &b, &c], &mut ws, &mut out);
+            assert!(max_err(&out, &conv_linear_many(&[&a, &b, &c])) < 1e-10);
+            conv_linear_into(&a, &b, &mut ws, &mut out);
+            assert!(max_err(&out, &conv_linear_naive(&a, &b)) < 1e-8);
+            let d = rng.normal_vec(21);
+            conv_circular_many_into(&[&a, &d], &mut ws, &mut out);
+            assert!(max_err(&out, &conv_circular_naive(&a, &d)) < 1e-8);
+            let z = rng.normal_vec(16);
+            spectral_corr_into(&z, &[&c], 16, &mut ws, &mut out);
+            assert!(max_err(&out, &spectral_corr(&z, &[&c], 16)) < 1e-10);
+        }
     }
 
     #[test]

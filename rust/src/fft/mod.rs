@@ -1,13 +1,18 @@
 //! From-scratch FFT library (rustfft is not available offline): complex
-//! arithmetic, radix-2 + Bluestein plans with a global plan cache, and the
+//! arithmetic, radix-2 + Bluestein plans with a global plan cache, a packed
+//! real-input transform, caller-owned zero-allocation workspaces, and the
 //! linear/circular convolutions that implement Eq. 3 (TS) and Eq. 8 (FCS).
 
 pub mod complex;
 pub mod convolve;
 pub mod plan;
+pub mod workspace;
 
 pub use complex::C64;
 pub use convolve::{
-    conv_circular, conv_circular_many, conv_linear, conv_linear_many, spectral_corr, zero_pad,
+    conv_circular, conv_circular_many, conv_circular_many_into, conv_linear, conv_linear_into,
+    conv_linear_many, conv_linear_many_into, packed_product_spectrum, packed_product_spectrum_into,
+    product_spectrum_into, spectral_corr, spectral_corr_into, zero_pad,
 };
 pub use plan::{fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, Plan};
+pub use workspace::{fft_real_into, inverse_real_into, with_thread_workspace, FftWorkspace};

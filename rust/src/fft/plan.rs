@@ -160,10 +160,15 @@ impl BluesteinPlan {
         Self { n, m, inner, chirp, kernel_fft: kernel }
     }
 
-    fn process(&self, data: &mut [C64], dir: Dir) {
+    /// `scratch` is the length-`m` convolution buffer — caller-owned so hot
+    /// loops (via [`super::workspace::FftWorkspace`]) reuse it instead of
+    /// allocating per transform.
+    fn process_scratch(&self, data: &mut [C64], dir: Dir, scratch: &mut Vec<C64>) {
         let n = self.n;
         debug_assert_eq!(data.len(), n);
-        let mut a = vec![ZERO; self.m];
+        scratch.clear();
+        scratch.resize(self.m, ZERO);
+        let a = scratch;
         match dir {
             Dir::Forward => {
                 for k in 0..n {
@@ -177,11 +182,11 @@ impl BluesteinPlan {
                 }
             }
         }
-        self.inner.process(&mut a, Dir::Forward);
+        self.inner.process(a, Dir::Forward);
         for (x, k) in a.iter_mut().zip(self.kernel_fft.iter()) {
             *x = *x * *k;
         }
-        self.inner.process(&mut a, Dir::Inverse);
+        self.inner.process(a, Dir::Inverse);
         match dir {
             Dir::Forward => {
                 for k in 0..n {
@@ -224,10 +229,17 @@ impl Plan {
 
     /// In-place transform. `data.len()` must equal `self.n`.
     pub fn process(&self, data: &mut [C64], dir: Dir) {
+        let mut scratch = Vec::new();
+        self.process_scratch(data, dir, &mut scratch);
+    }
+
+    /// In-place transform with caller-owned Bluestein scratch (unused for
+    /// power-of-two lengths). Zero-allocation when `scratch` has capacity.
+    pub fn process_scratch(&self, data: &mut [C64], dir: Dir, scratch: &mut Vec<C64>) {
         assert_eq!(data.len(), self.n, "FFT plan length mismatch");
         match &self.kind {
             PlanKind::Radix2(p) => p.process(data, dir),
-            PlanKind::Bluestein(p) => p.process(data, dir),
+            PlanKind::Bluestein(p) => p.process_scratch(data, dir, scratch),
         }
     }
 }
@@ -244,44 +256,56 @@ impl Planner {
         Self::default()
     }
 
+    /// Plan lookup with double-checked insert: the (possibly expensive —
+    /// Bluestein builds a 2×-padded kernel FFT) plan construction happens
+    /// **outside** the mutex, so a large build no longer blocks concurrent
+    /// sketching threads that want already-cached lengths.
     pub fn plan(&self, n: usize) -> Arc<Plan> {
+        if let Some(p) = self.plans.lock().unwrap().get(&n) {
+            return p.clone();
+        }
+        let built = Arc::new(Plan::new(n));
         let mut guard = self.plans.lock().unwrap();
-        guard.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+        guard.entry(n).or_insert(built).clone()
     }
 }
 
 /// Global planner instance.
 pub fn global_planner() -> &'static Planner {
-    static PLANNER: once_cell::sync::Lazy<Planner> = once_cell::sync::Lazy::new(Planner::new);
-    &PLANNER
+    static PLANNER: std::sync::OnceLock<Planner> = std::sync::OnceLock::new();
+    PLANNER.get_or_init(Planner::new)
 }
 
 /// Convenience: forward FFT of a complex buffer (in place).
 pub fn fft_inplace(data: &mut [C64]) {
-    global_planner().plan(data.len()).process(data, Dir::Forward);
+    super::workspace::with_thread_workspace(|ws| ws.process(data, Dir::Forward));
 }
 
 /// Convenience: inverse FFT of a complex buffer (in place).
 pub fn ifft_inplace(data: &mut [C64]) {
-    global_planner().plan(data.len()).process(data, Dir::Inverse);
+    super::workspace::with_thread_workspace(|ws| ws.process(data, Dir::Inverse));
 }
 
-/// Forward FFT of a real signal zero-padded to length `n`.
+/// Forward FFT of a real signal zero-padded to length `n` (allocating
+/// wrapper over [`super::workspace::fft_real_into`] — even `n` runs as a
+/// half-length complex transform).
 pub fn fft_real(x: &[f64], n: usize) -> Vec<C64> {
-    assert!(x.len() <= n, "fft_real: signal longer than transform ({} > {n})", x.len());
-    let mut buf = vec![ZERO; n];
-    for (b, &v) in buf.iter_mut().zip(x.iter()) {
-        *b = C64::real(v);
-    }
-    fft_inplace(&mut buf);
-    buf
+    super::workspace::with_thread_workspace(|ws| {
+        let mut out = Vec::with_capacity(n);
+        super::workspace::fft_real_into(x, n, ws, &mut out);
+        out
+    })
 }
 
-/// Inverse FFT, returning only real parts (caller asserts the signal is
-/// real-valued up to rounding).
+/// Inverse FFT of a Hermitian spectrum, returning the real signal
+/// (allocating wrapper over [`super::workspace::inverse_real_into`], which
+/// debug-asserts the discarded imaginary residue is below tolerance).
 pub fn ifft_to_real(mut spec: Vec<C64>) -> Vec<f64> {
-    ifft_inplace(&mut spec);
-    spec.into_iter().map(|z| z.re).collect()
+    super::workspace::with_thread_workspace(|ws| {
+        let mut out = Vec::with_capacity(spec.len());
+        super::workspace::inverse_real_into(&mut spec, ws, &mut out);
+        out
+    })
 }
 
 /// Naive O(n^2) DFT — oracle for tests.

@@ -1,0 +1,289 @@
+//! Caller-owned FFT workspaces: reusable `C64`/`f64` scratch arenas plus
+//! per-length plan handles, so steady-state hot loops (the ALS/RTPM inner
+//! loops call the spectral kernels thousands of times at a fixed `J̃`)
+//! perform **zero heap allocations** after warmup.
+//!
+//! Also home of the packed **real-input FFT**: a length-`n` transform of a
+//! real signal runs as one length-`n/2` complex transform (Hermitian
+//! symmetry), halving butterfly work for every convolution in the crate.
+//! `fft_real_into` / `inverse_real_into` are the workspace-based primitives;
+//! the allocating wrappers in [`super::plan`] route through them.
+
+use super::complex::{C64, ZERO};
+use super::plan::{global_planner, Dir, Plan};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Reusable transform scratch + plan cache. Buffers are rented with
+/// `take_*` and returned with `give_*`; in steady state (same call sequence
+/// each iteration) every rental is served from the pool without allocating.
+#[derive(Default)]
+pub struct FftWorkspace {
+    /// Per-length plan handles, resolved once from the global planner so hot
+    /// loops never touch the planner mutex.
+    plans: HashMap<usize, Arc<Plan>>,
+    c64_pool: Vec<Vec<C64>>,
+    f64_pool: Vec<Vec<f64>>,
+    /// Scratch for Bluestein's inner convolution, kept out of the pools so a
+    /// transform can run while rented buffers are outstanding.
+    bluestein: Vec<C64>,
+}
+
+impl FftWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Plan handle for length `n`, cached locally (mutex-free after first
+    /// use of each length).
+    pub fn plan(&mut self, n: usize) -> Arc<Plan> {
+        if let Some(p) = self.plans.get(&n) {
+            return p.clone();
+        }
+        let p = global_planner().plan(n);
+        self.plans.insert(n, p.clone());
+        p
+    }
+
+    /// In-place transform using cached plans and reusable Bluestein scratch.
+    pub fn process(&mut self, data: &mut [C64], dir: Dir) {
+        let plan = self.plan(data.len());
+        let mut scratch = std::mem::take(&mut self.bluestein);
+        plan.process_scratch(data, dir, &mut scratch);
+        self.bluestein = scratch;
+    }
+
+    /// Rent a zeroed complex buffer of length `n`.
+    pub fn take_c64(&mut self, n: usize) -> Vec<C64> {
+        let mut b = self.c64_pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(n, ZERO);
+        b
+    }
+
+    /// Return a complex buffer to the pool.
+    pub fn give_c64(&mut self, b: Vec<C64>) {
+        self.c64_pool.push(b);
+    }
+
+    /// Rent a zeroed real buffer of length `n`.
+    pub fn take_f64(&mut self, n: usize) -> Vec<f64> {
+        let mut b = self.f64_pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(n, 0.0);
+        b
+    }
+
+    /// Return a real buffer to the pool.
+    pub fn give_f64(&mut self, b: Vec<f64>) {
+        self.f64_pool.push(b);
+    }
+}
+
+thread_local! {
+    static THREAD_WS: RefCell<FftWorkspace> = RefCell::new(FftWorkspace::new());
+}
+
+/// Run `f` with this thread's shared workspace. Re-entrant calls (a
+/// workspace user calling an allocating wrapper that grabs the workspace
+/// again) fall back to a fresh arena instead of panicking on the RefCell.
+pub fn with_thread_workspace<R>(f: impl FnOnce(&mut FftWorkspace) -> R) -> R {
+    THREAD_WS.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut ws) => f(&mut ws),
+        Err(_) => f(&mut FftWorkspace::new()),
+    })
+}
+
+/// Forward FFT of a real signal zero-padded to length `n`, written as the
+/// full length-`n` (Hermitian) spectrum into `out`.
+///
+/// Even `n` runs as a single length-`n/2` complex transform: pack
+/// `z[j] = x[2j] + i·x[2j+1]`, transform, then split even/odd spectra via
+/// `E[k] = (Z[k] + conj(Z[m−k]))/2`, `O[k] = (Z[k] − conj(Z[m−k]))·(−i/2)`
+/// and recombine `X[k] = E[k] + e^{−2πik/n}·O[k]`, mirroring the rest by
+/// conjugate symmetry. Odd `n` falls back to the full complex transform.
+pub fn fft_real_into(x: &[f64], n: usize, ws: &mut FftWorkspace, out: &mut Vec<C64>) {
+    assert!(
+        x.len() <= n,
+        "fft_real_into: signal longer than transform ({} > {n})",
+        x.len()
+    );
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    if n % 2 != 0 {
+        out.resize(n, ZERO);
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            o.re = v;
+        }
+        ws.process(out, Dir::Forward);
+        return;
+    }
+    let m = n / 2;
+    let mut z = ws.take_c64(m);
+    for (j, zj) in z.iter_mut().enumerate() {
+        let re = if 2 * j < x.len() { x[2 * j] } else { 0.0 };
+        let im = if 2 * j + 1 < x.len() { x[2 * j + 1] } else { 0.0 };
+        *zj = C64::new(re, im);
+    }
+    ws.process(&mut z, Dir::Forward);
+    out.resize(n, ZERO);
+    for k in 0..m {
+        let zk = z[k];
+        let zmk = z[(m - k) % m].conj();
+        let e = (zk + zmk).scale(0.5);
+        let o = (zk - zmk) * C64::new(0.0, -0.5);
+        let w = C64::cis(-std::f64::consts::PI * k as f64 / m as f64);
+        out[k] = e + w * o;
+    }
+    // X[m] = E[0] − O[0] (both real: Re(Z[0]) and Im(Z[0])).
+    out[m] = C64::real(z[0].re - z[0].im);
+    for k in 1..m {
+        out[n - k] = out[k].conj();
+    }
+    ws.give_c64(z);
+}
+
+/// Inverse FFT of a Hermitian spectrum, returning the real signal in `out`.
+/// `spec` is consumed as scratch (its contents are destroyed).
+///
+/// This is the single unification point for the old `ifft_to_real` /
+/// `inverse_spectrum` pair: even `n` runs one length-`n/2` complex inverse
+/// (`E[k] = (X[k]+X[k+m])/2`, `O[k] = (X[k]−X[k+m])·e^{2πik/n}/2`,
+/// `z = F⁻¹(E + iO)`, de-interleave), odd `n` runs the full inverse. Debug
+/// builds assert the spectrum really is (numerically) Hermitian — i.e. that
+/// the imaginary residue being discarded is below tolerance — instead of
+/// silently dropping it.
+pub fn inverse_real_into(spec: &mut [C64], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+    let n = spec.len();
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    #[cfg(debug_assertions)]
+    {
+        let scale2 = spec
+            .iter()
+            .map(|v| v.norm_sqr())
+            .fold(0.0f64, f64::max)
+            .max(1.0);
+        for k in 0..n {
+            let resid2 = (spec[k] - spec[(n - k) % n].conj()).norm_sqr();
+            debug_assert!(
+                resid2 <= 1e-14 * scale2,
+                "inverse_real_into: non-Hermitian spectrum at k={k}/{n} \
+                 (|residue|²={resid2:.3e}, max|X|²={scale2:.3e}) — a nonzero \
+                 imaginary output would be silently discarded"
+            );
+        }
+    }
+    if n % 2 != 0 {
+        ws.process(spec, Dir::Inverse);
+        out.extend(spec.iter().map(|v| v.re));
+        return;
+    }
+    let m = n / 2;
+    let mut z = ws.take_c64(m);
+    for (k, zk) in z.iter_mut().enumerate() {
+        let a = spec[k];
+        let b = spec[k + m];
+        let e = (a + b).scale(0.5);
+        let o = ((a - b).scale(0.5)) * C64::cis(std::f64::consts::PI * k as f64 / m as f64);
+        // z[k] = E[k] + i·O[k]
+        *zk = C64::new(e.re - o.im, e.im + o.re);
+    }
+    ws.process(&mut z, Dir::Inverse);
+    out.resize(n, 0.0);
+    for (j, zj) in z.iter().enumerate() {
+        out[2 * j] = zj.re;
+        out[2 * j + 1] = zj.im;
+    }
+    ws.give_c64(z);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::{dft_naive, fft_real, ifft_to_real};
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn rfft_matches_naive_dft() {
+        let mut rng = Rng::seed_from_u64(21);
+        for &n in &[2usize, 4, 6, 8, 10, 16, 34, 64, 100, 128, 250, 3, 7, 25] {
+            let x: Vec<f64> = rng.normal_vec(n);
+            let spec = fft_real(&x, n);
+            let full: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
+            let naive = dft_naive(&full, Dir::Forward);
+            let err = spec
+                .iter()
+                .zip(&naive)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-8 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn rfft_zero_padding_matches_naive() {
+        let mut rng = Rng::seed_from_u64(22);
+        for &(len, n) in &[(5usize, 16usize), (7, 8), (1, 2), (13, 40), (9, 27)] {
+            let x: Vec<f64> = rng.normal_vec(len);
+            let spec = fft_real(&x, n);
+            let mut full = vec![ZERO; n];
+            for (f, &v) in full.iter_mut().zip(&x) {
+                f.re = v;
+            }
+            let naive = dft_naive(&full, Dir::Forward);
+            let err = spec
+                .iter()
+                .zip(&naive)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9 * n as f64, "len={len} n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        let mut rng = Rng::seed_from_u64(23);
+        for &n in &[2usize, 6, 16, 64, 100, 256, 1000, 5, 17, 243] {
+            let x: Vec<f64> = rng.normal_vec(n);
+            let spec = fft_real(&x, n);
+            let back = ifft_to_real(spec);
+            let err = x
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-10 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn workspace_pool_recycles_buffers() {
+        let mut ws = FftWorkspace::new();
+        let a = ws.take_c64(64);
+        let cap_before = a.capacity();
+        ws.give_c64(a);
+        let b = ws.take_c64(32);
+        assert!(b.capacity() >= cap_before.min(64));
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|z| z.re == 0.0 && z.im == 0.0));
+        ws.give_c64(b);
+    }
+
+    #[test]
+    fn thread_workspace_is_reentrant_safe() {
+        let r = with_thread_workspace(|ws| {
+            let buf = ws.take_c64(8);
+            // A nested grab must not panic (falls back to a fresh arena).
+            let inner = with_thread_workspace(|ws2| ws2.take_c64(4).len());
+            ws.give_c64(buf);
+            inner
+        });
+        assert_eq!(r, 4);
+    }
+}

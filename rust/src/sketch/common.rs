@@ -6,7 +6,11 @@
 //! `h_0(i_0)` and `s_0(i_0)` change, so the outer-mode contributions are
 //! hoisted to a per-fiber `(hbase, sbase)`.
 
+use super::cs::CountSketch;
+use crate::fft::complex::ZERO;
+use crate::fft::{fft_real_into, C64, FftWorkspace};
 use crate::hash::ModeHashes;
+use crate::linalg::Matrix;
 use crate::tensor::Tensor;
 
 /// Accumulate the sketch of a dense tensor into `out`.
@@ -89,6 +93,122 @@ pub fn sketch_dense(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>) -> Vec<f
     let mut out = vec![0.0; len];
     sketch_dense_into(t, mh, modulo, &mut out);
     out
+}
+
+// ---------------------------------------------------------------------------
+// Spectral accumulation core shared by the TS (circular, Eq. 3) and FCS
+// (linear, Eq. 8) CP fast paths: rank products are composed and summed in
+// the frequency domain so the caller runs a **single** inverse FFT per
+// output instead of one per rank (R IFFTs → 1, §Perf).
+// ---------------------------------------------------------------------------
+
+/// Write `Π_d F(CS_d(vs[d]))` at `n` points into `out`. Per-mode count
+/// sketches go through the half-length real-input transform; all scratch is
+/// rented from `ws` (zero allocations in steady state).
+pub(crate) fn rank1_spectrum_into(
+    modes: &[CountSketch],
+    vs: &[&[f64]],
+    n: usize,
+    ws: &mut FftWorkspace,
+    out: &mut Vec<C64>,
+) {
+    debug_assert_eq!(modes.len(), vs.len());
+    let max_j = modes.iter().map(|m| m.range()).max().unwrap_or(0);
+    let mut csbuf = ws.take_f64(max_j);
+    let mut fs = ws.take_c64(n);
+    for (d, cs) in modes.iter().enumerate() {
+        let jd = cs.range();
+        cs.apply_into(vs[d], &mut csbuf[..jd]);
+        if d == 0 {
+            fft_real_into(&csbuf[..jd], n, ws, out);
+        } else {
+            fft_real_into(&csbuf[..jd], n, ws, &mut fs);
+            for (x, y) in out.iter_mut().zip(fs.iter()) {
+                *x = *x * *y;
+            }
+        }
+    }
+    ws.give_c64(fs);
+    ws.give_f64(csbuf);
+}
+
+/// Accumulate `Σ_{r ∈ ranks} λ_r · Π_d F(CS_d(U_d[:, r]))` into `acc`
+/// (length `n`). The caller inverts once at the end.
+pub(crate) fn accumulate_cp_spectra(
+    modes: &[CountSketch],
+    factors: &[Matrix],
+    lambda: &[f64],
+    ranks: std::ops::Range<usize>,
+    n: usize,
+    ws: &mut FftWorkspace,
+    acc: &mut [C64],
+) {
+    debug_assert_eq!(acc.len(), n);
+    debug_assert_eq!(modes.len(), factors.len());
+    let max_j = modes.iter().map(|m| m.range()).max().unwrap_or(0);
+    let mut csbuf = ws.take_f64(max_j);
+    let mut spec = ws.take_c64(n);
+    let mut fs = ws.take_c64(n);
+    for r in ranks {
+        for (d, cs) in modes.iter().enumerate() {
+            let jd = cs.range();
+            cs.apply_into(factors[d].col(r), &mut csbuf[..jd]);
+            if d == 0 {
+                fft_real_into(&csbuf[..jd], n, ws, &mut spec);
+            } else {
+                fft_real_into(&csbuf[..jd], n, ws, &mut fs);
+                for (x, y) in spec.iter_mut().zip(fs.iter()) {
+                    *x = *x * *y;
+                }
+            }
+        }
+        let lr = lambda[r];
+        for (a, s) in acc.iter_mut().zip(spec.iter()) {
+            *a += s.scale(lr);
+        }
+    }
+    ws.give_c64(fs);
+    ws.give_c64(spec);
+    ws.give_f64(csbuf);
+}
+
+/// Rank-parallel variant: chunks the CP ranks over `par_map` worker threads
+/// (each with its own workspace), then sums the partial spectra in
+/// deterministic chunk order. Used above a size threshold by the TS/FCS
+/// `apply_cp` entry points.
+pub(crate) fn accumulate_cp_spectra_parallel(
+    modes: &[CountSketch],
+    factors: &[Matrix],
+    lambda: &[f64],
+    rank: usize,
+    n: usize,
+) -> Vec<C64> {
+    let threads = crate::util::parallel::default_threads().min(rank).max(1);
+    let chunk = (rank + threads - 1) / threads;
+    let nchunks = (rank + chunk - 1) / chunk;
+    let partials = crate::util::parallel::par_map(nchunks, threads, |ci| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(rank);
+        let mut ws = FftWorkspace::new();
+        let mut acc = vec![ZERO; n];
+        accumulate_cp_spectra(modes, factors, lambda, lo..hi, n, &mut ws, &mut acc);
+        acc
+    });
+    let mut it = partials.into_iter();
+    let mut acc = it.next().expect("rank >= 1");
+    for p in it {
+        for (a, b) in acc.iter_mut().zip(&p) {
+            *a += *b;
+        }
+    }
+    acc
+}
+
+/// Work threshold above which the CP fast paths fan ranks out across
+/// threads: enough ranks to chunk, and large enough transforms that thread
+/// startup is amortized.
+pub(crate) fn cp_rank_parallel(rank: usize, n: usize) -> bool {
+    rank >= 8 && n >= 4096
 }
 
 #[cfg(test)]

@@ -14,7 +14,7 @@ use super::cs::CountSketch;
 use super::fcs::FastCountSketch;
 use super::hcs::HigherOrderCountSketch;
 use super::ts::TensorSketch;
-use crate::fft;
+use crate::fft::{self, FftWorkspace};
 use crate::hash::{HashPair, ModeHashes};
 use crate::tensor::{contract_all_but, t_iuu, t_uuu, Tensor};
 use crate::util::parallel::par_map;
@@ -37,6 +37,22 @@ pub trait ContractionEstimator: Send + Sync {
     /// Estimate the mode-`mode` contraction with `vs[d]` at every other mode
     /// (`vs[mode]` is ignored). Returns a vector of length `I_mode`.
     fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64>;
+
+    /// Buffer-reusing variant of [`Self::t_mode`]: writes into `out`
+    /// (cleared first) so steady-state callers — the ALS/RTPM inner loops —
+    /// avoid per-call allocation. Sketched implementations override this
+    /// with a zero-allocation workspace path; the default delegates.
+    fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
+        let v = self.t_mode(mode, vs);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
+
+    /// Buffer-reusing variant of [`Self::t_iuu`].
+    fn t_iuu_into(&self, u: &[f64], out: &mut Vec<f64>) {
+        let vs: [&[f64]; 3] = [u, u, u];
+        self.t_mode_into(0, &vs, out);
+    }
 
     /// Estimate of `‖T‖_F` from the sketched representation (median of
     /// per-repetition sketch norms; exact for `plain`). RTPM uses it to cap
@@ -76,6 +92,49 @@ pub fn elementwise_median(rows: &[Vec<f64>]) -> Vec<f64> {
     out
 }
 
+/// Flat-buffer variant of [`elementwise_median`]: `rows` is row-major
+/// `[d × n]`, `scratch` is the per-column sort buffer. Allocation-free when
+/// `scratch`/`out` have capacity (the estimator hot paths rent both from an
+/// [`crate::fft::FftWorkspace`]).
+pub fn elementwise_median_flat(
+    rows: &[f64],
+    d: usize,
+    n: usize,
+    scratch: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    assert!(d > 0);
+    assert_eq!(rows.len(), d * n);
+    out.clear();
+    out.resize(n, 0.0);
+    if d == 1 {
+        out.copy_from_slice(rows);
+        return;
+    }
+    scratch.clear();
+    scratch.resize(d, 0.0);
+    for i in 0..n {
+        for r in 0..d {
+            scratch[r] = rows[r * n + i];
+        }
+        scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        out[i] = crate::util::timing::percentile_sorted(scratch, 50.0);
+    }
+}
+
+/// Median of a small sample, sorting in place (allocation-free).
+fn median_inplace_sorted(xs: &mut [f64]) -> f64 {
+    xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::timing::percentile_sorted(xs, 50.0)
+}
+
+/// Repetition fan-out threshold for estimator queries: enough independent
+/// repetitions to chunk, and large enough transforms to amortize thread
+/// startup inside a power-iteration step.
+fn reps_parallel(reps: usize, fft_len: usize) -> bool {
+    reps >= 6 && fft_len >= 16384
+}
+
 // ---------------------------------------------------------------------------
 // Plain (exact) estimator
 // ---------------------------------------------------------------------------
@@ -102,6 +161,12 @@ impl ContractionEstimator for PlainEstimator {
 
     fn t_iuu(&self, u: &[f64]) -> Vec<f64> {
         t_iuu(&self.t, u)
+    }
+
+    fn t_iuu_into(&self, u: &[f64], out: &mut Vec<f64>) {
+        let v = t_iuu(&self.t, u);
+        out.clear();
+        out.extend_from_slice(&v);
     }
 
     fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
@@ -345,49 +410,101 @@ impl TsEstimator {
     }
 }
 
+impl TsEstimator {
+    /// One repetition of Eq. 17's TS analogue, all scratch rented from `ws`:
+    /// `z = F⁻¹( F(st) · Π_{d≠mode} conj(F(CS_d(v_d))) )` (circular J, F(st)
+    /// served from the per-rep cache), then the mode-`mode` basis gather.
+    fn t_mode_one_rep(
+        &self,
+        rep: &TsRep,
+        mode: usize,
+        vs: &[&[f64]],
+        ws: &mut FftWorkspace,
+        out: &mut Vec<f64>,
+    ) {
+        let mut fz = ws.take_c64(self.j);
+        fz.copy_from_slice(&rep.st_fft);
+        let max_j = rep.ts.modes.iter().map(|m| m.range()).max().unwrap_or(0);
+        let mut csbuf = ws.take_f64(max_j);
+        let mut fs = ws.take_c64(self.j);
+        for d in (0..rep.ts.order()).filter(|&d| d != mode) {
+            let jd = rep.ts.modes[d].range();
+            rep.ts.modes[d].apply_into(vs[d], &mut csbuf[..jd]);
+            fft::fft_real_into(&csbuf[..jd], self.j, ws, &mut fs);
+            for (x, y) in fz.iter_mut().zip(fs.iter()) {
+                *x = *x * y.conj();
+            }
+        }
+        let mut z = ws.take_f64(self.j);
+        fft::inverse_real_into(&mut fz, ws, &mut z);
+        let cs_m = &rep.ts.modes[mode];
+        out.clear();
+        out.resize(cs_m.domain(), 0.0);
+        for (i, o) in out.iter_mut().enumerate() {
+            let (b, s) = cs_m.basis(i);
+            *o = s * z[b];
+        }
+        ws.give_f64(z);
+        ws.give_c64(fs);
+        ws.give_f64(csbuf);
+        ws.give_c64(fz);
+    }
+}
+
 impl ContractionEstimator for TsEstimator {
     fn name(&self) -> &'static str {
         "ts"
     }
 
     fn t_uuu(&self, u: &[f64]) -> f64 {
-        let ests: Vec<f64> = self
-            .reps
-            .iter()
-            .map(|rep| {
-                let sk = rep.ts.apply_rank1(&[u, u, u]);
-                crate::linalg::dot(&rep.st, &sk)
-            })
-            .collect();
-        crate::util::timing::median(&ests)
+        fft::with_thread_workspace(|ws| {
+            let mut ests = ws.take_f64(self.reps.len());
+            let mut sk = ws.take_f64(self.j);
+            for (i, rep) in self.reps.iter().enumerate() {
+                rep.ts.apply_rank1_into(&[u, u, u], ws, &mut sk);
+                ests[i] = crate::linalg::dot(&rep.st, &sk);
+            }
+            let m = median_inplace_sorted(&mut ests);
+            ws.give_f64(sk);
+            ws.give_f64(ests);
+            m
+        })
     }
 
     fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
-        let rows: Vec<Vec<f64>> = self
-            .reps
-            .iter()
-            .map(|rep| {
-                // z = F⁻¹( F(st) · Π_{d≠mode} conj(F(CS_d(v_d))) ), circular J,
-                // with F(st) served from the per-rep cache.
-                let mut fz = rep.st_fft.clone();
-                for d in (0..rep.ts.order()).filter(|&d| d != mode) {
-                    let cs = rep.ts.modes[d].apply(vs[d]);
-                    let fs = fft::fft_real(&cs, self.j);
-                    for (x, y) in fz.iter_mut().zip(&fs) {
-                        *x = *x * y.conj();
-                    }
-                }
-                let z = fft::ifft_to_real(fz);
-                let cs_m = &rep.ts.modes[mode];
-                (0..cs_m.domain())
-                    .map(|i| {
-                        let (b, s) = cs_m.basis(i);
-                        s * z[b]
-                    })
-                    .collect()
-            })
-            .collect();
-        elementwise_median(&rows)
+        let mut out = Vec::new();
+        self.t_mode_into(mode, vs, &mut out);
+        out
+    }
+
+    fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
+        let d_reps = self.reps.len();
+        let im = self.reps[0].ts.modes[mode].domain();
+        if reps_parallel(d_reps, self.j) {
+            let rows = par_map(d_reps, crate::util::parallel::default_threads(), |ri| {
+                let mut ws = FftWorkspace::new();
+                let mut row = Vec::new();
+                self.t_mode_one_rep(&self.reps[ri], mode, vs, &mut ws, &mut row);
+                row
+            });
+            let med = elementwise_median(&rows);
+            out.clear();
+            out.extend_from_slice(&med);
+            return;
+        }
+        fft::with_thread_workspace(|ws| {
+            let mut rows = ws.take_f64(d_reps * im);
+            let mut row = ws.take_f64(im);
+            for (ri, rep) in self.reps.iter().enumerate() {
+                self.t_mode_one_rep(rep, mode, vs, ws, &mut row);
+                rows[ri * im..(ri + 1) * im].copy_from_slice(&row);
+            }
+            let mut scratch = ws.take_f64(d_reps);
+            elementwise_median_flat(&rows, d_reps, im, &mut scratch, out);
+            ws.give_f64(scratch);
+            ws.give_f64(row);
+            ws.give_f64(rows);
+        });
     }
 
     fn norm_estimate(&self) -> f64 {
@@ -396,15 +513,22 @@ impl ContractionEstimator for TsEstimator {
     }
 
     fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        for rep in &mut self.reps {
-            let sk = rep.ts.apply_rank1(vs);
-            crate::linalg::axpy(-lambda, &sk, &mut rep.st);
-            // Keep the spectral cache coherent (F is linear).
-            let fs = fft::fft_real(&sk, rep.st.len());
-            for (x, y) in rep.st_fft.iter_mut().zip(&fs) {
-                *x = *x - y.scale(lambda);
+        let j = self.j;
+        fft::with_thread_workspace(|ws| {
+            let mut sk = ws.take_f64(j);
+            let mut fs = ws.take_c64(j);
+            for rep in &mut self.reps {
+                rep.ts.apply_rank1_into(vs, ws, &mut sk);
+                crate::linalg::axpy(-lambda, &sk, &mut rep.st);
+                // Keep the spectral cache coherent (F is linear).
+                fft::fft_real_into(&sk, j, ws, &mut fs);
+                for (x, y) in rep.st_fft.iter_mut().zip(fs.iter()) {
+                    *x = *x - y.scale(lambda);
+                }
             }
-        }
+            ws.give_c64(fs);
+            ws.give_f64(sk);
+        });
     }
 
     fn sketch_bytes(&self) -> usize {
@@ -584,12 +708,59 @@ impl FcsEstimator {
         let fft_len = j_tilde.next_power_of_two();
         let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
             let fcs = FastCountSketch::new(hashes[i].clone());
-            let st = fcs.apply_cp(cp);
+            // Serial spectral path per repetition: the repetitions themselves
+            // are already fanned out across this par_map.
+            let mut ws = FftWorkspace::new();
+            let mut st = Vec::new();
+            fcs.apply_cp_into(cp, &mut ws, &mut st);
             let mut rep = FcsRep { fcs, st, st_fft: Vec::new() };
             rep.refresh_fft(fft_len);
             rep
         });
         Self { reps, j_tilde, fft_len }
+    }
+
+    /// One repetition of Eq. 17 generalized, all scratch rented from `ws`:
+    /// `z = F⁻¹(F(FCS(T)) · Π_{d≠mode} conj(F(CS_d(v_d))))` over
+    /// `fft_len ≥ J̃` points; `out[i] = s_mode(i) · z(h_mode(i))`. No
+    /// wraparound can occur because `h_mode(i) + Σ_{d≠mode}(J_d − 1) ≤
+    /// J̃ − 1 < fft_len`, so the power-of-two length is exact and `F(st)` is
+    /// served from the per-rep cache.
+    fn t_mode_one_rep(
+        &self,
+        rep: &FcsRep,
+        mode: usize,
+        vs: &[&[f64]],
+        ws: &mut FftWorkspace,
+        out: &mut Vec<f64>,
+    ) {
+        let n = self.fft_len;
+        let mut fz = ws.take_c64(n);
+        fz.copy_from_slice(&rep.st_fft);
+        let max_j = rep.fcs.modes.iter().map(|m| m.range()).max().unwrap_or(0);
+        let mut csbuf = ws.take_f64(max_j);
+        let mut fs = ws.take_c64(n);
+        for d in (0..rep.fcs.order()).filter(|&d| d != mode) {
+            let jd = rep.fcs.modes[d].range();
+            rep.fcs.modes[d].apply_into(vs[d], &mut csbuf[..jd]);
+            fft::fft_real_into(&csbuf[..jd], n, ws, &mut fs);
+            for (x, y) in fz.iter_mut().zip(fs.iter()) {
+                *x = *x * y.conj();
+            }
+        }
+        let mut z = ws.take_f64(n);
+        fft::inverse_real_into(&mut fz, ws, &mut z);
+        let cs_m = &rep.fcs.modes[mode];
+        out.clear();
+        out.resize(cs_m.domain(), 0.0);
+        for (i, o) in out.iter_mut().enumerate() {
+            let (b, s) = cs_m.basis(i);
+            *o = s * z[b];
+        }
+        ws.give_f64(z);
+        ws.give_c64(fs);
+        ws.give_f64(csbuf);
+        ws.give_c64(fz);
     }
 }
 
@@ -599,47 +770,56 @@ impl ContractionEstimator for FcsEstimator {
     }
 
     fn t_uuu(&self, u: &[f64]) -> f64 {
-        // Eq. 16: ⟨FCS(T), CS₁(u) ⊛ CS₂(u) ⊛ CS₃(u)⟩ (linear convolution).
-        let ests: Vec<f64> = self
-            .reps
-            .iter()
-            .map(|rep| {
-                let sk = rep.fcs.apply_rank1(&[u, u, u]);
-                crate::linalg::dot(&rep.st, &sk)
-            })
-            .collect();
-        crate::util::timing::median(&ests)
+        // Eq. 16: ⟨FCS(T), CS₁(u) ⊛ CS₂(u) ⊛ CS₃(u)⟩ (linear convolution),
+        // with all FFT scratch rented from the thread workspace.
+        fft::with_thread_workspace(|ws| {
+            let mut ests = ws.take_f64(self.reps.len());
+            let mut sk = ws.take_f64(self.j_tilde);
+            for (i, rep) in self.reps.iter().enumerate() {
+                rep.fcs.apply_rank1_into(&[u, u, u], ws, &mut sk);
+                ests[i] = crate::linalg::dot(&rep.st, &sk);
+            }
+            let m = median_inplace_sorted(&mut ests);
+            ws.give_f64(sk);
+            ws.give_f64(ests);
+            m
+        })
     }
 
     fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
-        // Eq. 17 generalized: z = F⁻¹(F(FCS(T)) · Π_{d≠mode} conj(F(CS_d(v_d))))
-        // over n ≥ J̃ points; out_i = s_mode(i) · z(h_mode(i)). No wraparound
-        // can occur because h_mode(i) + Σ_{d≠mode}(J_d − 1) ≤ J̃ − 1 < n, so
-        // a power-of-two n is exact and F(st) is served from the cache.
-        let _ = self.j_tilde;
-        let rows: Vec<Vec<f64>> = self
-            .reps
-            .iter()
-            .map(|rep| {
-                let mut fz = rep.st_fft.clone();
-                for d in (0..rep.fcs.order()).filter(|&d| d != mode) {
-                    let cs = rep.fcs.modes[d].apply(vs[d]);
-                    let fs = fft::fft_real(&cs, self.fft_len);
-                    for (x, y) in fz.iter_mut().zip(&fs) {
-                        *x = *x * y.conj();
-                    }
-                }
-                let z = fft::ifft_to_real(fz);
-                let cs_m = &rep.fcs.modes[mode];
-                (0..cs_m.domain())
-                    .map(|i| {
-                        let (b, s) = cs_m.basis(i);
-                        s * z[b]
-                    })
-                    .collect()
-            })
-            .collect();
-        elementwise_median(&rows)
+        let mut out = Vec::new();
+        self.t_mode_into(mode, vs, &mut out);
+        out
+    }
+
+    fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
+        let d_reps = self.reps.len();
+        let im = self.reps[0].fcs.modes[mode].domain();
+        if reps_parallel(d_reps, self.fft_len) {
+            let rows = par_map(d_reps, crate::util::parallel::default_threads(), |ri| {
+                let mut ws = FftWorkspace::new();
+                let mut row = Vec::new();
+                self.t_mode_one_rep(&self.reps[ri], mode, vs, &mut ws, &mut row);
+                row
+            });
+            let med = elementwise_median(&rows);
+            out.clear();
+            out.extend_from_slice(&med);
+            return;
+        }
+        fft::with_thread_workspace(|ws| {
+            let mut rows = ws.take_f64(d_reps * im);
+            let mut row = ws.take_f64(im);
+            for (ri, rep) in self.reps.iter().enumerate() {
+                self.t_mode_one_rep(rep, mode, vs, ws, &mut row);
+                rows[ri * im..(ri + 1) * im].copy_from_slice(&row);
+            }
+            let mut scratch = ws.take_f64(d_reps);
+            elementwise_median_flat(&rows, d_reps, im, &mut scratch, out);
+            ws.give_f64(scratch);
+            ws.give_f64(row);
+            ws.give_f64(rows);
+        });
     }
 
     fn norm_estimate(&self) -> f64 {
@@ -648,15 +828,22 @@ impl ContractionEstimator for FcsEstimator {
     }
 
     fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        for rep in &mut self.reps {
-            let sk = rep.fcs.apply_rank1(vs);
-            crate::linalg::axpy(-lambda, &sk, &mut rep.st);
-            // Keep the spectral cache coherent (F is linear).
-            let fs = fft::fft_real(&sk, self.fft_len);
-            for (x, y) in rep.st_fft.iter_mut().zip(&fs) {
-                *x = *x - y.scale(lambda);
+        let (j_tilde, fft_len) = (self.j_tilde, self.fft_len);
+        fft::with_thread_workspace(|ws| {
+            let mut sk = ws.take_f64(j_tilde);
+            let mut fs = ws.take_c64(fft_len);
+            for rep in &mut self.reps {
+                rep.fcs.apply_rank1_into(vs, ws, &mut sk);
+                crate::linalg::axpy(-lambda, &sk, &mut rep.st);
+                // Keep the spectral cache coherent (F is linear).
+                fft::fft_real_into(&sk, fft_len, ws, &mut fs);
+                for (x, y) in rep.st_fft.iter_mut().zip(fs.iter()) {
+                    *x = *x - y.scale(lambda);
+                }
             }
-        }
+            ws.give_c64(fs);
+            ws.give_f64(sk);
+        });
     }
 
     fn sketch_bytes(&self) -> usize {

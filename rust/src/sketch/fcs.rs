@@ -4,9 +4,12 @@
 //! equivalently, for CP tensors, the zero-padded **linear** convolution of
 //! the per-mode count sketches (Eq. 8). Output length `J̃ = Σ J_n − N + 1`.
 
-use super::common::{sketch_dense, sketch_dense_into};
+use super::common::{
+    accumulate_cp_spectra, accumulate_cp_spectra_parallel, cp_rank_parallel, rank1_spectrum_into,
+    sketch_dense, sketch_dense_into,
+};
 use super::cs::CountSketch;
-use crate::fft;
+use crate::fft::{self, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::tensor::{CpTensor, Tensor};
 
@@ -39,9 +42,67 @@ impl FastCountSketch {
         sketch_dense_into(t, &self.hashes, None, out);
     }
 
+    /// FFT length for the CP fast path: FCS's linear (non-modular) structure
+    /// means any `n ≥ J̃` is exact, so round up to a power of two and skip
+    /// Bluestein entirely.
+    #[inline]
+    pub fn fft_len(&self) -> usize {
+        self.j_tilde.next_power_of_two()
+    }
+
     /// Sketch a CP tensor by **linear** convolution of per-mode count
     /// sketches (Eq. 8) — `O(max_n nnz(U^{(n)}) + R·J̃ log J̃)`.
+    ///
+    /// The rank sum `Σ_r λ_r · Π_n F(CS_n(u_r))` is accumulated in the
+    /// **spectral domain**, so the whole call runs a single inverse FFT
+    /// (R IFFTs → 1, §Perf). Above a size threshold the ranks fan out over
+    /// worker threads.
     pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let n = self.fft_len();
+        if cp_rank_parallel(cp.rank(), n) {
+            let mut acc =
+                accumulate_cp_spectra_parallel(&self.modes, &cp.factors, &cp.lambda, cp.rank(), n);
+            return fft::with_thread_workspace(|ws| {
+                let mut out = Vec::with_capacity(n);
+                fft::inverse_real_into(&mut acc, ws, &mut out);
+                out.truncate(self.j_tilde);
+                out
+            });
+        }
+        fft::with_thread_workspace(|ws| {
+            // Capacity = transform length: inverse_real_into fills to n
+            // before the truncate to J̃.
+            let mut out = Vec::with_capacity(n);
+            self.apply_cp_into(cp, ws, &mut out);
+            out
+        })
+    }
+
+    /// Serial workspace variant of [`Self::apply_cp`]: zero heap allocations
+    /// in steady state (all scratch rented from `ws`, `out` reused).
+    pub fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let n = self.fft_len();
+        let mut acc = ws.take_c64(n);
+        accumulate_cp_spectra(
+            &self.modes,
+            &cp.factors,
+            &cp.lambda,
+            0..cp.rank(),
+            n,
+            ws,
+            &mut acc,
+        );
+        fft::inverse_real_into(&mut acc, ws, out);
+        out.truncate(self.j_tilde);
+        ws.give_c64(acc);
+    }
+
+    /// Pre-spectral-accumulation reference (one linear convolution and one
+    /// inverse FFT **per rank**). Kept as the oracle for property tests and
+    /// as the baseline the §Perf rank-R speedup is measured against.
+    pub fn apply_cp_per_rank(&self, cp: &CpTensor) -> Vec<f64> {
         assert_eq!(cp.shape(), self.hashes.dims);
         let mut out = vec![0.0; self.j_tilde];
         for r in 0..cp.rank() {
@@ -61,15 +122,23 @@ impl FastCountSketch {
 
     /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` (used by Eq. 16).
     pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
+        fft::with_thread_workspace(|ws| {
+            let mut out = Vec::with_capacity(self.fft_len());
+            self.apply_rank1_into(vs, ws, &mut out);
+            out
+        })
+    }
+
+    /// Workspace variant of [`Self::apply_rank1`] — zero allocations in
+    /// steady state.
+    pub fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
         assert_eq!(vs.len(), self.order());
-        let sketched: Vec<Vec<f64>> = self
-            .modes
-            .iter()
-            .zip(vs)
-            .map(|(cs, v)| cs.apply(v))
-            .collect();
-        let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
-        fft::conv_linear_many(&refs)
+        let n = self.fft_len();
+        let mut spec = ws.take_c64(n);
+        rank1_spectrum_into(&self.modes, vs, n, ws, &mut spec);
+        fft::inverse_real_into(&mut spec, ws, out);
+        out.truncate(self.j_tilde);
+        ws.give_c64(spec);
     }
 
     /// The defining equivalence (Eq. 6): CS of `vec(T)` under the
@@ -123,10 +192,74 @@ mod tests {
         let fcs = FastCountSketch::new(mh);
         let via_cp = fcs.apply_cp(&cp);
         let via_dense = fcs.apply_dense(&cp.to_dense());
+        let via_per_rank = fcs.apply_cp_per_rank(&cp);
         assert_eq!(via_cp.len(), 3 * 8 - 3 + 1);
         for (a, b) in via_cp.iter().zip(&via_dense) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
+        for (a, b) in via_cp.iter().zip(&via_per_rank) {
+            assert!((a - b).abs() < 1e-9, "spectral {a} vs per-rank {b}");
+        }
+    }
+
+    #[test]
+    fn qcheck_spectral_cp_matches_reference_and_dense() {
+        // Property: the one-IFFT spectral-accumulation path ≡ the per-rank
+        // reference ≡ apply_dense on the materialized CP tensor, across
+        // random orders, heterogeneous mode ranges, and non-power-of-two J̃.
+        use crate::util::qcheck::qcheck;
+        qcheck(12, |g| {
+            let order = g.usize_in(2, 4);
+            let shape = g.shape(order, 2, 5);
+            let ranges: Vec<usize> = (0..order).map(|_| g.usize_in(2, 9)).collect();
+            let rank = g.usize_in(1, 4);
+            let cp = CpTensor::randn(g.rng(), &shape, rank);
+            let mh = ModeHashes::draw(g.rng(), &shape, &ranges);
+            let fcs = FastCountSketch::new(mh);
+            let spectral = fcs.apply_cp(&cp);
+            let per_rank = fcs.apply_cp_per_rank(&cp);
+            let dense = fcs.apply_dense(&cp.to_dense());
+            assert_eq!(spectral.len(), fcs.j_tilde);
+            let scale = dense.iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for k in 0..fcs.j_tilde {
+                assert!(
+                    (spectral[k] - per_rank[k]).abs() < 1e-9 * scale,
+                    "case {}: k={k} spectral {} vs per-rank {}",
+                    g.case,
+                    spectral[k],
+                    per_rank[k]
+                );
+                assert!(
+                    (spectral[k] - dense[k]).abs() < 1e-8 * scale,
+                    "case {}: k={k} spectral {} vs dense {}",
+                    g.case,
+                    spectral[k],
+                    dense[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn qcheck_rank1_into_matches_dense() {
+        use crate::fft::FftWorkspace;
+        use crate::util::qcheck::qcheck;
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+        qcheck(10, |g| {
+            let shape = g.shape(3, 2, 6);
+            let ranges: Vec<usize> = (0..3).map(|_| g.usize_in(2, 8)).collect();
+            let vs: Vec<Vec<f64>> = shape.iter().map(|&d| g.normal_vec(d)).collect();
+            let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+            let mh = ModeHashes::draw(g.rng(), &shape, &ranges);
+            let fcs = FastCountSketch::new(mh);
+            fcs.apply_rank1_into(&refs, &mut ws, &mut out);
+            let dense = fcs.apply_dense(&crate::tensor::outer(&refs));
+            assert_eq!(out.len(), dense.len());
+            for (a, b) in out.iter().zip(&dense) {
+                assert!((a - b).abs() < 1e-9, "case {}: {a} vs {b}", g.case);
+            }
+        });
     }
 
     #[test]

@@ -17,8 +17,8 @@ pub mod ts;
 
 pub use cs::CountSketch;
 pub use estimator::{
-    build_equalized, elementwise_median, ContractionEstimator, CsEstimator, FcsEstimator,
-    HcsEstimator, Method, PlainEstimator, TsEstimator,
+    build_equalized, elementwise_median, elementwise_median_flat, ContractionEstimator,
+    CsEstimator, FcsEstimator, HcsEstimator, Method, PlainEstimator, TsEstimator,
 };
 pub use fcs::FastCountSketch;
 pub use hcs::HigherOrderCountSketch;

@@ -2,9 +2,12 @@
 //! `(Σ_n h_n(i_n)) mod J`, which for CP tensors is the mode-J **circular**
 //! convolution of the per-mode count sketches (Eq. 3).
 
-use super::common::{sketch_dense, sketch_dense_into};
+use super::common::{
+    accumulate_cp_spectra, accumulate_cp_spectra_parallel, cp_rank_parallel, rank1_spectrum_into,
+    sketch_dense, sketch_dense_into,
+};
 use super::cs::CountSketch;
-use crate::fft;
+use crate::fft::{self, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::tensor::{CpTensor, Tensor};
 
@@ -43,8 +46,53 @@ impl TensorSketch {
     }
 
     /// Sketch a CP tensor by circular convolution of per-mode count sketches
-    /// (Eq. 3) — `O(max_n nnz(U^{(n)}) + R·J log J)`.
+    /// (Eq. 3) — `O(max_n nnz(U^{(n)}) + R·J log J)`. Rank products are
+    /// accumulated in the spectral domain (one inverse FFT total instead of
+    /// one per rank); large rank counts fan out over threads.
     pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        if cp_rank_parallel(cp.rank(), self.j) {
+            let mut acc = accumulate_cp_spectra_parallel(
+                &self.modes,
+                &cp.factors,
+                &cp.lambda,
+                cp.rank(),
+                self.j,
+            );
+            return fft::with_thread_workspace(|ws| {
+                let mut out = Vec::with_capacity(self.j);
+                fft::inverse_real_into(&mut acc, ws, &mut out);
+                out
+            });
+        }
+        fft::with_thread_workspace(|ws| {
+            let mut out = Vec::with_capacity(self.j);
+            self.apply_cp_into(cp, ws, &mut out);
+            out
+        })
+    }
+
+    /// Serial workspace variant of [`Self::apply_cp`] — zero heap
+    /// allocations in steady state.
+    pub fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        assert_eq!(cp.shape(), self.hashes.dims);
+        let mut acc = ws.take_c64(self.j);
+        accumulate_cp_spectra(
+            &self.modes,
+            &cp.factors,
+            &cp.lambda,
+            0..cp.rank(),
+            self.j,
+            ws,
+            &mut acc,
+        );
+        fft::inverse_real_into(&mut acc, ws, out);
+        ws.give_c64(acc);
+    }
+
+    /// Pre-spectral-accumulation reference (one circular convolution and one
+    /// inverse FFT per rank) — property-test oracle and §Perf baseline.
+    pub fn apply_cp_per_rank(&self, cp: &CpTensor) -> Vec<f64> {
         assert_eq!(cp.shape(), self.hashes.dims);
         let mut out = vec![0.0; self.j];
         for r in 0..cp.rank() {
@@ -63,15 +111,21 @@ impl TensorSketch {
 
     /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` without materializing it.
     pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
+        fft::with_thread_workspace(|ws| {
+            let mut out = Vec::with_capacity(self.j);
+            self.apply_rank1_into(vs, ws, &mut out);
+            out
+        })
+    }
+
+    /// Workspace variant of [`Self::apply_rank1`] — zero allocations in
+    /// steady state.
+    pub fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
         assert_eq!(vs.len(), self.order());
-        let sketched: Vec<Vec<f64>> = self
-            .modes
-            .iter()
-            .zip(vs)
-            .map(|(cs, v)| cs.apply(v))
-            .collect();
-        let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
-        fft::conv_circular_many(&refs)
+        let mut spec = ws.take_c64(self.j);
+        rank1_spectrum_into(&self.modes, vs, self.j, ws, &mut spec);
+        fft::inverse_real_into(&mut spec, ws, out);
+        ws.give_c64(spec);
     }
 }
 
@@ -89,9 +143,46 @@ mod tests {
         let ts = TensorSketch::new(mh);
         let via_cp = ts.apply_cp(&cp);
         let via_dense = ts.apply_dense(&cp.to_dense());
+        let via_per_rank = ts.apply_cp_per_rank(&cp);
         for (a, b) in via_cp.iter().zip(&via_dense) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
+        for (a, b) in via_cp.iter().zip(&via_per_rank) {
+            assert!((a - b).abs() < 1e-9, "spectral {a} vs per-rank {b}");
+        }
+    }
+
+    #[test]
+    fn qcheck_spectral_cp_matches_reference_and_dense() {
+        // Property over random shapes, ranks and (possibly odd, non-pow2) J:
+        // one-IFFT spectral accumulation ≡ per-rank circular reference ≡
+        // apply_dense on the materialized CP tensor.
+        use crate::util::qcheck::qcheck;
+        qcheck(10, |g| {
+            let order = g.usize_in(2, 3);
+            let shape = g.shape(order, 2, 5);
+            let j = g.usize_in(2, 13);
+            let rank = g.usize_in(1, 4);
+            let cp = CpTensor::randn(g.rng(), &shape, rank);
+            let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+            let ts = TensorSketch::new(mh);
+            let spectral = ts.apply_cp(&cp);
+            let per_rank = ts.apply_cp_per_rank(&cp);
+            let dense = ts.apply_dense(&cp.to_dense());
+            let scale = dense.iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for k in 0..j {
+                assert!(
+                    (spectral[k] - per_rank[k]).abs() < 1e-9 * scale,
+                    "case {}: k={k}",
+                    g.case
+                );
+                assert!(
+                    (spectral[k] - dense[k]).abs() < 1e-8 * scale,
+                    "case {}: k={k}",
+                    g.case
+                );
+            }
+        });
     }
 
     #[test]

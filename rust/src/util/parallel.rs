@@ -1,6 +1,7 @@
-//! Minimal data-parallel helpers built on `std::thread` (rayon is not
-//! available offline). Used for the D independent sketch repetitions and for
-//! embarrassingly-parallel bench sweeps.
+//! Minimal data-parallel helpers built on `std::thread::scope` (rayon and
+//! crossbeam are not available offline; scoped threads landed in std 1.63).
+//! Used for the D independent sketch repetitions, the rank fan-out of the
+//! spectral CP paths, and embarrassingly-parallel bench sweeps.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -29,9 +30,9 @@ where
     }
     let next = AtomicUsize::new(0);
     let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|_| {
+            scope.spawn(|| {
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -46,8 +47,7 @@ where
                 }
             });
         }
-    })
-    .expect("par_map worker panicked");
+    });
     out.into_inner()
         .unwrap()
         .into_iter()
@@ -71,9 +71,9 @@ where
     }
     let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
     let work = Mutex::new(chunks);
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|_| loop {
+            scope.spawn(|| loop {
                 let item = work.lock().unwrap().pop();
                 match item {
                     Some((ci, c)) => f(ci, c),
@@ -81,8 +81,7 @@ where
                 }
             });
         }
-    })
-    .expect("par_chunks_mut worker panicked");
+    });
 }
 
 #[cfg(test)]

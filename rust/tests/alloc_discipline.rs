@@ -1,0 +1,167 @@
+//! Steady-state allocation discipline for the spectral hot paths.
+//!
+//! A counting global allocator wraps `System`; after a warmup pass that
+//! populates workspace pools, plan caches, and output capacities, the
+//! FFT/convolution `_into` kernels, the FCS CP fast path, and the estimator
+//! `t_mode`/`t_iuu` inner-loop paths (what sketched ALS/RTPM iterate on)
+//! must perform **zero** heap allocations per call.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fcs::fft::FftWorkspace;
+use fcs::hash::ModeHashes;
+use fcs::sketch::{ContractionEstimator, FastCountSketch, FcsEstimator, TensorSketch};
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run `f` once and return how many allocations it performed.
+fn allocs_of(mut f: impl FnMut()) -> u64 {
+    let before = count();
+    f();
+    count() - before
+}
+
+/// One test function (not several) so no other test thread in this binary
+/// can pollute the global counter mid-measurement.
+#[test]
+fn hot_paths_are_allocation_free_in_steady_state() {
+    let mut rng = Rng::seed_from_u64(99);
+
+    // --- convolution kernels ------------------------------------------------
+    {
+        let a = rng.normal_vec(23);
+        let b = rng.normal_vec(17);
+        let c = rng.normal_vec(9);
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            fcs::fft::conv_linear_many_into(&[&a, &b, &c], &mut ws, &mut out);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs::fft::conv_linear_many_into(&[&a, &b, &c], &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "conv_linear_many_into allocated {n} times in steady state");
+
+        // Bluestein (odd length) path with workspace-owned scratch.
+        let d = rng.normal_vec(21);
+        let e = rng.normal_vec(21);
+        for _ in 0..2 {
+            fcs::fft::conv_circular_many_into(&[&d, &e], &mut ws, &mut out);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs::fft::conv_circular_many_into(&[&d, &e], &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "conv_circular_many_into (Bluestein) allocated {n} times");
+    }
+
+    // --- FCS / TS CP fast paths (one IFFT, spectral accumulation) ----------
+    {
+        let shape = [8usize, 9, 7];
+        let cp = CpTensor::randn(&mut rng, &shape, 4);
+        let mh = ModeHashes::draw(&mut rng, &shape, &[8, 16, 5]);
+        let fcs_op = FastCountSketch::new(mh);
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            fcs_op.apply_cp_into(&cp, &mut ws, &mut out);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs_op.apply_cp_into(&cp, &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "FastCountSketch::apply_cp_into allocated {n} times");
+
+        let mh2 = ModeHashes::draw_uniform(&mut rng, &shape, 11);
+        let ts_op = TensorSketch::new(mh2);
+        for _ in 0..2 {
+            ts_op.apply_cp_into(&cp, &mut ws, &mut out);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                ts_op.apply_cp_into(&cp, &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "TensorSketch::apply_cp_into allocated {n} times");
+
+        let u = rng.normal_vec(8);
+        let v = rng.normal_vec(9);
+        let w = rng.normal_vec(7);
+        for _ in 0..2 {
+            fcs_op.apply_rank1_into(&[&u, &v, &w], &mut ws, &mut out);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs_op.apply_rank1_into(&[&u, &v, &w], &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "FastCountSketch::apply_rank1_into allocated {n} times");
+    }
+
+    // --- estimator inner loop (what sketched ALS/RTPM hammer) -------------
+    {
+        let dim = 10usize;
+        let t = Tensor::randn(&mut rng, &[dim, dim, dim]);
+        let est = FcsEstimator::build(&t, 3, 16, &mut rng);
+        let u = rng.normal_vec(dim);
+        let v = rng.normal_vec(dim);
+        let w = rng.normal_vec(dim);
+        let vs: [&[f64]; 3] = [&u, &v, &w];
+        let mut col = Vec::new();
+        for _ in 0..3 {
+            est.t_mode_into(0, &vs, &mut col);
+            est.t_mode_into(1, &vs, &mut col);
+            est.t_iuu_into(&u, &mut col);
+            let _ = est.t_uuu(&u);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                est.t_mode_into(0, &vs, &mut col);
+                est.t_mode_into(1, &vs, &mut col);
+                est.t_iuu_into(&u, &mut col);
+                let _ = est.t_uuu(&u);
+            }
+        });
+        assert_eq!(
+            n, 0,
+            "FcsEstimator t_mode_into/t_iuu_into/t_uuu allocated {n} times in steady state"
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links libpjrt and is only present on hosts with the XLA
+//! toolchain. This stub keeps `fcs::runtime` compiling everywhere with the
+//! same API surface; every entry point fails with a clear "PJRT unavailable"
+//! error, which the callers (runtime tests, coordinator XLA path, TRN
+//! pipeline) already treat as "skip the XLA path".
+
+use std::fmt;
+
+/// Error type; implements `std::error::Error` so `?` converts into
+/// `anyhow::Error` at call sites.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error("PJRT runtime unavailable in this build (offline xla stub)".into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    F64,
+    S32,
+}
+
+/// Stub PJRT client. `cpu()` always fails — by design, before any executable
+/// or literal can be constructed.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable())
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}

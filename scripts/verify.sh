@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verification + bench bit-rot guard.
+#
+#   scripts/verify.sh          # build, format check, tests, quick benches
+#   scripts/verify.sh --fast   # skip the bench smoke pass
+#
+# Benches are self-harnessed binaries (harness = false); FCS_BENCH_QUICK=1
+# shrinks every sweep so each one finishes in seconds. Running them here
+# guarantees they keep compiling *and* executing as the library evolves.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+# Advisory: the offline image may carry a different rustfmt (or none); style
+# drift should be visible in CI logs but must not mask real build failures.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all --check || echo "WARN: rustfmt reported differences (non-fatal)"
+else
+    echo "rustfmt unavailable; skipping"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== bench smoke (FCS_BENCH_QUICK=1) =="
+    for bench in perf_hotpath ablation_hash fig1_rtpm_synthetic fig2_watercolors \
+                 fig3_buddha fig5_kronecker fig6_contraction table1_complexity \
+                 table2_hcs_vs_fcs table3_als table4_trn; do
+        echo "-- bench: ${bench}"
+        FCS_BENCH_QUICK=1 cargo bench --bench "${bench}"
+    done
+fi
+
+echo "verify: OK"
