@@ -16,5 +16,5 @@ pub mod service;
 pub mod stats;
 
 pub use msg::{Request, Response, ServiceError, SketchMethod};
-pub use service::{Service, ServiceConfig, ServiceHandle};
+pub use service::{Service, ServiceConfig, ServiceHandle, WorkerState};
 pub use stats::{Stats, StatsReport};

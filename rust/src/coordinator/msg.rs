@@ -31,17 +31,30 @@ pub enum Response {
 }
 
 /// Service errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ServiceError {
-    #[error("service queue is full (backpressure)")]
+    /// Service queue is full (backpressure).
     Busy,
-    #[error("service is shutting down")]
+    /// Service is shutting down.
     Closed,
-    #[error("bad request: {0}")]
+    /// Request failed validation.
     BadRequest(String),
-    #[error("execution failed: {0}")]
+    /// Execution failed.
     Exec(String),
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Busy => write!(f, "service queue is full (backpressure)"),
+            ServiceError::Closed => write!(f, "service is shutting down"),
+            ServiceError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServiceError::Exec(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 impl Request {
     pub fn op_name(&self) -> &'static str {
@@ -51,5 +64,85 @@ impl Request {
             Request::SketchCp { .. } => "sketch_cp",
             Request::InnerEstimate { .. } => "inner_estimate",
         }
+    }
+
+    /// Grouping key `(op·method, j, dims-fold)` — the worker pool sorts its
+    /// drained batch by this so same-shape jobs run consecutively on a warm
+    /// workspace/hash arena (one plan lookup and zero redraw reallocation
+    /// for the whole run). Arena warmth depends on the exact per-mode
+    /// domains and the order (they set hash-table sizes, J̃ and the FFT
+    /// plan lengths), so the key folds the dims order-sensitively instead
+    /// of collapsing them to a product — `[8,8]` and `[4,4,4]` must not
+    /// group together.
+    pub fn shape_key(&self) -> (u8, usize, usize) {
+        // Tiny FNV-style mix; collisions only cost grouping quality, never
+        // correctness (every job still gets its own hash draw).
+        fn dims_key(dims: impl Iterator<Item = usize>) -> usize {
+            dims.fold(0usize, |h, d| {
+                h.wrapping_mul(0x0100_0000_01B3).wrapping_add(d.wrapping_add(1))
+            })
+        }
+        match self {
+            Request::CsVec { x } => (0, 0, x.len()),
+            Request::SketchDense { tensor, method, j } => {
+                let m = match method {
+                    SketchMethod::Ts => 1,
+                    SketchMethod::Fcs => 2,
+                };
+                (m, *j, dims_key(tensor.shape.iter().copied()))
+            }
+            Request::SketchCp { cp, j } => {
+                // Rank does not affect arena warmth — key on the dims only.
+                (3, *j, dims_key(cp.factors.iter().map(|f| f.rows)))
+            }
+            Request::InnerEstimate { a, method, j, .. } => {
+                // Method is part of the shape: Ts and Fcs sketch to
+                // different lengths (j vs J̃). The repetition count d does
+                // not touch the arenas, so it stays out of the key.
+                let m = match method {
+                    SketchMethod::Ts => 4,
+                    SketchMethod::Fcs => 5,
+                };
+                (m, *j, dims_key(a.shape.iter().copied()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_error_display() {
+        assert_eq!(ServiceError::Busy.to_string(), "service queue is full (backpressure)");
+        assert_eq!(ServiceError::Closed.to_string(), "service is shutting down");
+        assert_eq!(
+            ServiceError::BadRequest("nope".into()).to_string(),
+            "bad request: nope"
+        );
+        assert_eq!(ServiceError::Exec("boom".into()).to_string(), "execution failed: boom");
+    }
+
+    #[test]
+    fn shape_key_groups_same_shape() {
+        let mut rng = crate::util::prng::Rng::seed_from_u64(1);
+        let a = Tensor::randn(&mut rng, &[4, 5, 6]);
+        let b = Tensor::randn(&mut rng, &[4, 5, 6]);
+        let c = Tensor::randn(&mut rng, &[7, 2, 2]);
+        let ka = Request::SketchDense { tensor: a, method: SketchMethod::Fcs, j: 8 }.shape_key();
+        let kb = Request::SketchDense { tensor: b, method: SketchMethod::Fcs, j: 8 }.shape_key();
+        let kc = Request::SketchDense { tensor: c, method: SketchMethod::Fcs, j: 8 }.shape_key();
+        assert_eq!(ka, kb);
+        assert_ne!(ka, kc);
+        assert_ne!(
+            Request::SketchDense {
+                tensor: Tensor::randn(&mut rng, &[4, 5, 6]),
+                method: SketchMethod::Ts,
+                j: 8
+            }
+            .shape_key(),
+            ka
+        );
     }
 }

@@ -1,14 +1,29 @@
 //! The sketch service: bounded ingress queues (backpressure), a dynamic
 //! batcher in front of the XLA `cs_batch` executable, and a pure-Rust worker
 //! pool for the remaining ops. See DESIGN.md §7.
+//!
+//! Workers execute through a per-worker [`WorkerState`] — an FFT workspace,
+//! a hash-redraw arena, and per-mode count-sketch storage — so the
+//! `sketch_dense` / `sketch_cp` / `inner_estimate` compute paths perform
+//! **zero heap allocations** in steady state (the response `Vec` handed to
+//! the client is the one unavoidable per-request allocation; it transfers
+//! ownership out of the worker). When the pool is saturated (every other
+//! worker mid-job), a worker also drains the backlog opportunistically and
+//! sorts the drained batch by [`Request::shape_key`], so same-shape jobs run
+//! consecutively on a warm workspace: one plan lookup and zero arena
+//! resizing serve the whole run. Under light load workers take one job per
+//! wakeup, keeping bursts fanned out across the pool.
 
 use super::msg::{Request, Response, ServiceError, SketchMethod};
 use super::stats::{Stats, StatsReport};
-use crate::hash::{HashPair, ModeHashes};
+use crate::fft::FftWorkspace;
+use crate::hash::{HashPair, HashTable, ModeHashes};
 use crate::runtime::{RuntimeHandle, TensorArg};
-use crate::sketch::{FastCountSketch, TensorSketch};
+use crate::sketch::common::sketch_dense_into;
+use crate::sketch::{CountSketch, SpectralSketchCore};
+use crate::tensor::{CpTensor, Tensor};
 use crate::util::prng::Rng;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -91,6 +106,13 @@ impl ServiceHandle {
     }
 
     fn validate(&self, req: &Request) -> Result<(), ServiceError> {
+        // Tensor/Matrix fields are pub, so a client *can* hand us an
+        // internally inconsistent value (data length ≠ shape product). The
+        // sketch kernels index hash tables by shape-derived fibers, so such
+        // a request would panic a worker mid-batch — reject it up front.
+        fn well_formed(t: &Tensor) -> bool {
+            !t.shape.is_empty() && t.data.len() == t.shape.iter().product::<usize>()
+        }
         match req {
             Request::CsVec { x } => {
                 if x.len() != self.cs_in_dim {
@@ -105,18 +127,31 @@ impl ServiceHandle {
                 if tensor.numel() == 0 || *j == 0 {
                     return Err(ServiceError::BadRequest("empty tensor or j=0".into()));
                 }
+                if !well_formed(tensor) {
+                    return Err(ServiceError::BadRequest("tensor shape/data mismatch".into()));
+                }
             }
             Request::SketchCp { cp, j } => {
-                if cp.rank() == 0 || *j == 0 {
+                if cp.rank() == 0 || cp.order() == 0 || *j == 0 {
                     return Err(ServiceError::BadRequest("empty cp or j=0".into()));
+                }
+                for f in &cp.factors {
+                    if f.rows == 0 || f.cols != cp.rank() || f.data.len() != f.rows * f.cols {
+                        return Err(ServiceError::BadRequest(
+                            "cp factor shape/data mismatch".into(),
+                        ));
+                    }
                 }
             }
             Request::InnerEstimate { a, b, d, j, .. } => {
                 if a.shape != b.shape {
                     return Err(ServiceError::BadRequest("shape mismatch".into()));
                 }
-                if *d == 0 || *j == 0 {
-                    return Err(ServiceError::BadRequest("d=0 or j=0".into()));
+                if *d == 0 || *j == 0 || a.numel() == 0 {
+                    return Err(ServiceError::BadRequest("empty tensor, d=0 or j=0".into()));
+                }
+                if !well_formed(a) || !well_formed(b) {
+                    return Err(ServiceError::BadRequest("tensor shape/data mismatch".into()));
                 }
             }
         }
@@ -191,17 +226,20 @@ impl Service {
 
         // --- worker pool -----------------------------------------------------
         let req_counter = Arc::new(AtomicU64::new(0));
-        for w in 0..cfg.workers.max(1) {
+        let busy_workers = Arc::new(AtomicUsize::new(0));
+        let pool_size = cfg.workers.max(1);
+        for w in 0..pool_size {
             let rx = work_rx.clone();
             let stats = stats.clone();
             let runtime = runtime.clone();
             let counter = req_counter.clone();
+            let busy = busy_workers.clone();
             let seed = cfg.seed;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("fcs-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(rx, runtime, seed, counter, stats);
+                        worker_loop(rx, runtime, seed, counter, busy, pool_size, stats);
                     })
                     .expect("spawn worker"),
             );
@@ -337,89 +375,250 @@ fn batcher_loop(
 // Worker pool: pure-Rust sketch ops (+ XLA fcs_rank1 when shapes match)
 // ---------------------------------------------------------------------------
 
+/// How many already-queued jobs a worker drains per wakeup when the pool is
+/// saturated. Drained jobs are committed to this worker, so the bound also
+/// caps the transient head-of-line blocking if a sibling frees up mid-batch:
+/// small enough to keep that bounded, large enough that a burst of
+/// same-shape jobs shares one warm-up.
+const WORKER_DRAIN: usize = 8;
+
+/// Per-worker reusable execution state: FFT workspace (scratch arenas +
+/// cached plan handles), a [`ModeHashes`] redraw arena for the dense paths,
+/// and per-mode [`CountSketch`] storage for the spectral CP path. Public so
+/// the allocation-discipline test can drive the exact service compute paths
+/// with a counting allocator.
+pub struct WorkerState {
+    ws: FftWorkspace,
+    /// Hash arena for `sketch_dense` / `inner_estimate` (redrawn in place).
+    hashes: ModeHashes,
+    /// Per-mode count sketches for `sketch_cp` (tables redrawn in place).
+    cs_modes: Vec<CountSketch>,
+    /// Sketch scratch for `inner_estimate`.
+    sa: Vec<f64>,
+    sb: Vec<f64>,
+    /// Per-repetition estimates for `inner_estimate`.
+    ests: Vec<f64>,
+}
+
+impl Default for WorkerState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerState {
+    pub fn new() -> Self {
+        Self {
+            ws: FftWorkspace::new(),
+            hashes: ModeHashes::empty(),
+            cs_modes: Vec::new(),
+            sa: Vec::new(),
+            sb: Vec::new(),
+            ests: Vec::new(),
+        }
+    }
+
+    /// Fold/length parameters of a dense sketch under the *current* hash
+    /// arena: TS buckets mod `J`, FCS keeps the composite range un-folded.
+    /// The single source of truth for both dense service ops.
+    fn dense_params(&self, method: SketchMethod, j: usize) -> (Option<usize>, usize) {
+        match method {
+            SketchMethod::Ts => (Some(j), j),
+            SketchMethod::Fcs => (None, self.hashes.composite_range()),
+        }
+    }
+
+    /// The `sketch_dense` op body: fresh per-mode hash draw (arena storage
+    /// reused) + the `O(nnz)` dense walk into `out`. Zero heap allocations
+    /// in steady state (same shape/J stream).
+    pub fn sketch_dense_into(
+        &mut self,
+        tensor: &Tensor,
+        method: SketchMethod,
+        j: usize,
+        rng: &mut Rng,
+        out: &mut Vec<f64>,
+    ) {
+        self.hashes.redraw_uniform(rng, &tensor.shape, j);
+        let (modulo, len) = self.dense_params(method, j);
+        out.clear();
+        out.resize(len, 0.0);
+        sketch_dense_into(tensor, &self.hashes, modulo, out);
+    }
+
+    /// The `sketch_cp` pure-Rust body: per-mode hash redraw into the
+    /// count-sketch arena, then the shared spectral core's one-IFFT rank
+    /// accumulation. Zero heap allocations in steady state.
+    pub fn sketch_cp_into(&mut self, cp: &CpTensor, j: usize, rng: &mut Rng, out: &mut Vec<f64>) {
+        let order = cp.order();
+        self.cs_modes.truncate(order);
+        while self.cs_modes.len() < order {
+            self.cs_modes
+                .push(CountSketch::new(HashTable { h: Vec::new(), s: Vec::new(), range: 0 }));
+        }
+        crate::hash::redraw_tables_uniform(
+            rng,
+            j,
+            self.cs_modes
+                .iter_mut()
+                .map(|cs| &mut cs.table)
+                .zip(cp.factors.iter().map(|f| f.rows)),
+        );
+        // J̃ derived from the tables actually drawn (one formula home in the
+        // core), so this stays correct if ranges ever become heterogeneous.
+        let core = SpectralSketchCore::linear_from_modes(&self.cs_modes);
+        core.apply_cp_into(cp, &mut self.ws, out);
+    }
+
+    /// The `inner_estimate` op body: `d` independent hash redraws, both
+    /// tensors sketched into reusable scratch, median of the per-repetition
+    /// inner products. Zero heap allocations in steady state.
+    pub fn inner_estimate(
+        &mut self,
+        a: &Tensor,
+        b: &Tensor,
+        method: SketchMethod,
+        j: usize,
+        d: usize,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.ests.clear();
+        self.ests.reserve(d);
+        for _ in 0..d {
+            self.hashes.redraw_uniform(rng, &a.shape, j);
+            let (modulo, len) = self.dense_params(method, j);
+            self.sa.clear();
+            self.sa.resize(len, 0.0);
+            self.sb.clear();
+            self.sb.resize(len, 0.0);
+            sketch_dense_into(a, &self.hashes, modulo, &mut self.sa);
+            sketch_dense_into(b, &self.hashes, modulo, &mut self.sb);
+            self.ests.push(crate::linalg::dot(&self.sa, &self.sb));
+        }
+        // total_cmp, not partial_cmp().unwrap(): a NaN smuggled in through a
+        // client tensor must not panic a worker mid-batch (which would drop
+        // every other committed job's reply and shrink the pool for good).
+        self.ests.sort_unstable_by(f64::total_cmp);
+        crate::util::timing::percentile_sorted(&self.ests, 50.0)
+    }
+
+    /// Execute one worker-pool request. The returned `Response` owns its
+    /// payload (it leaves the worker), so the payload `Vec` is the only
+    /// per-request allocation on the pure-Rust paths.
+    fn execute(
+        &mut self,
+        req: Request,
+        runtime: &Option<RuntimeHandle>,
+        rng: &mut Rng,
+    ) -> Result<Response, ServiceError> {
+        match req {
+            Request::CsVec { .. } => unreachable!("cs_vec is routed to the batcher"),
+            Request::SketchDense { tensor, method, j } => {
+                let mut out = Vec::new();
+                self.sketch_dense_into(&tensor, method, j, rng, &mut out);
+                Ok(Response::Sketch(out))
+            }
+            Request::SketchCp { cp, j } => {
+                // XLA fast path if the artifact's static shapes match.
+                if let Some(rt) = runtime {
+                    if let Some(e) = rt.manifest().entries.get("fcs_rank1") {
+                        // Probe via the factors directly — cp.shape() would
+                        // heap-allocate a Vec per request on this path.
+                        let dims_match = e.meta_usize("dim").map(|d| {
+                            cp.order() == 3 && cp.factors.iter().all(|f| f.rows == d)
+                        }) == Some(true)
+                            && e.meta_usize("rank") == Some(cp.rank())
+                            && e.meta_usize("j") == Some(j);
+                        if dims_match {
+                            return sketch_cp_xla(rt, &cp, j, rng);
+                        }
+                    }
+                }
+                // Workers are already a pool: run the serial spectral path
+                // with this worker's reusable state (one IFFT per request).
+                let mut out = Vec::new();
+                self.sketch_cp_into(&cp, j, rng, &mut out);
+                Ok(Response::Sketch(out))
+            }
+            Request::InnerEstimate { a, b, method, j, d } => {
+                Ok(Response::Scalar(self.inner_estimate(&a, &b, method, j, d, rng)))
+            }
+        }
+    }
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<QueueMsg>>>,
     runtime: Option<RuntimeHandle>,
     seed: u64,
     counter: Arc<AtomicU64>,
+    busy: Arc<AtomicUsize>,
+    pool_size: usize,
     stats: Arc<Stats>,
 ) {
-    // One FFT workspace per worker: sketch_cp requests at a steady shape run
-    // allocation-free after the first request (§Perf).
-    let mut ws = crate::fft::FftWorkspace::new();
+    let mut state = WorkerState::new();
+    let mut batch: Vec<Box<Job>> = Vec::with_capacity(WORKER_DRAIN);
     loop {
-        let job = {
+        let mut stopping = false;
+        {
             let guard = rx.lock().unwrap();
             match guard.recv() {
-                Ok(QueueMsg::Work(j)) => j,
+                Ok(QueueMsg::Work(j)) => batch.push(j),
                 Ok(QueueMsg::Stop) | Err(_) => return,
             }
-        };
-        let op = job.req.op_name();
-        let req_id = counter.fetch_add(1, Ordering::Relaxed);
-        let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
-        let result = execute_work(job.req, &runtime, &mut rng, &mut ws);
-        let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
-        stats.record(op, latency);
-        let _ = job.reply.send(result);
+            // Opportunistic drain — but only while every *other* worker is
+            // executing (advisory counter, re-read per iteration): an idle
+            // sibling would pick queued jobs up immediately, so grabbing
+            // them here would serialize a light-load burst onto this one
+            // thread. Under saturation the backlog waits either way, and
+            // draining buys same-shape warm-workspace grouping (residual
+            // trade-off: a drained job is committed to this worker, so a
+            // sibling freeing up mid-batch waits at most WORKER_DRAIN − 1
+            // jobs). Stop draining at the first sentinel — it is *this*
+            // worker's; eating further ones could leave a sibling running.
+            while busy.load(Ordering::Relaxed) + 1 >= pool_size
+                && batch.len() < WORKER_DRAIN
+                && !stopping
+            {
+                match guard.try_recv() {
+                    Ok(QueueMsg::Work(j)) => batch.push(j),
+                    Ok(QueueMsg::Stop) => stopping = true,
+                    Err(_) => break,
+                }
+            }
+        }
+        // Same-shape grouping: stable order within a key does not matter for
+        // correctness (every job gets its own hash draw), so use the
+        // in-place unstable sort — no allocation in the drain loop.
+        batch.sort_unstable_by_key(|job| job.req.shape_key());
+        busy.fetch_add(1, Ordering::Relaxed);
+        // Drop guard: if execute() ever panics mid-batch, the unwind must
+        // still decrement the busy counter, or every surviving worker would
+        // see a permanently inflated saturation signal and over-drain.
+        let _busy_guard = BusyGuard(&busy);
+        for job in batch.drain(..) {
+            let op = job.req.op_name();
+            let req_id = counter.fetch_add(1, Ordering::Relaxed);
+            let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
+            let result = state.execute(job.req, &runtime, &mut rng);
+            let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
+            stats.record(op, latency);
+            let _ = job.reply.send(result);
+        }
+        drop(_busy_guard);
+        if stopping {
+            return;
+        }
     }
 }
 
-fn execute_work(
-    req: Request,
-    runtime: &Option<RuntimeHandle>,
-    rng: &mut Rng,
-    ws: &mut crate::fft::FftWorkspace,
-) -> Result<Response, ServiceError> {
-    match req {
-        Request::CsVec { .. } => unreachable!("cs_vec is routed to the batcher"),
-        Request::SketchDense { tensor, method, j } => {
-            let mh = ModeHashes::draw_uniform(rng, &tensor.shape, j);
-            let sk = match method {
-                SketchMethod::Ts => TensorSketch::new(mh).apply_dense(&tensor),
-                SketchMethod::Fcs => FastCountSketch::new(mh).apply_dense(&tensor),
-            };
-            Ok(Response::Sketch(sk))
-        }
-        Request::SketchCp { cp, j } => {
-            // XLA fast path if the artifact's static shapes match.
-            if let Some(rt) = runtime {
-                if let Some(e) = rt.manifest().entries.get("fcs_rank1") {
-                    let dims_match = e.meta_usize("dim").map(|d| {
-                        cp.order() == 3 && cp.shape().iter().all(|&s| s == d)
-                    }) == Some(true)
-                        && e.meta_usize("rank") == Some(cp.rank())
-                        && e.meta_usize("j") == Some(j);
-                    if dims_match {
-                        return sketch_cp_xla(rt, &cp, j, rng);
-                    }
-                }
-            }
-            let mh = ModeHashes::draw_uniform(rng, &cp.shape(), j);
-            // Workers are already a pool: run the serial spectral path with
-            // this worker's reusable workspace (one IFFT per request).
-            let mut out = Vec::new();
-            FastCountSketch::new(mh).apply_cp_into(&cp, ws, &mut out);
-            Ok(Response::Sketch(out))
-        }
-        Request::InnerEstimate { a, b, method, j, d } => {
-            let mut estimates = Vec::with_capacity(d);
-            for _ in 0..d {
-                let mh = ModeHashes::draw_uniform(rng, &a.shape, j);
-                let (sa, sb) = match method {
-                    SketchMethod::Ts => {
-                        let ts = TensorSketch::new(mh);
-                        (ts.apply_dense(&a), ts.apply_dense(&b))
-                    }
-                    SketchMethod::Fcs => {
-                        let f = FastCountSketch::new(mh);
-                        (f.apply_dense(&a), f.apply_dense(&b))
-                    }
-                };
-                estimates.push(crate::linalg::dot(&sa, &sb));
-            }
-            Ok(Response::Scalar(crate::util::timing::median(&estimates)))
-        }
+/// Decrements the worker-pool busy counter on drop (including panic
+/// unwinds), keeping the drain heuristic's saturation signal truthful.
+struct BusyGuard<'a>(&'a AtomicUsize);
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
 

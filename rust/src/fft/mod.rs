@@ -14,5 +14,8 @@ pub use convolve::{
     conv_linear_many, conv_linear_many_into, packed_product_spectrum, packed_product_spectrum_into,
     product_spectrum_into, spectral_corr, spectral_corr_into, zero_pad,
 };
-pub use plan::{fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, Plan};
+pub use plan::{
+    fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, Plan, Planner,
+    RealPlan,
+};
 pub use workspace::{fft_real_into, inverse_real_into, with_thread_workspace, FftWorkspace};

@@ -6,6 +6,7 @@
 
 use super::complex::{C64, ONE, ZERO};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Direction of the transform.
@@ -244,11 +245,38 @@ impl Plan {
     }
 }
 
+/// Recombination twiddles for the packed real-input transform of even
+/// length `n = 2m`: `twiddles[k] = e^{-iπk/m}` for `k ∈ [0, m)`. The forward
+/// split-spectrum step multiplies by `twiddles[k]`, the inverse by its
+/// conjugate — previously both recomputed a `sin_cos` per point per call
+/// (ROADMAP follow-up: "cache rfft twiddles per length").
+#[derive(Debug)]
+pub struct RealPlan {
+    /// Transform length `n` (even).
+    pub n: usize,
+    /// `e^{-iπk/m}`, `m = n/2`.
+    pub twiddles: Vec<C64>,
+}
+
+impl RealPlan {
+    fn new(n: usize) -> Self {
+        assert!(n > 0 && n % 2 == 0, "RealPlan requires even n");
+        let m = n / 2;
+        let twiddles = (0..m)
+            .map(|k| C64::cis(-std::f64::consts::PI * k as f64 / m as f64))
+            .collect();
+        Self { n, twiddles }
+    }
+}
+
 /// Process-wide plan cache. The FCS hot loop transforms many vectors of the
 /// same length; building twiddles once matters (§Perf).
 #[derive(Default)]
 pub struct Planner {
     plans: Mutex<HashMap<usize, Arc<Plan>>>,
+    real_plans: Mutex<HashMap<usize, Arc<RealPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl Planner {
@@ -256,17 +284,44 @@ impl Planner {
         Self::default()
     }
 
-    /// Plan lookup with double-checked insert: the (possibly expensive —
-    /// Bluestein builds a 2×-padded kernel FFT) plan construction happens
-    /// **outside** the mutex, so a large build no longer blocks concurrent
-    /// sketching threads that want already-cached lengths.
-    pub fn plan(&self, n: usize) -> Arc<Plan> {
-        if let Some(p) = self.plans.lock().unwrap().get(&n) {
+    /// Double-checked cache lookup shared by both plan maps: the (possibly
+    /// expensive — Bluestein builds a 2×-padded kernel FFT) construction
+    /// happens **outside** the mutex, so a large build never blocks
+    /// concurrent sketching threads that want already-cached lengths. Also
+    /// the single home of the hit/miss accounting the alloc-discipline test
+    /// asserts on.
+    fn cached<P>(
+        &self,
+        map: &Mutex<HashMap<usize, Arc<P>>>,
+        n: usize,
+        build: impl FnOnce(usize) -> P,
+    ) -> Arc<P> {
+        if let Some(p) = map.lock().unwrap().get(&n) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return p.clone();
         }
-        let built = Arc::new(Plan::new(n));
-        let mut guard = self.plans.lock().unwrap();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build(n));
+        let mut guard = map.lock().unwrap();
         guard.entry(n).or_insert(built).clone()
+    }
+
+    /// Plan lookup (see [`Self::cached`] for the insert discipline).
+    pub fn plan(&self, n: usize) -> Arc<Plan> {
+        self.cached(&self.plans, n, Plan::new)
+    }
+
+    /// Cached recombination twiddles for the even-length packed real
+    /// transform (same discipline as [`Self::plan`]).
+    pub fn real_plan(&self, n: usize) -> Arc<RealPlan> {
+        self.cached(&self.real_plans, n, RealPlan::new)
+    }
+
+    /// `(hits, misses)` across both plan caches — lets tests assert that
+    /// steady-state transforms are served from cache (hits grow, misses
+    /// stay flat).
+    pub fn cache_counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 }
 
@@ -360,6 +415,24 @@ mod tests {
             fft_inplace(&mut y);
             let z = dft_naive(&x, Dir::Forward);
             assert!(max_err(&y, &z) < 1e-8 * (n as f64), "n={n} err={}", max_err(&y, &z));
+        }
+    }
+
+    #[test]
+    fn planner_caches_plans_and_real_plans() {
+        let p = Planner::new();
+        assert_eq!(p.cache_counters(), (0, 0));
+        let a = p.plan(16);
+        let b = p.plan(16);
+        assert!(Arc::ptr_eq(&a, &b));
+        let ra = p.real_plan(16);
+        let rb = p.real_plan(16);
+        assert!(Arc::ptr_eq(&ra, &rb));
+        let (h, m) = p.cache_counters();
+        assert_eq!((h, m), (2, 2));
+        for (k, w) in ra.twiddles.iter().enumerate() {
+            let expect = C64::cis(-std::f64::consts::PI * k as f64 / 8.0);
+            assert!((*w - expect).abs() < 1e-15, "k={k}");
         }
     }
 

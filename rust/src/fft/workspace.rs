@@ -10,7 +10,7 @@
 //! the allocating wrappers in [`super::plan`] route through them.
 
 use super::complex::{C64, ZERO};
-use super::plan::{global_planner, Dir, Plan};
+use super::plan::{global_planner, Dir, Plan, RealPlan};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -23,6 +23,8 @@ pub struct FftWorkspace {
     /// Per-length plan handles, resolved once from the global planner so hot
     /// loops never touch the planner mutex.
     plans: HashMap<usize, Arc<Plan>>,
+    /// Per-length recombination twiddles for the packed real transform.
+    real_plans: HashMap<usize, Arc<RealPlan>>,
     c64_pool: Vec<Vec<C64>>,
     f64_pool: Vec<Vec<f64>>,
     /// Scratch for Bluestein's inner convolution, kept out of the pools so a
@@ -43,6 +45,17 @@ impl FftWorkspace {
         }
         let p = global_planner().plan(n);
         self.plans.insert(n, p.clone());
+        p
+    }
+
+    /// Real-transform twiddle table for even length `n`, cached locally
+    /// (mutex-free after first use of each length).
+    pub fn real_plan(&mut self, n: usize) -> Arc<RealPlan> {
+        if let Some(p) = self.real_plans.get(&n) {
+            return p.clone();
+        }
+        let p = global_planner().real_plan(n);
+        self.real_plans.insert(n, p.clone());
         p
     }
 
@@ -122,6 +135,7 @@ pub fn fft_real_into(x: &[f64], n: usize, ws: &mut FftWorkspace, out: &mut Vec<C
         return;
     }
     let m = n / 2;
+    let rp = ws.real_plan(n);
     let mut z = ws.take_c64(m);
     for (j, zj) in z.iter_mut().enumerate() {
         let re = if 2 * j < x.len() { x[2 * j] } else { 0.0 };
@@ -135,8 +149,8 @@ pub fn fft_real_into(x: &[f64], n: usize, ws: &mut FftWorkspace, out: &mut Vec<C
         let zmk = z[(m - k) % m].conj();
         let e = (zk + zmk).scale(0.5);
         let o = (zk - zmk) * C64::new(0.0, -0.5);
-        let w = C64::cis(-std::f64::consts::PI * k as f64 / m as f64);
-        out[k] = e + w * o;
+        // Cached e^{-iπk/m} (ROADMAP follow-up: no per-point sin_cos).
+        out[k] = e + rp.twiddles[k] * o;
     }
     // X[m] = E[0] − O[0] (both real: Re(Z[0]) and Im(Z[0])).
     out[m] = C64::real(z[0].re - z[0].im);
@@ -185,12 +199,14 @@ pub fn inverse_real_into(spec: &mut [C64], ws: &mut FftWorkspace, out: &mut Vec<
         return;
     }
     let m = n / 2;
+    let rp = ws.real_plan(n);
     let mut z = ws.take_c64(m);
     for (k, zk) in z.iter_mut().enumerate() {
         let a = spec[k];
         let b = spec[k + m];
         let e = (a + b).scale(0.5);
-        let o = ((a - b).scale(0.5)) * C64::cis(std::f64::consts::PI * k as f64 / m as f64);
+        // e^{+iπk/m} = conj of the cached forward twiddle.
+        let o = ((a - b).scale(0.5)) * rp.twiddles[k].conj();
         // z[k] = E[k] + i·O[k]
         *zk = C64::new(e.re - o.im, e.im + o.re);
     }

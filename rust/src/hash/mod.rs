@@ -84,13 +84,28 @@ impl HashPair {
 
     /// Materialize into lookup tables (the hot-path representation).
     pub fn materialize(&self) -> HashTable {
-        let mut h = Vec::with_capacity(self.domain);
-        let mut s = Vec::with_capacity(self.domain);
+        let mut t = HashTable {
+            h: Vec::with_capacity(self.domain),
+            s: Vec::with_capacity(self.domain),
+            range: self.range,
+        };
+        self.materialize_into(&mut t);
+        t
+    }
+
+    /// Materialize into an existing table, reusing its storage — zero heap
+    /// allocations once `out`'s capacity covers `domain` (the coordinator
+    /// redraws per-request hashes into per-worker arenas this way).
+    pub fn materialize_into(&self, out: &mut HashTable) {
+        out.h.clear();
+        out.s.clear();
+        out.h.reserve(self.domain);
+        out.s.reserve(self.domain);
         for i in 0..self.domain {
-            h.push(self.h(i) as u32);
-            s.push(if self.s(i) > 0.0 { 1i8 } else { -1i8 });
+            out.h.push(self.h(i) as u32);
+            out.s.push(if self.s(i) > 0.0 { 1i8 } else { -1i8 });
         }
-        HashTable { h, s, range: self.range }
+        out.range = self.range;
     }
 }
 
@@ -160,6 +175,29 @@ impl ModeHashes {
     pub fn draw_uniform(rng: &mut Rng, dims: &[usize], j: usize) -> Self {
         let ranges = vec![j; dims.len()];
         Self::draw(rng, dims, &ranges)
+    }
+
+    /// Empty arena for later [`Self::redraw_uniform`] calls (the
+    /// coordinator's per-worker reusable hash storage).
+    pub fn empty() -> Self {
+        Self { modes: Vec::new(), dims: Vec::new() }
+    }
+
+    /// In-place uniform redraw, reusing table storage. Consumes the same
+    /// RNG stream as [`Self::draw_uniform`] (one [`HashPair`] per mode, in
+    /// mode order — see [`redraw_tables_uniform`]), so a redraw is
+    /// draw-for-draw identical to a fresh `draw_uniform` with the same
+    /// generator state. Zero heap allocations once the arena's order and
+    /// per-mode domains cover `dims` (the coordinator's same-shape request
+    /// streams).
+    pub fn redraw_uniform(&mut self, rng: &mut Rng, dims: &[usize], j: usize) {
+        self.dims.clear();
+        self.dims.extend_from_slice(dims);
+        self.modes.truncate(dims.len());
+        while self.modes.len() < dims.len() {
+            self.modes.push(HashTable { h: Vec::new(), s: Vec::new(), range: 0 });
+        }
+        redraw_tables_uniform(rng, j, self.modes.iter_mut().zip(dims.iter().copied()));
     }
 
     pub fn order(&self) -> usize {
@@ -240,6 +278,22 @@ impl ModeHashes {
     }
 }
 
+/// Redraw one uniform `(h, s)` pair per `(table, domain)` item, in order,
+/// reusing each table's storage. This is the **single home** of the
+/// redraw-stream invariant: exactly one [`HashPair::draw`] per mode, in mode
+/// order, which is what keeps every arena path (the [`ModeHashes`] redraw
+/// and the coordinator's per-mode [`HashTable`] arenas) draw-for-draw
+/// identical to a fresh [`ModeHashes::draw_uniform`].
+pub fn redraw_tables_uniform<'t>(
+    rng: &mut Rng,
+    j: usize,
+    tables: impl Iterator<Item = (&'t mut HashTable, usize)>,
+) {
+    for (table, dim) in tables {
+        HashPair::draw(rng, dim, j).materialize_into(table);
+    }
+}
+
 /// Decompose a column-major linear index into a multi-index.
 #[inline]
 pub fn unravel_colmajor(mut l: usize, dims: &[usize], out: &mut [usize]) {
@@ -317,6 +371,25 @@ mod tests {
             acc += p.s(3) * p.s(77);
         }
         assert!((acc / trials as f64).abs() < 0.03);
+    }
+
+    #[test]
+    fn redraw_matches_fresh_draw() {
+        // redraw_uniform must be draw-for-draw identical to draw_uniform
+        // with the same generator state, even after the arena held a
+        // different shape.
+        let mut a = Rng::seed_from_u64(10);
+        let mut b = a.clone();
+        let fresh = ModeHashes::draw_uniform(&mut a, &[6, 5, 4], 7);
+        let mut arena = ModeHashes::empty();
+        let mut warm = b.clone();
+        arena.redraw_uniform(&mut warm, &[3, 3], 4);
+        arena.redraw_uniform(&mut b, &[6, 5, 4], 7);
+        assert_eq!(arena.dims, fresh.dims);
+        assert_eq!(arena.modes.len(), fresh.modes.len());
+        for (x, y) in arena.modes.iter().zip(&fresh.modes) {
+            assert_eq!(x, y);
+        }
     }
 
     #[test]

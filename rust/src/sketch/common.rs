@@ -1,17 +1,27 @@
-//! Shared `O(nnz(T))` dense-tensor sketching core used by TS (Eq. 2) and FCS
-//! (Eq. 13). Both walk `vec(T)` once, accumulating under the composite hash
-//! `Σ_n h_n(i_n)` — TS folds it `mod J`, FCS keeps it un-folded.
+//! Shared sketching cores used by TS (Eq. 2/3) and FCS (Eq. 8/13).
 //!
-//! The hot loop is specialized for the first mode: within a mode-0 fiber only
-//! `h_0(i_0)` and `s_0(i_0)` change, so the outer-mode contributions are
-//! hoisted to a per-fiber `(hbase, sbase)`.
+//! Two layers live here:
+//!
+//! 1. [`sketch_dense_into`] — the `O(nnz(T))` dense-tensor walk, accumulating
+//!    under the composite hash `Σ_n h_n(i_n)` (TS folds it `mod J`, FCS keeps
+//!    it un-folded).
+//! 2. [`SpectralSketchCore`] — the CS-hash → rfft → spectral product →
+//!    one-IFFT pipeline every CP/rank-1/estimator fast path is a
+//!    parameterization of. TS is the *circular* instantiation
+//!    (`fft_len == sketch_len == J`), FCS the *linear* one
+//!    (`sketch_len = J̃`, `fft_len = next_pow2(J̃)` — exact because FCS's
+//!    non-modular structure leaves the padded tail untouched).
+//!
+//! The dense hot loop is specialized for the first mode: within a mode-0
+//! fiber only `h_0(i_0)` and `s_0(i_0)` change, so the outer-mode
+//! contributions are hoisted to a per-fiber `(hbase, sbase)`.
 
 use super::cs::CountSketch;
 use crate::fft::complex::ZERO;
-use crate::fft::{fft_real_into, C64, FftWorkspace};
+use crate::fft::{self, fft_real_into, C64, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::linalg::Matrix;
-use crate::tensor::Tensor;
+use crate::tensor::{CpTensor, Tensor};
 
 /// Accumulate the sketch of a dense tensor into `out`.
 ///
@@ -35,7 +45,17 @@ pub fn sketch_dense_into(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>, out
     let h0 = &mh.modes[0].h;
     let s0 = &mh.modes[0].s;
     let fibers = t.numel() / i0;
-    let mut idx_hi = vec![0usize; n - 1]; // indices of modes 1..N
+    // Multi-index over modes 1..N. Stack storage keeps this function
+    // allocation-free (it sits on the coordinator's zero-alloc service
+    // path); tensors beyond 32 modes fall back to the heap.
+    let mut idx_stack = [0usize; 32];
+    let mut idx_heap: Vec<usize>;
+    let idx_hi: &mut [usize] = if n - 1 <= idx_stack.len() {
+        &mut idx_stack[..n - 1]
+    } else {
+        idx_heap = vec![0usize; n - 1];
+        &mut idx_heap
+    };
     let mut l = 0usize;
     for _fiber in 0..fibers {
         // Contributions of the fixed higher modes.
@@ -96,112 +116,275 @@ pub fn sketch_dense(t: &Tensor, mh: &ModeHashes, modulo: Option<usize>) -> Vec<f
 }
 
 // ---------------------------------------------------------------------------
-// Spectral accumulation core shared by the TS (circular, Eq. 3) and FCS
-// (linear, Eq. 8) CP fast paths: rank products are composed and summed in
-// the frequency domain so the caller runs a **single** inverse FFT per
-// output instead of one per rank (R IFFTs → 1, §Perf).
+// SpectralSketchCore — the one spectral pipeline behind TS and FCS
 // ---------------------------------------------------------------------------
 
-/// Write `Π_d F(CS_d(vs[d]))` at `n` points into `out`. Per-mode count
-/// sketches go through the half-length real-input transform; all scratch is
-/// rented from `ws` (zero allocations in steady state).
-pub(crate) fn rank1_spectrum_into(
-    modes: &[CountSketch],
-    vs: &[&[f64]],
-    n: usize,
-    ws: &mut FftWorkspace,
-    out: &mut Vec<C64>,
-) {
-    debug_assert_eq!(modes.len(), vs.len());
-    let max_j = modes.iter().map(|m| m.range()).max().unwrap_or(0);
-    let mut csbuf = ws.take_f64(max_j);
-    let mut fs = ws.take_c64(n);
-    for (d, cs) in modes.iter().enumerate() {
-        let jd = cs.range();
-        cs.apply_into(vs[d], &mut csbuf[..jd]);
-        if d == 0 {
-            fft_real_into(&csbuf[..jd], n, ws, out);
-        } else {
-            fft_real_into(&csbuf[..jd], n, ws, &mut fs);
-            for (x, y) in out.iter_mut().zip(fs.iter()) {
-                *x = *x * *y;
-            }
-        }
-    }
-    ws.give_c64(fs);
-    ws.give_f64(csbuf);
+/// Borrowing view over the per-mode count sketches plus the two lengths that
+/// fully determine a spectral sketch pipeline. Everything TS and FCS do in
+/// the frequency domain — CP accumulation (Eq. 3/8), rank-1 sketches
+/// (Eq. 16), and the Eq. 17 correlate-and-gather the estimators run — is a
+/// method on this one type, so a new backend (SIMD butterflies, GPU) lands
+/// in exactly one place.
+#[derive(Clone, Copy)]
+pub struct SpectralSketchCore<'a> {
+    /// Per-mode count sketches `CS_1..CS_N`.
+    pub modes: &'a [CountSketch],
+    /// Output sketch length: `J` for TS (circular), `J̃ = Σ J_n − N + 1` for
+    /// FCS (linear).
+    pub sketch_len: usize,
+    /// Transform length: `== sketch_len` for TS (the circular convolution
+    /// *is* length-J); `next_power_of_two(J̃)` for FCS — any `n ≥ J̃` is
+    /// exact because no wraparound can reach the gathered buckets, and the
+    /// power of two skips Bluestein entirely (§Perf: ~3–6× on t_mode).
+    pub fft_len: usize,
 }
 
-/// Accumulate `Σ_{r ∈ ranks} λ_r · Π_d F(CS_d(U_d[:, r]))` into `acc`
-/// (length `n`). The caller inverts once at the end.
-pub(crate) fn accumulate_cp_spectra(
-    modes: &[CountSketch],
-    factors: &[Matrix],
-    lambda: &[f64],
-    ranks: std::ops::Range<usize>,
-    n: usize,
-    ws: &mut FftWorkspace,
-    acc: &mut [C64],
-) {
-    debug_assert_eq!(acc.len(), n);
-    debug_assert_eq!(modes.len(), factors.len());
-    let max_j = modes.iter().map(|m| m.range()).max().unwrap_or(0);
-    let mut csbuf = ws.take_f64(max_j);
-    let mut spec = ws.take_c64(n);
-    let mut fs = ws.take_c64(n);
-    for r in ranks {
-        for (d, cs) in modes.iter().enumerate() {
+impl<'a> SpectralSketchCore<'a> {
+    /// TS parameterization: circular convolution at length `j`.
+    pub fn circular(modes: &'a [CountSketch], j: usize) -> Self {
+        Self { modes, sketch_len: j, fft_len: j }
+    }
+
+    /// FCS parameterization: linear convolution of length `j_tilde`, padded
+    /// to a power of two.
+    pub fn linear(modes: &'a [CountSketch], j_tilde: usize) -> Self {
+        Self { modes, sketch_len: j_tilde, fft_len: j_tilde.next_power_of_two() }
+    }
+
+    /// Linear parameterization with `J̃ = Σ J_n − N + 1` (Definition 4)
+    /// derived from the mode sketches themselves — callers that only hold
+    /// per-mode tables (the coordinator's arena path) use this instead of
+    /// re-deriving the composite-range formula.
+    pub fn linear_from_modes(modes: &'a [CountSketch]) -> Self {
+        let j_tilde = modes.iter().map(|m| m.range()).sum::<usize>() - modes.len() + 1;
+        Self::linear(modes, j_tilde)
+    }
+
+    /// The shared mode-product loop: fold `F(CS_d(get(d)))` over every mode
+    /// `d ≠ skip` into `acc` (length `fft_len`). With `fresh`, the first
+    /// factor *overwrites* `acc` (no all-ones priming); otherwise `acc`
+    /// arrives seeded (e.g. with a cached `F(st)`) and every factor
+    /// multiplies in — conjugated when `conj` (spectral correlation). All
+    /// scratch is rented from `ws`: zero allocations in steady state.
+    fn fold_spectra_into<'v>(
+        &self,
+        get: impl Fn(usize) -> &'v [f64],
+        skip: Option<usize>,
+        conj: bool,
+        fresh: bool,
+        ws: &mut FftWorkspace,
+        acc: &mut Vec<C64>,
+    ) {
+        let max_j = self.modes.iter().map(|m| m.range()).max().unwrap_or(0);
+        let mut csbuf = ws.take_f64(max_j);
+        let mut fs = ws.take_c64(self.fft_len);
+        self.fold_spectra_with(get, skip, conj, fresh, ws, &mut csbuf, &mut fs, acc);
+        ws.give_c64(fs);
+        ws.give_f64(csbuf);
+    }
+
+    /// [`Self::fold_spectra_into`] with caller-owned `csbuf`/`fs` scratch
+    /// (`csbuf.len() ≥ max mode range`; `fs` is overwritten), so per-rank
+    /// loops hoist the rent-and-zero out of the hot path instead of paying
+    /// an O(fft_len) memset per rank.
+    #[allow(clippy::too_many_arguments)]
+    fn fold_spectra_with<'v>(
+        &self,
+        get: impl Fn(usize) -> &'v [f64],
+        skip: Option<usize>,
+        conj: bool,
+        fresh: bool,
+        ws: &mut FftWorkspace,
+        csbuf: &mut [f64],
+        fs: &mut Vec<C64>,
+        acc: &mut Vec<C64>,
+    ) {
+        debug_assert!(!(fresh && conj), "fresh start would skip conjugating the first factor");
+        let n = self.fft_len;
+        let mut first = fresh;
+        for (d, cs) in self.modes.iter().enumerate() {
+            if Some(d) == skip {
+                continue;
+            }
             let jd = cs.range();
-            cs.apply_into(factors[d].col(r), &mut csbuf[..jd]);
-            if d == 0 {
-                fft_real_into(&csbuf[..jd], n, ws, &mut spec);
+            cs.apply_into(get(d), &mut csbuf[..jd]);
+            if first {
+                fft_real_into(&csbuf[..jd], n, ws, acc);
+                first = false;
             } else {
-                fft_real_into(&csbuf[..jd], n, ws, &mut fs);
-                for (x, y) in spec.iter_mut().zip(fs.iter()) {
-                    *x = *x * *y;
+                fft_real_into(&csbuf[..jd], n, ws, fs);
+                if conj {
+                    for (x, y) in acc.iter_mut().zip(fs.iter()) {
+                        *x = *x * y.conj();
+                    }
+                } else {
+                    for (x, y) in acc.iter_mut().zip(fs.iter()) {
+                        *x = *x * *y;
+                    }
                 }
             }
         }
-        let lr = lambda[r];
-        for (a, s) in acc.iter_mut().zip(spec.iter()) {
-            *a += s.scale(lr);
-        }
     }
-    ws.give_c64(fs);
-    ws.give_c64(spec);
-    ws.give_f64(csbuf);
-}
 
-/// Rank-parallel variant: chunks the CP ranks over `par_map` worker threads
-/// (each with its own workspace), then sums the partial spectra in
-/// deterministic chunk order. Used above a size threshold by the TS/FCS
-/// `apply_cp` entry points.
-pub(crate) fn accumulate_cp_spectra_parallel(
-    modes: &[CountSketch],
-    factors: &[Matrix],
-    lambda: &[f64],
-    rank: usize,
-    n: usize,
-) -> Vec<C64> {
-    let threads = crate::util::parallel::default_threads().min(rank).max(1);
-    let chunk = (rank + threads - 1) / threads;
-    let nchunks = (rank + chunk - 1) / chunk;
-    let partials = crate::util::parallel::par_map(nchunks, threads, |ci| {
-        let lo = ci * chunk;
-        let hi = ((ci + 1) * chunk).min(rank);
-        let mut ws = FftWorkspace::new();
-        let mut acc = vec![ZERO; n];
-        accumulate_cp_spectra(modes, factors, lambda, lo..hi, n, &mut ws, &mut acc);
-        acc
-    });
-    let mut it = partials.into_iter();
-    let mut acc = it.next().expect("rank >= 1");
-    for p in it {
-        for (a, b) in acc.iter_mut().zip(&p) {
-            *a += *b;
-        }
+    /// Write `Π_d F(CS_d(vs[d]))` at `fft_len` points into `out`.
+    pub fn rank1_spectrum_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<C64>) {
+        // Hard assert (matching the pre-refactor inherent methods): a wrong
+        // arity must fail loudly, not silently drop the extra vector in
+        // release builds.
+        assert_eq!(self.modes.len(), vs.len(), "rank-1 sketch arity mismatch");
+        self.fold_spectra_into(|d| vs[d], None, false, true, ws, out);
     }
-    acc
+
+    /// Accumulate `Σ_{r ∈ ranks} λ_r · Π_d F(CS_d(U_d[:, r]))` into `acc`
+    /// (length `fft_len`). The caller inverts once at the end — R IFFTs → 1.
+    pub fn accumulate_cp_spectra(
+        &self,
+        factors: &[Matrix],
+        lambda: &[f64],
+        ranks: std::ops::Range<usize>,
+        ws: &mut FftWorkspace,
+        acc: &mut [C64],
+    ) {
+        debug_assert_eq!(acc.len(), self.fft_len);
+        debug_assert_eq!(self.modes.len(), factors.len());
+        // Scratch hoisted out of the rank loop: renting (and zero-filling)
+        // per rank would add R redundant O(fft_len) memsets to the hottest
+        // CP path.
+        let max_j = self.modes.iter().map(|m| m.range()).max().unwrap_or(0);
+        let mut csbuf = ws.take_f64(max_j);
+        let mut fs = ws.take_c64(self.fft_len);
+        let mut spec = ws.take_c64(self.fft_len);
+        for r in ranks {
+            self.fold_spectra_with(
+                |d| factors[d].col(r),
+                None,
+                false,
+                true,
+                ws,
+                &mut csbuf,
+                &mut fs,
+                &mut spec,
+            );
+            let lr = lambda[r];
+            for (a, s) in acc.iter_mut().zip(spec.iter()) {
+                *a += s.scale(lr);
+            }
+        }
+        ws.give_c64(spec);
+        ws.give_c64(fs);
+        ws.give_f64(csbuf);
+    }
+
+    /// Rank-parallel variant: chunks the CP ranks over `par_map` worker
+    /// threads (each with its own workspace), then sums the partial spectra
+    /// in deterministic chunk order.
+    pub fn accumulate_cp_spectra_parallel(
+        &self,
+        factors: &[Matrix],
+        lambda: &[f64],
+        rank: usize,
+    ) -> Vec<C64> {
+        let n = self.fft_len;
+        let threads = crate::util::parallel::default_threads().min(rank).max(1);
+        let chunk = (rank + threads - 1) / threads;
+        let nchunks = (rank + chunk - 1) / chunk;
+        let partials = crate::util::parallel::par_map(nchunks, threads, |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(rank);
+            let mut ws = FftWorkspace::new();
+            let mut acc = vec![ZERO; n];
+            self.accumulate_cp_spectra(factors, lambda, lo..hi, &mut ws, &mut acc);
+            acc
+        });
+        let mut it = partials.into_iter();
+        let mut acc = it.next().expect("rank >= 1");
+        for p in it {
+            for (a, b) in acc.iter_mut().zip(&p) {
+                *a += *b;
+            }
+        }
+        acc
+    }
+
+    /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N`: mode product, one inverse
+    /// transform, truncate to `sketch_len`. Zero allocations in steady state.
+    pub fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        let mut spec = ws.take_c64(self.fft_len);
+        self.rank1_spectrum_into(vs, ws, &mut spec);
+        fft::inverse_real_into(&mut spec, ws, out);
+        out.truncate(self.sketch_len);
+        ws.give_c64(spec);
+    }
+
+    /// Serial CP fast path: spectral rank accumulation, a **single** inverse
+    /// FFT, truncate to `sketch_len`. Zero allocations in steady state.
+    pub fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        debug_assert_eq!(self.modes.len(), cp.order());
+        let mut acc = ws.take_c64(self.fft_len);
+        self.accumulate_cp_spectra(&cp.factors, &cp.lambda, 0..cp.rank(), ws, &mut acc);
+        fft::inverse_real_into(&mut acc, ws, out);
+        out.truncate(self.sketch_len);
+        ws.give_c64(acc);
+    }
+
+    /// Allocating CP entry point; fans ranks out over threads above the
+    /// [`cp_rank_parallel`] threshold.
+    pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
+        if cp_rank_parallel(cp.rank(), self.fft_len) {
+            let mut acc = self.accumulate_cp_spectra_parallel(&cp.factors, &cp.lambda, cp.rank());
+            return fft::with_thread_workspace(|ws| {
+                // Capacity = transform length: inverse_real_into fills to
+                // fft_len before the truncate to sketch_len.
+                let mut out = Vec::with_capacity(self.fft_len);
+                fft::inverse_real_into(&mut acc, ws, &mut out);
+                out.truncate(self.sketch_len);
+                out
+            });
+        }
+        fft::with_thread_workspace(|ws| {
+            let mut out = Vec::with_capacity(self.fft_len);
+            self.apply_cp_into(cp, ws, &mut out);
+            out
+        })
+    }
+
+    /// Forward transform of a sketch at `fft_len` points — the per-rep
+    /// `F(st)` cache the estimators hoist out of every `t_mode` call.
+    pub fn sketch_spectrum(&self, st: &[f64]) -> Vec<C64> {
+        debug_assert_eq!(st.len(), self.sketch_len);
+        fft::fft_real(st, self.fft_len)
+    }
+
+    /// One repetition of Eq. 17 generalized — the estimator `t_mode` body:
+    /// `z = F⁻¹( F(st) · Π_{d≠mode} conj(F(CS_d(vs[d]))) )`, then the
+    /// mode-`mode` basis gather `out[i] = s_mode(i) · z(h_mode(i))`. For the
+    /// FCS (linear) instantiation no wraparound can occur because
+    /// `h_mode(i) + Σ_{d≠mode}(J_d − 1) ≤ J̃ − 1 < fft_len`; for TS the
+    /// circular length *is* the semantics. All scratch rented from `ws`.
+    pub fn correlate_gather_into(
+        &self,
+        st_fft: &[C64],
+        mode: usize,
+        vs: &[&[f64]],
+        ws: &mut FftWorkspace,
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(st_fft.len(), self.fft_len);
+        let mut fz = ws.take_c64(self.fft_len);
+        fz.copy_from_slice(st_fft);
+        self.fold_spectra_into(|d| vs[d], Some(mode), true, false, ws, &mut fz);
+        let mut z = ws.take_f64(self.fft_len);
+        fft::inverse_real_into(&mut fz, ws, &mut z);
+        let cs_m = &self.modes[mode];
+        out.clear();
+        out.resize(cs_m.domain(), 0.0);
+        for (i, o) in out.iter_mut().enumerate() {
+            let (b, s) = cs_m.basis(i);
+            *o = s * z[b];
+        }
+        ws.give_f64(z);
+        ws.give_c64(fz);
+    }
 }
 
 /// Work threshold above which the CP fast paths fan ranks out across
@@ -209,6 +392,47 @@ pub(crate) fn accumulate_cp_spectra_parallel(
 /// startup is amortized.
 pub(crate) fn cp_rank_parallel(rank: usize, n: usize) -> bool {
     rank >= 8 && n >= 4096
+}
+
+/// Allocation-free `cp.shape() == dims` check: `CpTensor::shape()` collects
+/// a fresh `Vec`, which would put one heap allocation per call on the
+/// zero-alloc `apply_cp_into` paths (and fail `tests/alloc_discipline.rs`).
+pub(crate) fn cp_shape_matches(cp: &CpTensor, dims: &[usize]) -> bool {
+    cp.factors.iter().map(|f| f.rows).eq(dims.iter().copied())
+}
+
+/// The interface the generic [`crate::sketch::estimator::SpectralEstimator`]
+/// programs against: both [`crate::sketch::TensorSketch`] and
+/// [`crate::sketch::FastCountSketch`] are a [`SpectralSketchCore`]
+/// parameterization plus an `O(nnz(T))` dense path.
+pub trait SpectralSketchOp: Send + Sync {
+    /// Estimator name tag (`"ts"` / `"fcs"`).
+    const NAME: &'static str;
+
+    fn from_hashes(hashes: ModeHashes) -> Self;
+
+    fn hashes(&self) -> &ModeHashes;
+
+    /// The spectral pipeline view over this operator's mode sketches.
+    fn core(&self) -> SpectralSketchCore<'_>;
+
+    /// Sketch a general dense tensor — `O(nnz(T))`.
+    fn apply_dense(&self, t: &Tensor) -> Vec<f64>;
+
+    /// CP fast path (workspace-backed); default routes through the core.
+    fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        self.core().apply_cp_into(cp, ws, out);
+    }
+
+    /// Rank-1 fast path (workspace-backed); default routes through the core.
+    fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
+        self.core().apply_rank1_into(vs, ws, out);
+    }
+
+    /// Memory of the stored hash functions (bytes) — `O(Σ I_n)`.
+    fn hash_memory_bytes(&self) -> usize {
+        self.hashes().memory_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +501,71 @@ mod tests {
         }
         for (a, b) in folded.iter().zip(&ts) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn circular_and_linear_cores_agree_with_dense() {
+        // The one shared pipeline must reproduce both sketch semantics:
+        // core::apply_rank1_into ≡ sketch_dense on the materialized outer
+        // product, for the circular (TS) and linear (FCS) parameterizations.
+        let mut rng = Rng::seed_from_u64(4);
+        let shape = [5usize, 4, 6];
+        let j = 7usize;
+        let mh = ModeHashes::draw_uniform(&mut rng, &shape, j);
+        let modes: Vec<CountSketch> =
+            mh.modes.iter().map(|t| CountSketch::new(t.clone())).collect();
+        let vs: Vec<Vec<f64>> = shape.iter().map(|&d| rng.normal_vec(d)).collect();
+        let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+        let cube = crate::tensor::outer(&refs);
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+
+        let circ = SpectralSketchCore::circular(&modes, j);
+        circ.apply_rank1_into(&refs, &mut ws, &mut out);
+        let dense_ts = sketch_dense(&cube, &mh, Some(j));
+        assert_eq!(out.len(), j);
+        for (a, b) in out.iter().zip(&dense_ts) {
+            assert!((a - b).abs() < 1e-9, "circular {a} vs {b}");
+        }
+
+        let lin = SpectralSketchCore::linear(&modes, mh.composite_range());
+        lin.apply_rank1_into(&refs, &mut ws, &mut out);
+        let dense_fcs = sketch_dense(&cube, &mh, None);
+        assert_eq!(out.len(), mh.composite_range());
+        for (a, b) in out.iter().zip(&dense_fcs) {
+            assert!((a - b).abs() < 1e-9, "linear {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn correlate_gather_matches_manual_contraction() {
+        // core::correlate_gather_into on a D=1 sketch must equal the direct
+        // computation ⟨st, sketch(e_i ∘ v_1 ∘ v_2)⟩ per free index.
+        let mut rng = Rng::seed_from_u64(5);
+        let shape = [4usize, 5, 3];
+        let t = Tensor::randn(&mut rng, &shape);
+        let mh = ModeHashes::draw_uniform(&mut rng, &shape, 6);
+        let modes: Vec<CountSketch> =
+            mh.modes.iter().map(|h| CountSketch::new(h.clone())).collect();
+        let core = SpectralSketchCore::linear(&modes, mh.composite_range());
+        let st = sketch_dense(&t, &mh, None);
+        let st_fft = core.sketch_spectrum(&st);
+        let v1 = rng.normal_vec(5);
+        let v2 = rng.normal_vec(3);
+        let dummy = vec![0.0; 4];
+        let vs: [&[f64]; 3] = [&dummy, &v1, &v2];
+        let mut ws = FftWorkspace::new();
+        let mut got = Vec::new();
+        core.correlate_gather_into(&st_fft, 0, &vs, &mut ws, &mut got);
+        assert_eq!(got.len(), 4);
+        for i in 0..4 {
+            let mut e = vec![0.0; 4];
+            e[i] = 1.0;
+            let cube = crate::tensor::outer(&[&e[..], &v1[..], &v2[..]]);
+            let s3 = sketch_dense(&cube, &mh, None);
+            let expect = crate::linalg::dot(&st, &s3);
+            assert!((got[i] - expect).abs() < 1e-8, "i={i}: {} vs {expect}", got[i]);
         }
     }
 }

@@ -9,7 +9,14 @@
 //!   asymmetric RTPM and ALS (Eq. 18).
 //!
 //! All sketched estimators return the **median over D repetitions** (§4).
+//!
+//! TS and FCS share one generic implementation, [`SpectralEstimator`]: both
+//! are a [`SpectralSketchCore`](super::common::SpectralSketchCore)
+//! parameterization (circular vs linear), so every spectral query body —
+//! `t_uuu`, the Eq. 17 correlate-and-gather behind `t_mode`, and the
+//! sketch-domain `deflate` — is written exactly once.
 
+use super::common::SpectralSketchOp;
 use super::cs::CountSketch;
 use super::fcs::FastCountSketch;
 use super::hcs::HigherOrderCountSketch;
@@ -364,30 +371,47 @@ impl ContractionEstimator for CsEstimator {
 }
 
 // ---------------------------------------------------------------------------
-// TS estimator (circular convolution, Eq. 3 + TS analogue of Eq. 17)
+// Generic spectral estimator — the single implementation behind TS and FCS
 // ---------------------------------------------------------------------------
 
-struct TsRep {
-    ts: TensorSketch,
-    st: Vec<f64>,
-    /// Cached forward FFT of `st` at length J (the circular-convolution
-    /// length). `st` is fixed between deflations, so `F(st)` is hoisted out
-    /// of every `t_mode` call (§Perf).
+/// One repetition: the sketch operator, the sketched tensor, and the cached
+/// forward FFT of the sketch. Fields are crate-private: `st` and `st_fft`
+/// must stay coherent (only [`SpectralEstimator::deflate`] may move them),
+/// so external mutation would silently corrupt every later `t_mode`.
+pub struct SpectralRep<S> {
+    pub(crate) op: S,
+    pub(crate) st: Vec<f64>,
+    /// Cached forward FFT of `st` at the core's `fft_len`. `st` is fixed
+    /// between deflations, so `F(st)` is hoisted out of every `t_mode` call
+    /// (§Perf); [`SpectralEstimator::deflate`] keeps it coherent.
     st_fft: Vec<crate::fft::C64>,
 }
 
-impl TsRep {
-    fn refresh_fft(&mut self) {
-        self.st_fft = crate::fft::fft_real(&self.st, self.st.len());
-    }
+/// Median-of-D estimator over any [`SpectralSketchOp`]. TS instantiates the
+/// circular core (Eq. 3 + the TS analogue of Eq. 17), FCS the linear one
+/// (Eqs. 8, 16, 17) — every query body below is shared:
+///
+/// * `t_uuu` — `⟨sketch(T), sketch(u∘u∘u)⟩` (Eq. 16), the rank-1 sketch via
+///   the core's product-of-spectra pipeline;
+/// * `t_mode` — `z = F⁻¹(F(st) · Π_{d≠mode} conj(F(CS_d(v_d))))` then the
+///   mode-`mode` basis gather (Eq. 17 generalized, one repetition per rep);
+/// * `deflate` — sketch-domain rank-1 subtraction, keeping the `F(st)`
+///   cache coherent by linearity of `F`.
+pub struct SpectralEstimator<S> {
+    pub(crate) reps: Vec<SpectralRep<S>>,
+    /// Sketch length (J for TS, J̃ for FCS).
+    sketch_len: usize,
+    /// Transform length (J for TS, next_pow2(J̃) for FCS).
+    fft_len: usize,
 }
 
-pub struct TsEstimator {
-    reps: Vec<TsRep>,
-    j: usize,
-}
+/// TS-backed estimator (circular convolution, Eq. 3 + TS analogue of Eq. 17).
+pub type TsEstimator = SpectralEstimator<TensorSketch>;
 
-impl TsEstimator {
+/// FCS-backed estimator (Eqs. 8, 16, 17 — the paper's method).
+pub type FcsEstimator = SpectralEstimator<FastCountSketch>;
+
+impl<S: SpectralSketchOp> SpectralEstimator<S> {
     /// Build with freshly drawn hashes.
     pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
         let hashes: Vec<ModeHashes> = (0..d)
@@ -396,72 +420,70 @@ impl TsEstimator {
         Self::build_with_hashes(t, &hashes)
     }
 
-    /// Build reusing existing hash draws (for TS/FCS equalization).
+    /// Build reusing existing hash draws (for TS/FCS equalization, §4.1).
     pub fn build_with_hashes(t: &Tensor, hashes: &[ModeHashes]) -> Self {
-        let j = hashes[0].modes[0].range;
+        assert!(!hashes.is_empty());
         let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
-            let ts = TensorSketch::new(hashes[i].clone());
-            let st = ts.apply_dense(t);
-            let mut rep = TsRep { ts, st, st_fft: Vec::new() };
-            rep.refresh_fft();
-            rep
+            let op = S::from_hashes(hashes[i].clone());
+            let st = op.apply_dense(t);
+            let st_fft = op.core().sketch_spectrum(&st);
+            SpectralRep { op, st, st_fft }
         });
-        Self { reps, j }
+        let core = reps[0].op.core();
+        let (sketch_len, fft_len) = (core.sketch_len, core.fft_len);
+        Self { reps, sketch_len, fft_len }
     }
-}
 
-impl TsEstimator {
-    /// One repetition of Eq. 17's TS analogue, all scratch rented from `ws`:
-    /// `z = F⁻¹( F(st) · Π_{d≠mode} conj(F(CS_d(v_d))) )` (circular J, F(st)
-    /// served from the per-rep cache), then the mode-`mode` basis gather.
+    /// Build directly from a CP representation (uses the Eq. 8/Eq. 3 FFT
+    /// path — `O(nnz(U) + R·n log n)` instead of `O(nnz(T))`).
+    pub fn build_from_cp(cp: &crate::tensor::CpTensor, d: usize, j: usize, rng: &mut Rng) -> Self {
+        let hashes: Vec<ModeHashes> = (0..d)
+            .map(|_| ModeHashes::draw_uniform(rng, &cp.shape(), j))
+            .collect();
+        assert!(!hashes.is_empty());
+        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
+            let op = S::from_hashes(hashes[i].clone());
+            // Serial spectral path per repetition: the repetitions themselves
+            // are already fanned out across this par_map.
+            let mut ws = FftWorkspace::new();
+            let mut st = Vec::new();
+            op.apply_cp_into(cp, &mut ws, &mut st);
+            let st_fft = op.core().sketch_spectrum(&st);
+            SpectralRep { op, st, st_fft }
+        });
+        let core = reps[0].op.core();
+        let (sketch_len, fft_len) = (core.sketch_len, core.fft_len);
+        Self { reps, sketch_len, fft_len }
+    }
+
+    /// One repetition of the Eq. 17 query: the core's correlate-and-gather
+    /// with this repetition's cached `F(st)`.
     fn t_mode_one_rep(
         &self,
-        rep: &TsRep,
+        rep: &SpectralRep<S>,
         mode: usize,
         vs: &[&[f64]],
         ws: &mut FftWorkspace,
         out: &mut Vec<f64>,
     ) {
-        let mut fz = ws.take_c64(self.j);
-        fz.copy_from_slice(&rep.st_fft);
-        let max_j = rep.ts.modes.iter().map(|m| m.range()).max().unwrap_or(0);
-        let mut csbuf = ws.take_f64(max_j);
-        let mut fs = ws.take_c64(self.j);
-        for d in (0..rep.ts.order()).filter(|&d| d != mode) {
-            let jd = rep.ts.modes[d].range();
-            rep.ts.modes[d].apply_into(vs[d], &mut csbuf[..jd]);
-            fft::fft_real_into(&csbuf[..jd], self.j, ws, &mut fs);
-            for (x, y) in fz.iter_mut().zip(fs.iter()) {
-                *x = *x * y.conj();
-            }
-        }
-        let mut z = ws.take_f64(self.j);
-        fft::inverse_real_into(&mut fz, ws, &mut z);
-        let cs_m = &rep.ts.modes[mode];
-        out.clear();
-        out.resize(cs_m.domain(), 0.0);
-        for (i, o) in out.iter_mut().enumerate() {
-            let (b, s) = cs_m.basis(i);
-            *o = s * z[b];
-        }
-        ws.give_f64(z);
-        ws.give_c64(fs);
-        ws.give_f64(csbuf);
-        ws.give_c64(fz);
+        rep.op.core().correlate_gather_into(&rep.st_fft, mode, vs, ws, out);
     }
 }
 
-impl ContractionEstimator for TsEstimator {
+impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
     fn name(&self) -> &'static str {
-        "ts"
+        S::NAME
     }
 
     fn t_uuu(&self, u: &[f64]) -> f64 {
+        // Eq. 16 / its TS analogue: ⟨sketch(T), sketch(u∘u∘u)⟩, the rank-1
+        // sketch via the spectral pipeline, all scratch rented from the
+        // thread workspace.
         fft::with_thread_workspace(|ws| {
             let mut ests = ws.take_f64(self.reps.len());
-            let mut sk = ws.take_f64(self.j);
+            let mut sk = ws.take_f64(self.sketch_len);
             for (i, rep) in self.reps.iter().enumerate() {
-                rep.ts.apply_rank1_into(&[u, u, u], ws, &mut sk);
+                rep.op.apply_rank1_into(&[u, u, u], ws, &mut sk);
                 ests[i] = crate::linalg::dot(&rep.st, &sk);
             }
             let m = median_inplace_sorted(&mut ests);
@@ -479,8 +501,8 @@ impl ContractionEstimator for TsEstimator {
 
     fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
         let d_reps = self.reps.len();
-        let im = self.reps[0].ts.modes[mode].domain();
-        if reps_parallel(d_reps, self.j) {
+        let im = self.reps[0].op.core().modes[mode].domain();
+        if reps_parallel(d_reps, self.fft_len) {
             let rows = par_map(d_reps, crate::util::parallel::default_threads(), |ri| {
                 let mut ws = FftWorkspace::new();
                 let mut row = Vec::new();
@@ -513,15 +535,15 @@ impl ContractionEstimator for TsEstimator {
     }
 
     fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        let j = self.j;
+        let (sketch_len, fft_len) = (self.sketch_len, self.fft_len);
         fft::with_thread_workspace(|ws| {
-            let mut sk = ws.take_f64(j);
-            let mut fs = ws.take_c64(j);
+            let mut sk = ws.take_f64(sketch_len);
+            let mut fs = ws.take_c64(fft_len);
             for rep in &mut self.reps {
-                rep.ts.apply_rank1_into(vs, ws, &mut sk);
+                rep.op.apply_rank1_into(vs, ws, &mut sk);
                 crate::linalg::axpy(-lambda, &sk, &mut rep.st);
                 // Keep the spectral cache coherent (F is linear).
-                fft::fft_real_into(&sk, j, ws, &mut fs);
+                fft::fft_real_into(&sk, fft_len, ws, &mut fs);
                 for (x, y) in rep.st_fft.iter_mut().zip(fs.iter()) {
                     *x = *x - y.scale(lambda);
                 }
@@ -536,7 +558,7 @@ impl ContractionEstimator for TsEstimator {
     }
 
     fn hash_bytes(&self) -> usize {
-        self.reps.iter().map(|r| r.ts.hashes.memory_bytes()).sum()
+        self.reps.iter().map(|r| r.op.hash_memory_bytes()).sum()
     }
 }
 
@@ -646,212 +668,6 @@ impl ContractionEstimator for HcsEstimator {
 
     fn hash_bytes(&self) -> usize {
         self.reps.iter().map(|r| r.hcs.hash_memory_bytes()).sum()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// FCS estimator (Eqs. 8, 16, 17 — the paper's method)
-// ---------------------------------------------------------------------------
-
-struct FcsRep {
-    fcs: FastCountSketch,
-    st: Vec<f64>,
-    /// Cached forward FFT of `st` at length `fft_len` (see below).
-    st_fft: Vec<crate::fft::C64>,
-}
-
-impl FcsRep {
-    fn refresh_fft(&mut self, n: usize) {
-        self.st_fft = crate::fft::fft_real(&self.st, n);
-    }
-}
-
-pub struct FcsEstimator {
-    reps: Vec<FcsRep>,
-    j_tilde: usize,
-    /// FFT length for the Eq. 17 correlation. FCS's linear (non-modular)
-    /// structure means *any* `n ≥ J̃` is exact — no wraparound can reach the
-    /// gathered buckets — so we round up to a power of two and skip
-    /// Bluestein entirely (§Perf: ~3–6× on the t_mode hot path).
-    fft_len: usize,
-}
-
-impl FcsEstimator {
-    pub fn build(t: &Tensor, d: usize, j: usize, rng: &mut Rng) -> Self {
-        let hashes: Vec<ModeHashes> = (0..d)
-            .map(|_| ModeHashes::draw_uniform(rng, &t.shape, j))
-            .collect();
-        Self::build_with_hashes(t, &hashes)
-    }
-
-    /// Build reusing existing hash draws (TS/FCS equalization, §4.1).
-    pub fn build_with_hashes(t: &Tensor, hashes: &[ModeHashes]) -> Self {
-        let j_tilde = hashes[0].composite_range();
-        let fft_len = j_tilde.next_power_of_two();
-        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
-            let fcs = FastCountSketch::new(hashes[i].clone());
-            let st = fcs.apply_dense(t);
-            let mut rep = FcsRep { fcs, st, st_fft: Vec::new() };
-            rep.refresh_fft(fft_len);
-            rep
-        });
-        Self { reps, j_tilde, fft_len }
-    }
-
-    /// Build directly from a CP representation (uses the Eq. 8 FFT path —
-    /// `O(nnz(U) + R·J̃ log J̃)` instead of `O(nnz(T))`).
-    pub fn build_from_cp(cp: &crate::tensor::CpTensor, d: usize, j: usize, rng: &mut Rng) -> Self {
-        let hashes: Vec<ModeHashes> = (0..d)
-            .map(|_| ModeHashes::draw_uniform(rng, &cp.shape(), j))
-            .collect();
-        let j_tilde = hashes[0].composite_range();
-        let fft_len = j_tilde.next_power_of_two();
-        let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
-            let fcs = FastCountSketch::new(hashes[i].clone());
-            // Serial spectral path per repetition: the repetitions themselves
-            // are already fanned out across this par_map.
-            let mut ws = FftWorkspace::new();
-            let mut st = Vec::new();
-            fcs.apply_cp_into(cp, &mut ws, &mut st);
-            let mut rep = FcsRep { fcs, st, st_fft: Vec::new() };
-            rep.refresh_fft(fft_len);
-            rep
-        });
-        Self { reps, j_tilde, fft_len }
-    }
-
-    /// One repetition of Eq. 17 generalized, all scratch rented from `ws`:
-    /// `z = F⁻¹(F(FCS(T)) · Π_{d≠mode} conj(F(CS_d(v_d))))` over
-    /// `fft_len ≥ J̃` points; `out[i] = s_mode(i) · z(h_mode(i))`. No
-    /// wraparound can occur because `h_mode(i) + Σ_{d≠mode}(J_d − 1) ≤
-    /// J̃ − 1 < fft_len`, so the power-of-two length is exact and `F(st)` is
-    /// served from the per-rep cache.
-    fn t_mode_one_rep(
-        &self,
-        rep: &FcsRep,
-        mode: usize,
-        vs: &[&[f64]],
-        ws: &mut FftWorkspace,
-        out: &mut Vec<f64>,
-    ) {
-        let n = self.fft_len;
-        let mut fz = ws.take_c64(n);
-        fz.copy_from_slice(&rep.st_fft);
-        let max_j = rep.fcs.modes.iter().map(|m| m.range()).max().unwrap_or(0);
-        let mut csbuf = ws.take_f64(max_j);
-        let mut fs = ws.take_c64(n);
-        for d in (0..rep.fcs.order()).filter(|&d| d != mode) {
-            let jd = rep.fcs.modes[d].range();
-            rep.fcs.modes[d].apply_into(vs[d], &mut csbuf[..jd]);
-            fft::fft_real_into(&csbuf[..jd], n, ws, &mut fs);
-            for (x, y) in fz.iter_mut().zip(fs.iter()) {
-                *x = *x * y.conj();
-            }
-        }
-        let mut z = ws.take_f64(n);
-        fft::inverse_real_into(&mut fz, ws, &mut z);
-        let cs_m = &rep.fcs.modes[mode];
-        out.clear();
-        out.resize(cs_m.domain(), 0.0);
-        for (i, o) in out.iter_mut().enumerate() {
-            let (b, s) = cs_m.basis(i);
-            *o = s * z[b];
-        }
-        ws.give_f64(z);
-        ws.give_c64(fs);
-        ws.give_f64(csbuf);
-        ws.give_c64(fz);
-    }
-}
-
-impl ContractionEstimator for FcsEstimator {
-    fn name(&self) -> &'static str {
-        "fcs"
-    }
-
-    fn t_uuu(&self, u: &[f64]) -> f64 {
-        // Eq. 16: ⟨FCS(T), CS₁(u) ⊛ CS₂(u) ⊛ CS₃(u)⟩ (linear convolution),
-        // with all FFT scratch rented from the thread workspace.
-        fft::with_thread_workspace(|ws| {
-            let mut ests = ws.take_f64(self.reps.len());
-            let mut sk = ws.take_f64(self.j_tilde);
-            for (i, rep) in self.reps.iter().enumerate() {
-                rep.fcs.apply_rank1_into(&[u, u, u], ws, &mut sk);
-                ests[i] = crate::linalg::dot(&rep.st, &sk);
-            }
-            let m = median_inplace_sorted(&mut ests);
-            ws.give_f64(sk);
-            ws.give_f64(ests);
-            m
-        })
-    }
-
-    fn t_mode(&self, mode: usize, vs: &[&[f64]]) -> Vec<f64> {
-        let mut out = Vec::new();
-        self.t_mode_into(mode, vs, &mut out);
-        out
-    }
-
-    fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
-        let d_reps = self.reps.len();
-        let im = self.reps[0].fcs.modes[mode].domain();
-        if reps_parallel(d_reps, self.fft_len) {
-            let rows = par_map(d_reps, crate::util::parallel::default_threads(), |ri| {
-                let mut ws = FftWorkspace::new();
-                let mut row = Vec::new();
-                self.t_mode_one_rep(&self.reps[ri], mode, vs, &mut ws, &mut row);
-                row
-            });
-            let med = elementwise_median(&rows);
-            out.clear();
-            out.extend_from_slice(&med);
-            return;
-        }
-        fft::with_thread_workspace(|ws| {
-            let mut rows = ws.take_f64(d_reps * im);
-            let mut row = ws.take_f64(im);
-            for (ri, rep) in self.reps.iter().enumerate() {
-                self.t_mode_one_rep(rep, mode, vs, ws, &mut row);
-                rows[ri * im..(ri + 1) * im].copy_from_slice(&row);
-            }
-            let mut scratch = ws.take_f64(d_reps);
-            elementwise_median_flat(&rows, d_reps, im, &mut scratch, out);
-            ws.give_f64(scratch);
-            ws.give_f64(row);
-            ws.give_f64(rows);
-        });
-    }
-
-    fn norm_estimate(&self) -> f64 {
-        let norms: Vec<f64> = self.reps.iter().map(|r| crate::linalg::norm2(&r.st)).collect();
-        crate::util::timing::median(&norms)
-    }
-
-    fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        let (j_tilde, fft_len) = (self.j_tilde, self.fft_len);
-        fft::with_thread_workspace(|ws| {
-            let mut sk = ws.take_f64(j_tilde);
-            let mut fs = ws.take_c64(fft_len);
-            for rep in &mut self.reps {
-                rep.fcs.apply_rank1_into(vs, ws, &mut sk);
-                crate::linalg::axpy(-lambda, &sk, &mut rep.st);
-                // Keep the spectral cache coherent (F is linear).
-                fft::fft_real_into(&sk, fft_len, ws, &mut fs);
-                for (x, y) in rep.st_fft.iter_mut().zip(fs.iter()) {
-                    *x = *x - y.scale(lambda);
-                }
-            }
-            ws.give_c64(fs);
-            ws.give_f64(sk);
-        });
-    }
-
-    fn sketch_bytes(&self) -> usize {
-        self.reps.iter().map(|r| r.st.len() * 8).sum()
-    }
-
-    fn hash_bytes(&self) -> usize {
-        self.reps.iter().map(|r| r.fcs.hash_memory_bytes()).sum()
     }
 }
 
@@ -1056,7 +872,7 @@ mod tests {
         let t = test_tensor(&mut rng, 10);
         let (ts, fcs) = build_equalized(&t, 2, 100, &mut rng);
         for (tr, fr) in ts.reps.iter().zip(&fcs.reps) {
-            for (tm, fm) in tr.ts.hashes.modes.iter().zip(&fr.fcs.hashes.modes) {
+            for (tm, fm) in tr.op.hashes.modes.iter().zip(&fr.op.hashes.modes) {
                 assert_eq!(tm.h, fm.h);
                 assert_eq!(tm.s, fm.s);
             }
@@ -1149,6 +965,35 @@ mod tests {
         h1.deflate(lambda, &vs);
         for (a, b) in h1.reps.iter().zip(&h2.reps) {
             assert!(a.st.sub(&b.st).frob_norm() < 1e-9, "hcs sketch mismatch");
+        }
+    }
+
+    #[test]
+    fn deflation_keeps_spectral_cache_coherent() {
+        // After deflate, the cached F(st) must equal a fresh forward FFT of
+        // the updated sketch — for both core parameterizations.
+        let mut rng = Rng::seed_from_u64(10);
+        let t = test_tensor(&mut rng, 8);
+        let mut u = rng.normal_vec(8);
+        crate::linalg::normalize(&mut u);
+        let vs: Vec<&[f64]> = vec![&u, &u, &u];
+        let hashes: Vec<ModeHashes> =
+            (0..2).map(|_| ModeHashes::draw_uniform(&mut rng, &t.shape, 40)).collect();
+        let mut fcs = FcsEstimator::build_with_hashes(&t, &hashes);
+        let mut ts = TsEstimator::build_with_hashes(&t, &hashes);
+        fcs.deflate(0.9, &vs);
+        ts.deflate(0.9, &vs);
+        for rep in &fcs.reps {
+            let fresh = rep.op.core().sketch_spectrum(&rep.st);
+            for (a, b) in rep.st_fft.iter().zip(&fresh) {
+                assert!((*a - *b).abs() < 1e-9, "fcs st_fft drifted");
+            }
+        }
+        for rep in &ts.reps {
+            let fresh = rep.op.core().sketch_spectrum(&rep.st);
+            for (a, b) in rep.st_fft.iter().zip(&fresh) {
+                assert!((*a - *b).abs() < 1e-9, "ts st_fft drifted");
+            }
         }
     }
 

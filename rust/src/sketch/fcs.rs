@@ -3,13 +3,14 @@
 //! `FCS(T) := CS(vec(T); h̃, s̃)` with the composite hash pair of Eq. 7 —
 //! equivalently, for CP tensors, the zero-padded **linear** convolution of
 //! the per-mode count sketches (Eq. 8). Output length `J̃ = Σ J_n − N + 1`.
+//!
+//! All frequency-domain work delegates to the shared
+//! [`SpectralSketchCore`] (linear parameterization): TS and FCS differ only
+//! in the two lengths handed to the core.
 
-use super::common::{
-    accumulate_cp_spectra, accumulate_cp_spectra_parallel, cp_rank_parallel, rank1_spectrum_into,
-    sketch_dense, sketch_dense_into,
-};
+use super::common::{sketch_dense, sketch_dense_into, SpectralSketchCore, SpectralSketchOp};
 use super::cs::CountSketch;
-use crate::fft::{self, FftWorkspace};
+use crate::fft::FftWorkspace;
 use crate::hash::ModeHashes;
 use crate::tensor::{CpTensor, Tensor};
 
@@ -30,6 +31,12 @@ impl FastCountSketch {
 
     pub fn order(&self) -> usize {
         self.modes.len()
+    }
+
+    /// The linear spectral-pipeline view (`sketch_len = J̃`,
+    /// `fft_len = next_power_of_two(J̃)`).
+    pub fn core(&self) -> SpectralSketchCore<'_> {
+        SpectralSketchCore::linear(&self.modes, self.j_tilde)
     }
 
     /// Sketch a general dense tensor — `O(nnz(T))` (Eq. 13).
@@ -58,52 +65,33 @@ impl FastCountSketch {
     /// (R IFFTs → 1, §Perf). Above a size threshold the ranks fan out over
     /// worker threads.
     pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
-        assert_eq!(cp.shape(), self.hashes.dims);
-        let n = self.fft_len();
-        if cp_rank_parallel(cp.rank(), n) {
-            let mut acc =
-                accumulate_cp_spectra_parallel(&self.modes, &cp.factors, &cp.lambda, cp.rank(), n);
-            return fft::with_thread_workspace(|ws| {
-                let mut out = Vec::with_capacity(n);
-                fft::inverse_real_into(&mut acc, ws, &mut out);
-                out.truncate(self.j_tilde);
-                out
-            });
-        }
-        fft::with_thread_workspace(|ws| {
-            // Capacity = transform length: inverse_real_into fills to n
-            // before the truncate to J̃.
-            let mut out = Vec::with_capacity(n);
-            self.apply_cp_into(cp, ws, &mut out);
-            out
-        })
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
+        );
+        self.core().apply_cp(cp)
     }
 
     /// Serial workspace variant of [`Self::apply_cp`]: zero heap allocations
     /// in steady state (all scratch rented from `ws`, `out` reused).
     pub fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
-        assert_eq!(cp.shape(), self.hashes.dims);
-        let n = self.fft_len();
-        let mut acc = ws.take_c64(n);
-        accumulate_cp_spectra(
-            &self.modes,
-            &cp.factors,
-            &cp.lambda,
-            0..cp.rank(),
-            n,
-            ws,
-            &mut acc,
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
         );
-        fft::inverse_real_into(&mut acc, ws, out);
-        out.truncate(self.j_tilde);
-        ws.give_c64(acc);
+        self.core().apply_cp_into(cp, ws, out);
     }
 
     /// Pre-spectral-accumulation reference (one linear convolution and one
     /// inverse FFT **per rank**). Kept as the oracle for property tests and
     /// as the baseline the §Perf rank-R speedup is measured against.
+    /// Deliberately *not* routed through [`SpectralSketchCore`] so it stays
+    /// an independent check on the shared pipeline.
     pub fn apply_cp_per_rank(&self, cp: &CpTensor) -> Vec<f64> {
-        assert_eq!(cp.shape(), self.hashes.dims);
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
+        );
         let mut out = vec![0.0; self.j_tilde];
         for r in 0..cp.rank() {
             let sketched: Vec<Vec<f64>> = self
@@ -113,7 +101,7 @@ impl FastCountSketch {
                 .map(|(cs, u)| cs.apply(u.col(r)))
                 .collect();
             let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
-            let conv = fft::conv_linear_many(&refs);
+            let conv = crate::fft::conv_linear_many(&refs);
             debug_assert_eq!(conv.len(), self.j_tilde);
             crate::linalg::axpy(cp.lambda[r], &conv, &mut out);
         }
@@ -122,7 +110,7 @@ impl FastCountSketch {
 
     /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` (used by Eq. 16).
     pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
-        fft::with_thread_workspace(|ws| {
+        crate::fft::with_thread_workspace(|ws| {
             let mut out = Vec::with_capacity(self.fft_len());
             self.apply_rank1_into(vs, ws, &mut out);
             out
@@ -133,12 +121,7 @@ impl FastCountSketch {
     /// steady state.
     pub fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
         assert_eq!(vs.len(), self.order());
-        let n = self.fft_len();
-        let mut spec = ws.take_c64(n);
-        rank1_spectrum_into(&self.modes, vs, n, ws, &mut spec);
-        fft::inverse_real_into(&mut spec, ws, out);
-        out.truncate(self.j_tilde);
-        ws.give_c64(spec);
+        self.core().apply_rank1_into(vs, ws, out);
     }
 
     /// The defining equivalence (Eq. 6): CS of `vec(T)` under the
@@ -159,6 +142,26 @@ impl FastCountSketch {
     /// Memory of the stored hash functions (bytes) — `O(Σ I_n)`.
     pub fn hash_memory_bytes(&self) -> usize {
         self.hashes.memory_bytes()
+    }
+}
+
+impl SpectralSketchOp for FastCountSketch {
+    const NAME: &'static str = "fcs";
+
+    fn from_hashes(hashes: ModeHashes) -> Self {
+        FastCountSketch::new(hashes)
+    }
+
+    fn hashes(&self) -> &ModeHashes {
+        &self.hashes
+    }
+
+    fn core(&self) -> SpectralSketchCore<'_> {
+        FastCountSketch::core(self)
+    }
+
+    fn apply_dense(&self, t: &Tensor) -> Vec<f64> {
+        FastCountSketch::apply_dense(self, t)
     }
 }
 

@@ -7,6 +7,10 @@
 //! | [`ts::TensorSketch`] | Def. 2 | circular conv (Eq. 3) | `R^J` |
 //! | [`hcs::HigherOrderCountSketch`] | Def. 3 | outer product (Eq. 5) | `R^{J_1×…×J_N}` |
 //! | [`fcs::FastCountSketch`] | Def. 4 | **linear conv (Eq. 8)** | `R^{J̃}`, `J̃ = ΣJ_n−N+1` |
+//!
+//! TS and FCS share one frequency-domain pipeline,
+//! [`common::SpectralSketchCore`] (circular vs linear parameterization), and
+//! one estimator implementation, [`estimator::SpectralEstimator`].
 
 pub mod common;
 pub mod cs;
@@ -15,10 +19,12 @@ pub mod fcs;
 pub mod hcs;
 pub mod ts;
 
+pub use common::{SpectralSketchCore, SpectralSketchOp};
 pub use cs::CountSketch;
 pub use estimator::{
     build_equalized, elementwise_median, elementwise_median_flat, ContractionEstimator,
-    CsEstimator, FcsEstimator, HcsEstimator, Method, PlainEstimator, TsEstimator,
+    CsEstimator, FcsEstimator, HcsEstimator, Method, PlainEstimator, SpectralEstimator,
+    SpectralRep, TsEstimator,
 };
 pub use fcs::FastCountSketch;
 pub use hcs::HigherOrderCountSketch;

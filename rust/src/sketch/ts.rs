@@ -1,13 +1,14 @@
 //! Tensor sketch (Definition 2, Pham & Pagh): buckets by
 //! `(Σ_n h_n(i_n)) mod J`, which for CP tensors is the mode-J **circular**
 //! convolution of the per-mode count sketches (Eq. 3).
+//!
+//! All frequency-domain work delegates to the shared
+//! [`SpectralSketchCore`] (circular parameterization): TS and FCS differ
+//! only in the two lengths handed to the core.
 
-use super::common::{
-    accumulate_cp_spectra, accumulate_cp_spectra_parallel, cp_rank_parallel, rank1_spectrum_into,
-    sketch_dense, sketch_dense_into,
-};
+use super::common::{sketch_dense, sketch_dense_into, SpectralSketchCore, SpectralSketchOp};
 use super::cs::CountSketch;
-use crate::fft::{self, FftWorkspace};
+use crate::fft::FftWorkspace;
 use crate::hash::ModeHashes;
 use crate::tensor::{CpTensor, Tensor};
 
@@ -35,6 +36,11 @@ impl TensorSketch {
         self.modes.len()
     }
 
+    /// The circular spectral-pipeline view (`fft_len == sketch_len == J`).
+    pub fn core(&self) -> SpectralSketchCore<'_> {
+        SpectralSketchCore::circular(&self.modes, self.j)
+    }
+
     /// Sketch a general dense tensor — `O(nnz(T))` (Eq. 2).
     pub fn apply_dense(&self, t: &Tensor) -> Vec<f64> {
         sketch_dense(t, &self.hashes, Some(self.j))
@@ -50,50 +56,32 @@ impl TensorSketch {
     /// accumulated in the spectral domain (one inverse FFT total instead of
     /// one per rank); large rank counts fan out over threads.
     pub fn apply_cp(&self, cp: &CpTensor) -> Vec<f64> {
-        assert_eq!(cp.shape(), self.hashes.dims);
-        if cp_rank_parallel(cp.rank(), self.j) {
-            let mut acc = accumulate_cp_spectra_parallel(
-                &self.modes,
-                &cp.factors,
-                &cp.lambda,
-                cp.rank(),
-                self.j,
-            );
-            return fft::with_thread_workspace(|ws| {
-                let mut out = Vec::with_capacity(self.j);
-                fft::inverse_real_into(&mut acc, ws, &mut out);
-                out
-            });
-        }
-        fft::with_thread_workspace(|ws| {
-            let mut out = Vec::with_capacity(self.j);
-            self.apply_cp_into(cp, ws, &mut out);
-            out
-        })
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
+        );
+        self.core().apply_cp(cp)
     }
 
     /// Serial workspace variant of [`Self::apply_cp`] — zero heap
     /// allocations in steady state.
     pub fn apply_cp_into(&self, cp: &CpTensor, ws: &mut FftWorkspace, out: &mut Vec<f64>) {
-        assert_eq!(cp.shape(), self.hashes.dims);
-        let mut acc = ws.take_c64(self.j);
-        accumulate_cp_spectra(
-            &self.modes,
-            &cp.factors,
-            &cp.lambda,
-            0..cp.rank(),
-            self.j,
-            ws,
-            &mut acc,
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
         );
-        fft::inverse_real_into(&mut acc, ws, out);
-        ws.give_c64(acc);
+        self.core().apply_cp_into(cp, ws, out);
     }
 
     /// Pre-spectral-accumulation reference (one circular convolution and one
     /// inverse FFT per rank) — property-test oracle and §Perf baseline.
+    /// Deliberately *not* routed through [`SpectralSketchCore`] so it stays
+    /// an independent check on the shared pipeline.
     pub fn apply_cp_per_rank(&self, cp: &CpTensor) -> Vec<f64> {
-        assert_eq!(cp.shape(), self.hashes.dims);
+        assert!(
+            super::common::cp_shape_matches(cp, &self.hashes.dims),
+            "CP/hash shape mismatch"
+        );
         let mut out = vec![0.0; self.j];
         for r in 0..cp.rank() {
             let sketched: Vec<Vec<f64>> = self
@@ -103,7 +91,7 @@ impl TensorSketch {
                 .map(|(cs, u)| cs.apply(u.col(r)))
                 .collect();
             let refs: Vec<&[f64]> = sketched.iter().map(|v| v.as_slice()).collect();
-            let conv = fft::conv_circular_many(&refs);
+            let conv = crate::fft::conv_circular_many(&refs);
             crate::linalg::axpy(cp.lambda[r], &conv, &mut out);
         }
         out
@@ -111,7 +99,7 @@ impl TensorSketch {
 
     /// Sketch of a rank-1 tensor `v_1 ∘ … ∘ v_N` without materializing it.
     pub fn apply_rank1(&self, vs: &[&[f64]]) -> Vec<f64> {
-        fft::with_thread_workspace(|ws| {
+        crate::fft::with_thread_workspace(|ws| {
             let mut out = Vec::with_capacity(self.j);
             self.apply_rank1_into(vs, ws, &mut out);
             out
@@ -122,10 +110,27 @@ impl TensorSketch {
     /// steady state.
     pub fn apply_rank1_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<f64>) {
         assert_eq!(vs.len(), self.order());
-        let mut spec = ws.take_c64(self.j);
-        rank1_spectrum_into(&self.modes, vs, self.j, ws, &mut spec);
-        fft::inverse_real_into(&mut spec, ws, out);
-        ws.give_c64(spec);
+        self.core().apply_rank1_into(vs, ws, out);
+    }
+}
+
+impl SpectralSketchOp for TensorSketch {
+    const NAME: &'static str = "ts";
+
+    fn from_hashes(hashes: ModeHashes) -> Self {
+        TensorSketch::new(hashes)
+    }
+
+    fn hashes(&self) -> &ModeHashes {
+        &self.hashes
+    }
+
+    fn core(&self) -> SpectralSketchCore<'_> {
+        TensorSketch::core(self)
+    }
+
+    fn apply_dense(&self, t: &Tensor) -> Vec<f64> {
+        TensorSketch::apply_dense(self, t)
     }
 }
 

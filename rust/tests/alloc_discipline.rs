@@ -9,6 +9,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use fcs::coordinator::{SketchMethod, WorkerState};
 use fcs::fft::FftWorkspace;
 use fcs::hash::ModeHashes;
 use fcs::sketch::{ContractionEstimator, FastCountSketch, FcsEstimator, TensorSketch};
@@ -163,5 +164,65 @@ fn hot_paths_are_allocation_free_in_steady_state() {
             n, 0,
             "FcsEstimator t_mode_into/t_iuu_into/t_uuu allocated {n} times in steady state"
         );
+    }
+
+    // --- coordinator WorkerState: the service's sketch_dense / sketch_cp /
+    // --- inner_estimate compute paths (response envelope excluded — the
+    // --- test reuses `out` exactly as a steady-shape client stream reuses
+    // --- the worker's arenas) ------------------------------------------------
+    {
+        let mut state = WorkerState::new();
+        let t = Tensor::randn(&mut rng, &[6, 7, 5]);
+        let cp = CpTensor::randn(&mut rng, &[6, 7, 5], 3);
+        let a = Tensor::randn(&mut rng, &[4, 4, 4]);
+        let b = Tensor::randn(&mut rng, &[4, 4, 4]);
+        let mut out = Vec::new();
+        for i in 0..3u64 {
+            let mut r = Rng::seed_from_u64(100 + i);
+            state.sketch_dense_into(&t, SketchMethod::Fcs, 16, &mut r, &mut out);
+            state.sketch_dense_into(&t, SketchMethod::Ts, 16, &mut r, &mut out);
+            state.sketch_cp_into(&cp, 16, &mut r, &mut out);
+            let _ = state.inner_estimate(&a, &b, SketchMethod::Fcs, 32, 3, &mut r);
+        }
+        let n = allocs_of(|| {
+            for i in 0..5u64 {
+                let mut r = Rng::seed_from_u64(200 + i);
+                state.sketch_dense_into(&t, SketchMethod::Fcs, 16, &mut r, &mut out);
+                state.sketch_dense_into(&t, SketchMethod::Ts, 16, &mut r, &mut out);
+                state.sketch_cp_into(&cp, 16, &mut r, &mut out);
+                let _ = state.inner_estimate(&a, &b, SketchMethod::Fcs, 32, 3, &mut r);
+            }
+        });
+        assert_eq!(n, 0, "WorkerState service paths allocated {n} times in steady state");
+    }
+
+    // --- FFT plan caches: steady state must be all hits, no rebuilds --------
+    {
+        let planner = fcs::fft::global_planner();
+        let p1 = planner.plan(64);
+        let p2 = planner.plan(64);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2), "plan(64) must be cached");
+        let r1 = planner.real_plan(64);
+        let r2 = planner.real_plan(64);
+        assert!(std::sync::Arc::ptr_eq(&r1, &r2), "real_plan(64) must be cached");
+        // Warm every plan length this workload touches (64 and its
+        // half-length 32), then assert the steady state is all cache hits.
+        let mut ws = FftWorkspace::new();
+        let mut out = Vec::new();
+        let x: Vec<f64> = (0..48).map(|i| i as f64).collect();
+        let mut spec = Vec::new();
+        fcs::fft::fft_real_into(&x, 64, &mut ws, &mut spec);
+        fcs::fft::inverse_real_into(&mut spec, &mut ws, &mut out);
+        let (h0, m0) = planner.cache_counters();
+        for _ in 0..4 {
+            let mut ws2 = FftWorkspace::new();
+            fcs::fft::fft_real_into(&x, 64, &mut ws2, &mut spec);
+            fcs::fft::inverse_real_into(&mut spec, &mut ws2, &mut out);
+        }
+        let (h1, m1) = planner.cache_counters();
+        // Each of the 4 rounds resolves real_plan(64) and plan(32) at least
+        // twice through a cold workspace — all of them global-cache hits.
+        assert!(h1 >= h0 + 8, "expected ≥8 plan-cache hits, got {}", h1 - h0);
+        assert_eq!(m1, m0, "steady-state transforms must not rebuild plans (misses grew)");
     }
 }

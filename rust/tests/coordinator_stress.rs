@@ -1,0 +1,201 @@
+//! Coordinator stress: concurrent clients hammering the workspace-backed
+//! worker pool with mixed same-shape/different-shape jobs — including while
+//! `shutdown()` runs — must never lose a response, never panic, and leave
+//! stats that add up.
+//!
+//! "Never lose" means: every `submit` that returned `Ok(rx)` resolves — the
+//! client either receives exactly one response, or observes a clean
+//! disconnect for jobs that were still queued behind the stop sentinels.
+//! `answered == total_completed` ties the two books together.
+
+use fcs::coordinator::{
+    Request, Response, Service, ServiceConfig, ServiceError, SketchMethod,
+};
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use std::time::Duration;
+
+fn start(workers: usize, cap: usize) -> Service {
+    Service::start(
+        ServiceConfig {
+            workers,
+            queue_capacity: cap,
+            batch_deadline: Duration::from_micros(200),
+            seed: 9,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+/// Expected sketch length for a `SketchDense` request.
+fn dense_len(order: usize, method: SketchMethod, j: usize) -> usize {
+    match method {
+        SketchMethod::Ts => j,
+        SketchMethod::Fcs => order * j - order + 1,
+    }
+}
+
+#[test]
+fn mixed_shapes_all_answered_with_correct_lengths() {
+    // Same-shape bursts interleaved with shape changes force the worker's
+    // drain-and-group path to reorder jobs; replies must still route to the
+    // right clients (verified via per-request expected lengths).
+    let svc = start(3, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(1);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..300 {
+        let (shape, j, method): (Vec<usize>, usize, SketchMethod) = match i % 4 {
+            0 | 1 => (vec![6, 6, 6], 32, SketchMethod::Fcs), // same-shape burst
+            2 => (vec![3, 8, 4], 16, SketchMethod::Ts),
+            _ => (
+                vec![rng.below(5) as usize + 2, 4, rng.below(4) as usize + 2],
+                8,
+                SketchMethod::Fcs,
+            ),
+        };
+        let t = Tensor::randn(&mut rng, &shape);
+        expected.push(dense_len(shape.len(), method, j));
+        rxs.push(h.submit(Request::SketchDense { tensor: t, method, j }).unwrap());
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let Response::Sketch(v) = rx.recv().unwrap().unwrap() else {
+            panic!("wrong response kind")
+        };
+        assert_eq!(v.len(), want);
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert!(rx.try_recv().is_err(), "answered more than once");
+    }
+    let report = svc.stats();
+    assert_eq!(report.total_completed, 300);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_under_fire_loses_no_response() {
+    let svc = start(3, 64);
+    let h = svc.handle();
+    let clients = 6;
+    let per_client = 100;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(1000 + c);
+                let mut pending = Vec::new();
+                let (mut accepted, mut busy, mut closed_submit) = (0u64, 0u64, 0u64);
+                for i in 0..per_client {
+                    let req = match i % 3 {
+                        0 => Request::SketchDense {
+                            tensor: Tensor::randn(&mut rng, &[6, 6, 6]),
+                            method: SketchMethod::Fcs,
+                            j: 24,
+                        },
+                        1 => Request::SketchDense {
+                            tensor: Tensor::randn(&mut rng, &[4, 7, 3]),
+                            method: SketchMethod::Ts,
+                            j: 16,
+                        },
+                        _ => Request::SketchCp {
+                            cp: CpTensor::randn(&mut rng, &[5, 5, 5], 2),
+                            j: 12,
+                        },
+                    };
+                    match h.submit(req) {
+                        Ok(rx) => {
+                            accepted += 1;
+                            pending.push(rx);
+                        }
+                        Err(ServiceError::Busy) => busy += 1,
+                        Err(ServiceError::Closed) => closed_submit += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                let (mut answered, mut dropped) = (0u64, 0u64);
+                for rx in pending {
+                    match rx.recv() {
+                        Ok(resp) => {
+                            match resp.expect("execution must not fail") {
+                                Response::Sketch(v) => {
+                                    assert!(!v.is_empty());
+                                    assert!(v.iter().all(|x| x.is_finite()));
+                                }
+                                Response::Scalar(_) => panic!("wrong response kind"),
+                            }
+                            answered += 1;
+                        }
+                        // Reply sender dropped: the job was still queued
+                        // behind the stop sentinels at shutdown. A clean,
+                        // observable drop — not a lost response.
+                        Err(_) => dropped += 1,
+                    }
+                }
+                assert_eq!(answered + dropped, accepted, "client {c}: response unaccounted");
+                (accepted, busy, closed_submit, answered, dropped)
+            })
+        })
+        .collect();
+
+    // Let traffic build, then pull the plug while clients are mid-stream.
+    std::thread::sleep(Duration::from_millis(15));
+    let stats_handle = h.clone();
+    drop(h);
+    svc.shutdown();
+
+    let mut totals = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for t in threads {
+        let (a, b, c, ans, d) = t.join().expect("client panicked");
+        totals.0 += a;
+        totals.1 += b;
+        totals.2 += c;
+        totals.3 += ans;
+        totals.4 += d;
+    }
+    let (accepted, busy, _closed, answered, dropped) = totals;
+    assert_eq!(answered + dropped, accepted, "global response accounting");
+
+    // Stats must agree with the clients' books: every answered worker-pool
+    // job was recorded exactly once, every Busy rejection counted.
+    let report = stats_handle.stats();
+    let worker_ops: u64 = report
+        .per_op
+        .iter()
+        .filter(|o| o.op == "sketch_dense" || o.op == "sketch_cp")
+        .map(|o| o.completed)
+        .sum();
+    assert_eq!(worker_ops, answered, "stats vs client books");
+    assert_eq!(report.rejected_busy, busy, "busy rejections must be counted");
+}
+
+#[test]
+fn repeated_start_shutdown_cycles_are_clean() {
+    // Shutdown determinism: cycles must neither deadlock nor leak panics,
+    // with and without in-flight work.
+    for cycle in 0..5 {
+        let svc = start(2, 32);
+        let h = svc.handle();
+        let mut rng = Rng::seed_from_u64(cycle);
+        let mut rxs = Vec::new();
+        for _ in 0..(cycle as usize * 3) {
+            let t = Tensor::randn(&mut rng, &[4, 4, 4]);
+            if let Ok(rx) =
+                h.submit(Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 8 })
+            {
+                rxs.push(rx);
+            }
+        }
+        svc.shutdown();
+        // Submitting after shutdown must fail cleanly, not hang.
+        let t = Tensor::randn(&mut rng, &[4, 4, 4]);
+        assert!(matches!(
+            h.submit(Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 8 }),
+            Err(ServiceError::Closed)
+        ));
+        for rx in rxs {
+            // Every accepted pre-shutdown job resolved or dropped cleanly.
+            let _ = rx.recv();
+        }
+    }
+}

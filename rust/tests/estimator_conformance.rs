@@ -1,0 +1,282 @@
+//! Cross-backend conformance suite: every estimator backend
+//! (Plain/CS/TS/HCS/FCS) is exercised on *shared seeded cases* against the
+//! same set of behavioural contracts, so the generic spectral core cannot
+//! drift from the exact baselines — and no backend can drift from the
+//! others — without a failure here.
+//!
+//! Contracts:
+//! 1. `t_iuu` ≡ `t_mode(0, [u,u,u])` ≡ the `_into` variants (API coherence);
+//! 2. D=1 spectral `t_mode` ≡ the literal per-coordinate sketch inner
+//!    product `⟨st, sketch(e_i ∘ v ∘ w)⟩` (Eq. 17 against Eq. 16's form);
+//! 3. sketch-domain `deflate` ≡ rebuilding on the deflated tensor with the
+//!    same hash draws (linearity of every sketch);
+//! 4. spectral CP path ≡ per-rank oracle ≡ dense path, with TS ≡ the mod-J
+//!    fold of FCS under equalized hashes (§3 point (2));
+//! 5. median-of-reps estimates are unbiased within statistical tolerance.
+
+use fcs::hash::ModeHashes;
+use fcs::sketch::{
+    build_equalized, ContractionEstimator, FastCountSketch, Method, TensorSketch,
+};
+use fcs::tensor::{contract_all_but, t_uuu, CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use fcs::util::qcheck::qcheck;
+
+const METHODS: [Method; 5] =
+    [Method::Plain, Method::Cs, Method::Ts, Method::Hcs, Method::Fcs];
+
+/// Per-method hash length: HCS stores a J×J×J sketch, so it gets a small J.
+fn j_for(method: Method, j: usize) -> usize {
+    if method == Method::Hcs {
+        4
+    } else {
+        j
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let scale = b.iter().map(|v| v.abs()).fold(1.0, f64::max);
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}: k={k} {x} vs {y} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn t_iuu_consistent_with_t_mode_all_backends() {
+    qcheck(6, |g| {
+        let dim = g.usize_in(4, 8);
+        let t = Tensor::randn(g.rng(), &[dim, dim, dim]);
+        let u = g.normal_vec(dim);
+        for method in METHODS {
+            let est = method.build(&t, 2, j_for(method, 64), g.rng());
+            let via_iuu = est.t_iuu(&u);
+            let vs: [&[f64]; 3] = [&u, &u, &u];
+            let via_mode = est.t_mode(0, &vs);
+            assert_close(&via_iuu, &via_mode, 1e-9, &format!("{} t_iuu vs t_mode", est.name()));
+            let mut into = Vec::new();
+            est.t_iuu_into(&u, &mut into);
+            assert_close(&into, &via_iuu, 1e-12, &format!("{} t_iuu_into", est.name()));
+            let mut minto = Vec::new();
+            est.t_mode_into(0, &vs, &mut minto);
+            assert_close(&minto, &via_mode, 1e-12, &format!("{} t_mode_into", est.name()));
+        }
+    });
+}
+
+#[test]
+fn spectral_t_mode_matches_sketch_inner_product_oracle() {
+    // The generic correlate-and-gather (one body for TS and FCS) must equal
+    // the literal Eq. 17 computation: per free index i, the inner product of
+    // the stored sketch with the sketch of e_i ∘ v_1 ∘ v_2. D=1 so the
+    // median is the identity.
+    qcheck(5, |g| {
+        let shape = [g.usize_in(3, 6), g.usize_in(3, 6), g.usize_in(3, 6)];
+        let t = Tensor::randn(g.rng(), &shape);
+        let j = g.usize_in(5, 12);
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+        let hashes = vec![mh];
+        let (ts_est, fcs_est) = (
+            fcs::sketch::TsEstimator::build_with_hashes(&t, &hashes),
+            fcs::sketch::FcsEstimator::build_with_hashes(&t, &hashes),
+        );
+        let ts_op = TensorSketch::new(hashes[0].clone());
+        let fcs_op = FastCountSketch::new(hashes[0].clone());
+        let ts_st = ts_op.apply_dense(&t);
+        let fcs_st = fcs_op.apply_dense(&t);
+        let v1 = g.normal_vec(shape[1]);
+        let v2 = g.normal_vec(shape[2]);
+        let dummy = vec![0.0; shape[0]];
+        let vs: [&[f64]; 3] = [&dummy, &v1, &v2];
+        let got_ts = ts_est.t_mode(0, &vs);
+        let got_fcs = fcs_est.t_mode(0, &vs);
+        for i in 0..shape[0] {
+            let mut e = vec![0.0; shape[0]];
+            e[i] = 1.0;
+            let ref_ts = fcs::linalg::dot(&ts_st, &ts_op.apply_rank1(&[&e[..], &v1[..], &v2[..]]));
+            let ref_fcs =
+                fcs::linalg::dot(&fcs_st, &fcs_op.apply_rank1(&[&e[..], &v1[..], &v2[..]]));
+            let scale = ref_fcs.abs().max(1.0);
+            assert!(
+                (got_ts[i] - ref_ts).abs() < 1e-8 * scale,
+                "case {}: ts i={i} {} vs oracle {ref_ts}",
+                g.case,
+                got_ts[i]
+            );
+            assert!(
+                (got_fcs[i] - ref_fcs).abs() < 1e-8 * scale,
+                "case {}: fcs i={i} {} vs oracle {ref_fcs}",
+                g.case,
+                got_fcs[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn deflate_linearity_all_backends() {
+    // deflate(λ, vs) in the sketch domain ≡ building on T − λ·v1∘v2∘v3 with
+    // the same hash draws — checked through the public query surface, for
+    // every backend, with a shared RNG stream so the hashes match.
+    qcheck(5, |g| {
+        let dim = g.usize_in(4, 7);
+        let t = Tensor::randn(g.rng(), &[dim, dim, dim]);
+        let lambda = g.f64_in(-2.0, 2.0);
+        let v1 = g.normal_vec(dim);
+        let v2 = g.normal_vec(dim);
+        let v3 = g.normal_vec(dim);
+        let vs: [&[f64]; 3] = [&v1, &v2, &v3];
+        let deflated = {
+            let r1 = fcs::tensor::outer(&vs);
+            t.sub(&r1.scaled(lambda))
+        };
+        let probe = g.normal_vec(dim);
+        let pv: [&[f64]; 3] = [&probe, &probe, &probe];
+        for method in METHODS {
+            let j = j_for(method, 48);
+            let seed = g.rng().next_u64();
+            let mut ra = Rng::seed_from_u64(seed);
+            let mut rb = Rng::seed_from_u64(seed);
+            let mut est = method.build(&t, 2, j, &mut ra);
+            est.deflate(lambda, &vs);
+            let est2 = method.build(&deflated, 2, j, &mut rb);
+            for mode in 0..3 {
+                let a = est.t_mode(mode, &pv);
+                let b = est2.t_mode(mode, &pv);
+                assert_close(
+                    &a,
+                    &b,
+                    1e-7,
+                    &format!("case {}: {} deflate mode {mode}", g.case, est.name()),
+                );
+            }
+            let (na, nb) = (est.norm_estimate(), est2.norm_estimate());
+            assert!(
+                (na - nb).abs() <= 1e-7 * nb.max(1.0),
+                "case {}: {} norm {na} vs {nb}",
+                g.case,
+                est.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn cp_spectral_path_matches_oracle_and_dense_equalized() {
+    // Shared hash draws: the FCS linear path, the TS circular path, their
+    // per-rank oracles, the dense paths, and the fold relation TS = fold(FCS)
+    // must all cohere on the same case.
+    qcheck(8, |g| {
+        let order = 3;
+        let shape = g.shape(order, 2, 5);
+        let j = g.usize_in(3, 9);
+        let rank = g.usize_in(1, 3);
+        let cp = CpTensor::randn(g.rng(), &shape, rank);
+        let dense_t = cp.to_dense();
+        let mh = ModeHashes::draw_uniform(g.rng(), &shape, j);
+        let ts = TensorSketch::new(mh.clone());
+        let fc = FastCountSketch::new(mh);
+        let fcs_spectral = fc.apply_cp(&cp);
+        let fcs_oracle = fc.apply_cp_per_rank(&cp);
+        let fcs_dense = fc.apply_dense(&dense_t);
+        let ts_spectral = ts.apply_cp(&cp);
+        let ts_oracle = ts.apply_cp_per_rank(&cp);
+        let ts_dense = ts.apply_dense(&dense_t);
+        let what = format!("case {}", g.case);
+        assert_close(&fcs_spectral, &fcs_oracle, 1e-9, &format!("{what}: fcs vs oracle"));
+        assert_close(&fcs_spectral, &fcs_dense, 1e-8, &format!("{what}: fcs vs dense"));
+        assert_close(&ts_spectral, &ts_oracle, 1e-9, &format!("{what}: ts vs oracle"));
+        assert_close(&ts_spectral, &ts_dense, 1e-8, &format!("{what}: ts vs dense"));
+        let mut folded = vec![0.0; j];
+        for (k, v) in fcs_dense.iter().enumerate() {
+            folded[k % j] += v;
+        }
+        assert_close(&ts_dense, &folded, 1e-9, &format!("{what}: ts = fold(fcs)"));
+    });
+}
+
+#[test]
+fn median_of_reps_unbiased_within_tolerance() {
+    // Statistical contract: averaging many independent D=3 median estimates
+    // of T(u,u,u) recovers the true contraction within a generous
+    // tolerance, for every sketched backend. (The median of an unbiased,
+    // roughly symmetric estimator is approximately unbiased.)
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    let cp = CpTensor::random_orthogonal_symmetric(&mut rng, 6, 2, 3);
+    let t = cp.to_dense();
+    let mut u = rng.normal_vec(6);
+    fcs::linalg::normalize(&mut u);
+    let truth = t_uuu(&t, &u);
+    for method in [Method::Cs, Method::Ts, Method::Hcs, Method::Fcs] {
+        let j = if method == Method::Hcs { 8 } else { 256 };
+        let trials = 25;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let est = method.build(&t, 3, j, &mut rng);
+            acc += est.t_uuu(&u);
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - truth).abs() < 0.4 * truth.abs().max(1.0),
+            "{}: mean {mean} vs truth {truth}",
+            method.name()
+        );
+    }
+    // Plain is exact, not just unbiased.
+    let est = Method::Plain.build(&t, 1, 1, &mut rng);
+    assert!((est.t_uuu(&u) - truth).abs() < 1e-10);
+}
+
+#[test]
+fn norm_estimates_track_frobenius_norm() {
+    // ‖T‖_F from sketches: exact for plain, within ~40% for sketched
+    // backends at these sizes (it feeds RTPM's λ clamp, so gross drift
+    // matters more than precision).
+    let mut rng = Rng::seed_from_u64(7);
+    let t = Tensor::randn(&mut rng, &[6, 6, 6]);
+    let truth = t.frob_norm();
+    for method in METHODS {
+        let j = j_for(method, 512);
+        let est = method.build(&t, 5, j, &mut rng);
+        let got = est.norm_estimate();
+        let tol = if method == Method::Plain { 1e-12 } else { 0.5 * truth };
+        assert!(
+            (got - truth).abs() <= tol,
+            "{}: norm {got} vs {truth}",
+            est.name()
+        );
+    }
+}
+
+#[test]
+fn asymmetric_modes_agree_across_spectral_backends() {
+    // Non-cubical tensor, every free mode: the two spectral backends (one
+    // generic body) and the exact baseline must tell one story. Equalized
+    // hashes mean TS and FCS see identical draws; both should land near the
+    // exact contraction with enough repetitions.
+    let mut rng = Rng::seed_from_u64(0xABCD);
+    let cp = CpTensor::random_orthogonal(&mut rng, &[8, 11, 9], 2);
+    let t = cp.to_dense();
+    let v0 = rng.normal_vec(8);
+    let v1 = rng.normal_vec(11);
+    let v2 = rng.normal_vec(9);
+    let vs: [&[f64]; 3] = [&v0, &v1, &v2];
+    let (ts, fc) = build_equalized(&t, 11, 600, &mut rng);
+    for mode in 0..3 {
+        let truth = contract_all_but(&t, mode, &vs);
+        let tn = fcs::linalg::norm2(&truth);
+        for (name, got) in [("ts", ts.t_mode(mode, &vs)), ("fcs", fc.t_mode(mode, &vs))] {
+            let err = got
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+                / tn;
+            assert!(err < 0.8, "{name} mode {mode}: rel err {err}");
+        }
+    }
+}

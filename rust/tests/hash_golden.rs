@@ -1,0 +1,104 @@
+//! Golden fixtures pinning the randomness substrate: the exact
+//! `Rng` (xoshiro256++ seeded via SplitMix64) stream, the 2-wise hash
+//! family's materialized tables, and an end-to-end FCS/TS sketch of a fixed
+//! integer tensor.
+//!
+//! Every sketch in the crate is a deterministic function of this stream, so
+//! a refactor of `hash/` or `util/prng.rs` that changes any of these values
+//! silently changes *every* sketch, estimator trajectory, and service
+//! response in the library. These literals were computed with an
+//! independent reimplementation of SplitMix64 / xoshiro256++ / Lemire
+//! `below` / the Mersenne-prime hash in arbitrary-precision arithmetic
+//! (Python), not by running this crate — so they also cross-check the Rust
+//! implementation itself.
+
+use fcs::hash::{HashPair, ModeHashes};
+use fcs::sketch::{FastCountSketch, TensorSketch};
+use fcs::tensor::Tensor;
+use fcs::util::prng::Rng;
+
+#[test]
+fn xoshiro_stream_is_pinned() {
+    let mut r = Rng::seed_from_u64(0);
+    let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+    assert_eq!(
+        got,
+        vec![
+            0x53175d61490b23df,
+            0x61da6f3dc380d507,
+            0x5c0fdf91ec9a7bfc,
+            0x02eebf8c3bbe5e1a,
+        ]
+    );
+    let mut r = Rng::seed_from_u64(42);
+    let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+    assert_eq!(
+        got,
+        vec![
+            0xd0764d4f4476689f,
+            0x519e4174576f3791,
+            0xfbe07cfb0c24ed8c,
+            0xb37d9f600cd835b8,
+        ]
+    );
+}
+
+#[test]
+fn hash_pair_draw_is_pinned() {
+    // HashPair::draw consumes four Lemire-rejection `below` draws; the
+    // resulting (h, s) over domain 10, range 8 is fully determined.
+    let mut r = Rng::seed_from_u64(1);
+    let hp = HashPair::draw(&mut r, 10, 8);
+    let h: Vec<usize> = (0..10).map(|i| hp.h(i)).collect();
+    let s: Vec<f64> = (0..10).map(|i| hp.s(i)).collect();
+    assert_eq!(h, vec![0, 3, 6, 1, 3, 6, 1, 4, 7, 2]);
+    assert_eq!(s, vec![1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0]);
+    // The materialized table must agree with the evaluating form.
+    let t = hp.materialize();
+    assert_eq!(t.h, vec![0u32, 3, 6, 1, 3, 6, 1, 4, 7, 2]);
+    assert_eq!(t.s, vec![1i8, 1, 1, -1, -1, -1, -1, -1, -1, -1]);
+}
+
+#[test]
+fn mode_hashes_draw_uniform_is_pinned() {
+    let mut r = Rng::seed_from_u64(0xF00D);
+    let mh = ModeHashes::draw_uniform(&mut r, &[4, 3, 2], 5);
+    assert_eq!(mh.composite_range(), 13);
+    assert_eq!(mh.modes[0].h, vec![2u32, 3, 4, 0]);
+    assert_eq!(mh.modes[0].s, vec![-1i8, 1, 1, 1]);
+    assert_eq!(mh.modes[1].h, vec![2u32, 4, 2]);
+    assert_eq!(mh.modes[1].s, vec![1i8, 1, 1]);
+    assert_eq!(mh.modes[2].h, vec![2u32, 2]);
+    assert_eq!(mh.modes[2].s, vec![-1i8, 1]);
+}
+
+#[test]
+fn end_to_end_sketch_is_pinned() {
+    // FCS and TS of the fixed integer tensor t.data[l] = l + 1 (col-major,
+    // shape 4×3×2) under the seed-0xF00D hashes. All bucket sums are exact
+    // signed-integer sums, so the comparison is exact.
+    let mut r = Rng::seed_from_u64(0xF00D);
+    let mh = ModeHashes::draw_uniform(&mut r, &[4, 3, 2], 5);
+    let mut t = Tensor::zeros(&[4, 3, 2]);
+    for (l, v) in t.data.iter_mut().enumerate() {
+        *v = (l + 1) as f64;
+    }
+    let fcs = FastCountSketch::new(mh.clone());
+    let got = fcs.apply_dense(&t);
+    let expect = [
+        0.0, 0.0, 0.0, 0.0, 24.0, 0.0, -12.0, 24.0, 12.0, 12.0, 12.0, 0.0, 0.0,
+    ];
+    assert_eq!(got.len(), 13);
+    for (k, (a, e)) in got.iter().zip(expect.iter()).enumerate() {
+        assert_eq!(a, e, "fcs bucket {k}");
+    }
+    // TS is the mod-J fold of the same composite hash (§3 point (2)).
+    let ts = TensorSketch::new(mh);
+    let got_ts = ts.apply_dense(&t);
+    let mut folded = [0.0f64; 5];
+    for (k, v) in expect.iter().enumerate() {
+        folded[k % 5] += v;
+    }
+    assert_eq!(folded, [12.0, -12.0, 24.0, 12.0, 36.0]);
+    assert_eq!(got_ts, folded.to_vec());
+}
