@@ -105,6 +105,122 @@ fn main() {
         ]);
     }
 
+    // (ii-b) FFT kernel microbenchmarks: the scalar radix-2 oracle vs the
+    // split-plane radix-4 kernel looped one signal at a time vs one blocked
+    // batched pass — per (length, batch), machine-readable (§Perf "fft
+    // kernel" rows). Also the real-transform primitive the spectral paths
+    // call: fft_real_many_into (one call, all lanes) vs a loop of
+    // fft_real_into (the PR 3 per-spectrum dispatch it replaced).
+    {
+        use fcs::fft::{
+            fft_real_into, fft_real_many_into, C64, Dir, FftScratch, Plan, ScalarRadix2Plan,
+        };
+        let mut rng = Rng::seed_from_u64(5);
+        let batch = 16usize;
+        for &n in &[1024usize, 4096, 16384] {
+            let plan = Plan::new(n);
+            let oracle = ScalarRadix2Plan::new(n);
+            let mut scratch = FftScratch::new();
+            let sig: Vec<C64> =
+                (0..n * batch).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let mut inter = sig.clone();
+            let s_scalar = measure(1, reps, || {
+                for b in 0..batch {
+                    oracle.process(&mut inter[b * n..(b + 1) * n], Dir::Forward);
+                }
+            });
+            // split-plane kernel, one signal per call (signal-major == a
+            // single lane-major lane)
+            let mut re: Vec<f64> = sig.iter().map(|z| z.re).collect();
+            let mut im: Vec<f64> = sig.iter().map(|z| z.im).collect();
+            let s_looped = measure(1, reps, || {
+                for b in 0..batch {
+                    plan.process_many(
+                        &mut re[b * n..(b + 1) * n],
+                        &mut im[b * n..(b + 1) * n],
+                        1,
+                        Dir::Forward,
+                        &mut scratch,
+                    );
+                }
+            });
+            // one blocked pass, batch innermost (lane-major planes)
+            let mut bre = vec![0.0; n * batch];
+            let mut bim = vec![0.0; n * batch];
+            for (i, z) in sig.iter().enumerate() {
+                let (k, b) = (i % n, i / n);
+                bre[k * batch + b] = z.re;
+                bim[k * batch + b] = z.im;
+            }
+            let s_batched = measure(1, reps, || {
+                plan.process_many(&mut bre, &mut bim, batch, Dir::Forward, &mut scratch);
+            });
+            table.row(vec![
+                format!("fft n={n} scalar radix-2 ×{batch}"),
+                "time".into(),
+                fmt_secs(s_scalar.median),
+            ]);
+            table.row(vec![
+                format!("fft n={n} split-plane looped ×{batch}"),
+                "time".into(),
+                fmt_secs(s_looped.median),
+            ]);
+            table.row(vec![
+                format!("fft n={n} split-plane batched (B={batch})"),
+                "time".into(),
+                fmt_secs(s_batched.median),
+            ]);
+            table.row(vec![
+                format!("fft n={n} batched vs scalar"),
+                "speedup".into(),
+                format!("{:.2}x", s_scalar.median / s_batched.median),
+            ]);
+            sink.record(&[
+                ("path", "fft_kernel".into()),
+                ("n", (n as f64).into()),
+                ("batch", (batch as f64).into()),
+                ("secs_scalar_radix2", s_scalar.median.into()),
+                ("secs_split_radix_looped", s_looped.median.into()),
+                ("secs_split_radix_batched", s_batched.median.into()),
+                ("speedup_batched_vs_scalar", (s_scalar.median / s_batched.median).into()),
+                ("speedup_batched_vs_looped", (s_looped.median / s_batched.median).into()),
+            ]);
+        }
+        // Real-transform primitive at the rank-R spectral shape (stride = a
+        // J̃-scale signal, n = next_pow2): one batched call vs a per-spectrum
+        // loop — the exact dispatch pattern accumulate_cp_spectra replaced.
+        {
+            let stride = 11998usize;
+            let n = 16384usize;
+            let lanes = 12usize; // e.g. 4 CP ranks × 3 modes per chunk
+            let xs: Vec<f64> = (0..stride * lanes).map(|_| rng.normal()).collect();
+            let mut ws = FftWorkspace::new();
+            let (mut sre, mut sim) = (Vec::new(), Vec::new());
+            let s_many = measure(1, reps, || {
+                fft_real_many_into(&xs, stride, lanes, n, &mut ws, &mut sre, &mut sim);
+            });
+            let mut spec = Vec::new();
+            let s_loop = measure(1, reps, || {
+                for b in 0..lanes {
+                    fft_real_into(&xs[b * stride..(b + 1) * stride], n, &mut ws, &mut spec);
+                }
+            });
+            table.row(vec![
+                format!("rfft n={n} ×{lanes} batched vs per-spectrum"),
+                "speedup".into(),
+                format!("{:.2}x", s_loop.median / s_many.median),
+            ]);
+            sink.record(&[
+                ("path", "rfft_many".into()),
+                ("n", (n as f64).into()),
+                ("lanes", (lanes as f64).into()),
+                ("secs_batched", s_many.median.into()),
+                ("secs_per_spectrum_loop", s_loop.median.into()),
+                ("speedup", (s_loop.median / s_many.median).into()),
+            ]);
+        }
+    }
+
     // (iii) estimator query latency
     {
         let dim = 100usize;

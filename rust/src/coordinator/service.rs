@@ -448,7 +448,10 @@ impl WorkerState {
 
     /// The `sketch_cp` pure-Rust body: per-mode hash redraw into the
     /// count-sketch arena, then the shared spectral core's one-IFFT rank
-    /// accumulation. Zero heap allocations in steady state.
+    /// accumulation — which batches all R·N mode spectra of each rank chunk
+    /// through one `fft_real_many_into` blocked pass over this worker's
+    /// arena (split-plane kernel, batch innermost). Zero heap allocations in
+    /// steady state.
     pub fn sketch_cp_into(&mut self, cp: &CpTensor, j: usize, rng: &mut Rng, out: &mut Vec<f64>) {
         let order = cp.order();
         self.cs_modes.truncate(order);

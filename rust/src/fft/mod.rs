@@ -1,7 +1,10 @@
 //! From-scratch FFT library (rustfft is not available offline): complex
-//! arithmetic, radix-2 + Bluestein plans with a global plan cache, a packed
-//! real-input transform, caller-owned zero-allocation workspaces, and the
-//! linear/circular convolutions that implement Eq. 3 (TS) and Eq. 8 (FCS).
+//! arithmetic, a split-plane (structure-of-arrays) radix-4 kernel with
+//! batched multi-spectrum transforms, Bluestein plans composed over it, a
+//! global plan cache, a packed real-input transform, caller-owned
+//! zero-allocation workspaces, and the linear/circular convolutions that
+//! implement Eq. 3 (TS) and Eq. 8 (FCS). `dft_naive` and the scalar
+//! interleaved radix-2 kernel (`ScalarRadix2Plan`) are kept as oracles.
 
 pub mod complex;
 pub mod convolve;
@@ -15,7 +18,10 @@ pub use convolve::{
     product_spectrum_into, spectral_corr, spectral_corr_into, zero_pad,
 };
 pub use plan::{
-    fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, Plan, Planner,
-    RealPlan,
+    dft_naive, fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, FftScratch,
+    Plan, Planner, RealPlan, ScalarRadix2Plan,
 };
-pub use workspace::{fft_real_into, inverse_real_into, with_thread_workspace, FftWorkspace};
+pub use workspace::{
+    fft_real_into, fft_real_many_into, inverse_real_into, inverse_real_many_into,
+    with_thread_workspace, FftWorkspace,
+};

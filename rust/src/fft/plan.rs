@@ -1,8 +1,18 @@
-//! FFT plans: iterative radix-2 Cooley-Tukey for power-of-two lengths and
-//! Bluestein's algorithm (chirp-z) for arbitrary lengths. Plans cache
-//! twiddle factors and bit-reversal tables; the planner memoizes plans per
-//! length so repeated transforms (the FCS hot path runs thousands at the
-//! same `J̃`) pay setup once.
+//! FFT plans: an iterative, batch-capable radix-4 kernel on **split re/im
+//! planes** (structure-of-arrays) for power-of-two lengths, and Bluestein's
+//! algorithm (chirp-z) for arbitrary lengths, composed over the same kernel.
+//!
+//! The radix-4 stages are fused pairs of radix-2 stages (3 complex multiplies
+//! per 4 outputs instead of 4, and half the passes over the data), driven off
+//! a precomputed bit-reversal permutation and per-stage twiddle tables stored
+//! contiguously in the plan. Because the planes are plain `f64` arrays and
+//! [`Plan::process_many`] keeps the batch as the innermost axis, the butterfly
+//! inner loops autovectorize without explicit intrinsics.
+//!
+//! The planner memoizes plans per length so repeated transforms (the FCS hot
+//! path runs thousands at the same `J̃`) pay setup once. The pre-existing
+//! scalar interleaved radix-2 kernel survives as [`ScalarRadix2Plan`], an
+//! independent oracle for the conformance tests and the §Perf baseline.
 
 use super::complex::{C64, ONE, ZERO};
 use std::collections::HashMap;
@@ -16,9 +26,418 @@ pub enum Dir {
     Inverse,
 }
 
-/// A radix-2 plan for power-of-two `n`.
+/// Reusable scratch planes for the split-plane kernel: the interleaved-`C64`
+/// entry points stage data through `re`/`im`, and Bluestein's inner
+/// convolution runs in `conv_re`/`conv_im`. Caller-owned so hot loops (via
+/// [`super::workspace::FftWorkspace`]) reuse the planes instead of
+/// allocating per transform.
+#[derive(Debug, Default)]
+pub struct FftScratch {
+    re: Vec<f64>,
+    im: Vec<f64>,
+    conv_re: Vec<f64>,
+    conv_im: Vec<f64>,
+}
+
+impl FftScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Split-plane radix-4 kernel (power-of-two lengths)
+// ---------------------------------------------------------------------------
+
+/// One fused pair of radix-2 stages (half-sizes `m` and `2m`) — i.e. one
+/// radix-4 stage. Its twiddles live at `tw[off..off+m]` (`w1[k] = e^{-iπk/m}`,
+/// the inner radix-2 stage) and `tw[off+m..off+2m]` (`w2[k] = e^{-iπk/2m}`,
+/// the outer one; the upper half `w2[m+k] = -i·w2[k]` is folded into the
+/// butterfly instead of being stored).
+#[derive(Debug, Clone, Copy)]
+struct Stage {
+    m: usize,
+    off: usize,
+}
+
+/// Iterative DIT radix-4 kernel for power-of-two `n`, operating on split
+/// re/im planes with an arbitrary batch as the innermost axis. Derived by
+/// fusing consecutive stages of the classic radix-2 flow graph, so it shares
+/// its bit-reversal permutation; an odd `log2(n)` runs one leading radix-2
+/// stage (all twiddles 1) before the radix-4 sweep.
 #[derive(Debug)]
-struct Radix2Plan {
+struct Radix4Plan {
+    n: usize,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+    /// `log2(n)` odd ⇒ one leading half-size-1 radix-2 stage.
+    head_radix2: bool,
+    stages: Vec<Stage>,
+    /// Per-stage twiddles, contiguous split planes (see [`Stage`]).
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+}
+
+impl Radix4Plan {
+    fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n > 0);
+        let bits = n.trailing_zeros();
+        let mut rev = vec![0u32; n];
+        if n > 1 {
+            for (i, r) in rev.iter_mut().enumerate() {
+                *r = (i as u32).reverse_bits() >> (32 - bits);
+            }
+        }
+        let head_radix2 = bits % 2 == 1;
+        let mut stages = Vec::new();
+        let mut tw_re = Vec::new();
+        let mut tw_im = Vec::new();
+        let mut m = if head_radix2 { 2usize } else { 1usize };
+        while m < n {
+            let off = tw_re.len();
+            for k in 0..m {
+                let w = C64::cis(-std::f64::consts::PI * k as f64 / m as f64);
+                tw_re.push(w.re);
+                tw_im.push(w.im);
+            }
+            for k in 0..m {
+                let w = C64::cis(-std::f64::consts::PI * k as f64 / (2 * m) as f64);
+                tw_re.push(w.re);
+                tw_im.push(w.im);
+            }
+            stages.push(Stage { m, off });
+            m *= 4;
+        }
+        Self { n, rev, head_radix2, stages, tw_re, tw_im }
+    }
+
+    /// In-place batched transform: `re`/`im` hold `batch` signals lane-major
+    /// (`re[k*batch + b]` is element `k` of signal `b`).
+    fn process(&self, re: &mut [f64], im: &mut [f64], batch: usize, dir: Dir) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n * batch);
+        debug_assert_eq!(im.len(), n * batch);
+        if n == 1 || batch == 0 {
+            return;
+        }
+        // Inverse via conjugation: F⁻¹(x) = conj(F(conj(x)))/n — keeps the
+        // butterfly loops branch-free (§Perf).
+        if dir == Dir::Inverse {
+            for v in im.iter_mut() {
+                *v = -*v;
+            }
+            self.process(re, im, batch, Dir::Forward);
+            let inv = 1.0 / n as f64;
+            for v in re.iter_mut() {
+                *v *= inv;
+            }
+            for v in im.iter_mut() {
+                *v *= -inv;
+            }
+            return;
+        }
+        // Bit-reversal permutation, whole rows of `batch` lanes.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                for l in 0..batch {
+                    re.swap(i * batch + l, j * batch + l);
+                    im.swap(i * batch + l, j * batch + l);
+                }
+            }
+        }
+        // Leading radix-2 stage for odd log2(n): half-size 1, w = 1.
+        if self.head_radix2 {
+            let pair = 2 * batch;
+            for (bre, bim) in re.chunks_exact_mut(pair).zip(im.chunks_exact_mut(pair)) {
+                let (ar, br) = bre.split_at_mut(batch);
+                let (ai, bi) = bim.split_at_mut(batch);
+                for l in 0..batch {
+                    let (xr, xi) = (ar[l], ai[l]);
+                    let (yr, yi) = (br[l], bi[l]);
+                    ar[l] = xr + yr;
+                    ai[l] = xi + yi;
+                    br[l] = xr - yr;
+                    bi[l] = xi - yi;
+                }
+            }
+        }
+        // Radix-4 sweep. Per block of 4m rows [A | B | C | D] and twiddle
+        // index k, the fused butterflies are
+        //   t0 = A + w1·B   t1 = A − w1·B   t2 = C + w1·D   t3 = C − w1·D
+        //   A' = t0 + w2·t2          C' = t0 − w2·t2
+        //   B' = t1 − i·w2·t3        D' = t1 + i·w2·t3
+        // (exactly radix-2 stages m then 2m of the standard flow graph).
+        for st in &self.stages {
+            let m = st.m;
+            let tw1_re = &self.tw_re[st.off..st.off + m];
+            let tw1_im = &self.tw_im[st.off..st.off + m];
+            let tw2_re = &self.tw_re[st.off + m..st.off + 2 * m];
+            let tw2_im = &self.tw_im[st.off + m..st.off + 2 * m];
+            let quarter = m * batch;
+            for (blk_re, blk_im) in
+                re.chunks_exact_mut(4 * quarter).zip(im.chunks_exact_mut(4 * quarter))
+            {
+                let (a_re, rest) = blk_re.split_at_mut(quarter);
+                let (b_re, rest) = rest.split_at_mut(quarter);
+                let (c_re, d_re) = rest.split_at_mut(quarter);
+                let (a_im, rest) = blk_im.split_at_mut(quarter);
+                let (b_im, rest) = rest.split_at_mut(quarter);
+                let (c_im, d_im) = rest.split_at_mut(quarter);
+                for k in 0..m {
+                    let (w1r, w1i) = (tw1_re[k], tw1_im[k]);
+                    let (w2r, w2i) = (tw2_re[k], tw2_im[k]);
+                    let off = k * batch;
+                    let ar = &mut a_re[off..off + batch];
+                    let ai = &mut a_im[off..off + batch];
+                    let br = &mut b_re[off..off + batch];
+                    let bi = &mut b_im[off..off + batch];
+                    let cr = &mut c_re[off..off + batch];
+                    let ci = &mut c_im[off..off + batch];
+                    let dr = &mut d_re[off..off + batch];
+                    let di = &mut d_im[off..off + batch];
+                    for l in 0..batch {
+                        let bwr = br[l] * w1r - bi[l] * w1i;
+                        let bwi = br[l] * w1i + bi[l] * w1r;
+                        let dwr = dr[l] * w1r - di[l] * w1i;
+                        let dwi = dr[l] * w1i + di[l] * w1r;
+                        let t0r = ar[l] + bwr;
+                        let t0i = ai[l] + bwi;
+                        let t1r = ar[l] - bwr;
+                        let t1i = ai[l] - bwi;
+                        let t2r = cr[l] + dwr;
+                        let t2i = ci[l] + dwi;
+                        let t3r = cr[l] - dwr;
+                        let t3i = ci[l] - dwi;
+                        let u2r = t2r * w2r - t2i * w2i;
+                        let u2i = t2r * w2i + t2i * w2r;
+                        // −i·w2·t3: compute v = w2·t3, then (−i)·v = (v.im, −v.re)
+                        let vr = t3r * w2r - t3i * w2i;
+                        let vi = t3r * w2i + t3i * w2r;
+                        ar[l] = t0r + u2r;
+                        ai[l] = t0i + u2i;
+                        cr[l] = t0r - u2r;
+                        ci[l] = t0i - u2i;
+                        br[l] = t1r + vi;
+                        bi[l] = t1i - vr;
+                        dr[l] = t1r - vi;
+                        di[l] = t1i + vr;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bluestein (arbitrary lengths), composed over the radix-4 kernel
+// ---------------------------------------------------------------------------
+
+/// Bluestein plan for arbitrary `n`: expresses the length-`n` DFT as a
+/// convolution of length `len >= 2n-1`, `len` a power of two, run on the
+/// split-plane radix-4 kernel. Every loop keeps the batch innermost, so the
+/// batched entry point vectorizes the chirp multiplies too.
+#[derive(Debug)]
+struct BluesteinPlan {
+    n: usize,
+    /// Inner power-of-two convolution length.
+    len: usize,
+    inner: Radix4Plan,
+    /// chirp[k] = e^{-i pi k^2 / n} for k in [0, n), split planes.
+    chirp_re: Vec<f64>,
+    chirp_im: Vec<f64>,
+    /// FFT of the (conjugated, wrapped) chirp kernel, length `len`.
+    kernel_re: Vec<f64>,
+    kernel_im: Vec<f64>,
+}
+
+impl BluesteinPlan {
+    fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let len = (2 * n - 1).next_power_of_two();
+        let inner = Radix4Plan::new(len);
+        let mut chirp_re = vec![0.0; n];
+        let mut chirp_im = vec![0.0; n];
+        for k in 0..n {
+            // k^2 mod 2n keeps the angle argument small & exact.
+            let kk = (k as u128 * k as u128 % (2 * n as u128)) as f64;
+            let w = C64::cis(-std::f64::consts::PI * kk / n as f64);
+            chirp_re[k] = w.re;
+            chirp_im[k] = w.im;
+        }
+        let mut kernel_re = vec![0.0; len];
+        let mut kernel_im = vec![0.0; len];
+        kernel_re[0] = chirp_re[0];
+        kernel_im[0] = -chirp_im[0];
+        for k in 1..n {
+            kernel_re[k] = chirp_re[k];
+            kernel_im[k] = -chirp_im[k];
+            kernel_re[len - k] = chirp_re[k];
+            kernel_im[len - k] = -chirp_im[k];
+        }
+        inner.process(&mut kernel_re, &mut kernel_im, 1, Dir::Forward);
+        Self { n, len, inner, chirp_re, chirp_im, kernel_re, kernel_im }
+    }
+
+    /// Batched in-place transform; `scratch` provides the length-`len·batch`
+    /// convolution planes (caller-owned so hot loops reuse them).
+    fn process_many(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        batch: usize,
+        dir: Dir,
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n * batch);
+        debug_assert_eq!(im.len(), n * batch);
+        if batch == 0 {
+            return;
+        }
+        let (are, aim) = (&mut scratch.conv_re, &mut scratch.conv_im);
+        are.clear();
+        aim.clear();
+        are.resize(self.len * batch, 0.0);
+        aim.resize(self.len * batch, 0.0);
+        // a[k] = x[k]·chirp[k] (inverse runs on conj(x): F⁻¹ = conj∘F∘conj/n).
+        let in_sign = if dir == Dir::Inverse { -1.0 } else { 1.0 };
+        for k in 0..n {
+            let (cr, ci) = (self.chirp_re[k], self.chirp_im[k]);
+            let row = k * batch;
+            for l in 0..batch {
+                let xr = re[row + l];
+                let xi = in_sign * im[row + l];
+                are[row + l] = xr * cr - xi * ci;
+                aim[row + l] = xr * ci + xi * cr;
+            }
+        }
+        self.inner.process(are, aim, batch, Dir::Forward);
+        for k in 0..self.len {
+            let (kr, ki) = (self.kernel_re[k], self.kernel_im[k]);
+            let row = k * batch;
+            for l in 0..batch {
+                let (xr, xi) = (are[row + l], aim[row + l]);
+                are[row + l] = xr * kr - xi * ki;
+                aim[row + l] = xr * ki + xi * kr;
+            }
+        }
+        self.inner.process(are, aim, batch, Dir::Inverse);
+        match dir {
+            Dir::Forward => {
+                for k in 0..n {
+                    let (cr, ci) = (self.chirp_re[k], self.chirp_im[k]);
+                    let row = k * batch;
+                    for l in 0..batch {
+                        let (xr, xi) = (are[row + l], aim[row + l]);
+                        re[row + l] = xr * cr - xi * ci;
+                        im[row + l] = xr * ci + xi * cr;
+                    }
+                }
+            }
+            Dir::Inverse => {
+                let inv = 1.0 / n as f64;
+                for k in 0..n {
+                    let (cr, ci) = (self.chirp_re[k], self.chirp_im[k]);
+                    let row = k * batch;
+                    for l in 0..batch {
+                        let (xr, xi) = (are[row + l], aim[row + l]);
+                        re[row + l] = (xr * cr - xi * ci) * inv;
+                        im[row + l] = -(xr * ci + xi * cr) * inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public plan type
+// ---------------------------------------------------------------------------
+
+/// A plan for one transform length.
+#[derive(Debug)]
+enum PlanKind {
+    Radix4(Radix4Plan),
+    Bluestein(BluesteinPlan),
+}
+
+/// Shareable FFT plan for a fixed length.
+#[derive(Debug)]
+pub struct Plan {
+    kind: PlanKind,
+    pub n: usize,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Self {
+        let kind = if n.is_power_of_two() {
+            PlanKind::Radix4(Radix4Plan::new(n))
+        } else {
+            PlanKind::Bluestein(BluesteinPlan::new(n))
+        };
+        Self { kind, n }
+    }
+
+    /// In-place transform. `data.len()` must equal `self.n`.
+    pub fn process(&self, data: &mut [C64], dir: Dir) {
+        let mut scratch = FftScratch::new();
+        self.process_scratch(data, dir, &mut scratch);
+    }
+
+    /// In-place transform of interleaved complex data, staged through the
+    /// caller-owned split-plane scratch. Zero-allocation when `scratch` has
+    /// capacity.
+    pub fn process_scratch(&self, data: &mut [C64], dir: Dir, scratch: &mut FftScratch) {
+        assert_eq!(data.len(), self.n, "FFT plan length mismatch");
+        let mut re = std::mem::take(&mut scratch.re);
+        let mut im = std::mem::take(&mut scratch.im);
+        re.clear();
+        im.clear();
+        re.extend(data.iter().map(|z| z.re));
+        im.extend(data.iter().map(|z| z.im));
+        self.process_many(&mut re, &mut im, 1, dir, scratch);
+        for ((z, r), i) in data.iter_mut().zip(&re).zip(&im) {
+            z.re = *r;
+            z.im = *i;
+        }
+        scratch.re = re;
+        scratch.im = im;
+    }
+
+    /// Batched in-place transform of `batch` same-length signals on split
+    /// re/im planes, stored with the frequency index major and the **batch
+    /// as the innermost (SIMD) axis**: element `k` of signal `b` lives at
+    /// `re[k*batch + b]`. Twiddles are loaded once per butterfly row and
+    /// applied across the whole batch, so one blocked pass transforms all
+    /// signals. `scratch` is only touched for Bluestein lengths.
+    pub fn process_many(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        batch: usize,
+        dir: Dir,
+        scratch: &mut FftScratch,
+    ) {
+        assert_eq!(re.len(), self.n * batch, "FFT plan length mismatch");
+        assert_eq!(im.len(), self.n * batch, "FFT plan length mismatch");
+        match &self.kind {
+            PlanKind::Radix4(p) => p.process(re, im, batch, dir),
+            PlanKind::Bluestein(p) => p.process_many(re, im, batch, dir, scratch),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar radix-2 oracle (the pre-split-radix kernel, kept for conformance)
+// ---------------------------------------------------------------------------
+
+/// The scalar, interleaved-complex radix-2 kernel that predates the
+/// split-plane radix-4 core — kept as an independent oracle for the kernel
+/// conformance tests and as the §Perf baseline the split-radix speedup is
+/// measured against. Not used by [`Plan`].
+#[derive(Debug)]
+pub struct ScalarRadix2Plan {
     n: usize,
     /// Bit-reversal permutation.
     rev: Vec<u32>,
@@ -27,8 +446,8 @@ struct Radix2Plan {
     twiddles: Vec<C64>,
 }
 
-impl Radix2Plan {
-    fn new(n: usize) -> Self {
+impl ScalarRadix2Plan {
+    pub fn new(n: usize) -> Self {
         assert!(n.is_power_of_two() && n > 0);
         let bits = n.trailing_zeros();
         let mut rev = vec![0u32; n];
@@ -51,14 +470,12 @@ impl Radix2Plan {
         Self { n, rev, twiddles }
     }
 
-    fn process(&self, data: &mut [C64], dir: Dir) {
+    pub fn process(&self, data: &mut [C64], dir: Dir) {
         let n = self.n;
-        debug_assert_eq!(data.len(), n);
+        assert_eq!(data.len(), n, "FFT plan length mismatch");
         if n == 1 {
             return;
         }
-        // Inverse via conjugation: F⁻¹(x) = conj(F(conj(x)))/n — keeps the
-        // butterfly loop branch-free (§Perf).
         if dir == Dir::Inverse {
             for x in data.iter_mut() {
                 x.im = -x.im;
@@ -127,123 +544,9 @@ impl Radix2Plan {
     }
 }
 
-/// Bluestein plan for arbitrary `n`: expresses the length-`n` DFT as a
-/// convolution of length `m >= 2n-1`, `m` a power of two.
-#[derive(Debug)]
-struct BluesteinPlan {
-    n: usize,
-    m: usize,
-    inner: Radix2Plan,
-    /// chirp[k] = e^{-i pi k^2 / n} for k in [0, n)
-    chirp: Vec<C64>,
-    /// FFT of the (conjugated, wrapped) chirp kernel, length m.
-    kernel_fft: Vec<C64>,
-}
-
-impl BluesteinPlan {
-    fn new(n: usize) -> Self {
-        assert!(n > 0);
-        let m = (2 * n - 1).next_power_of_two();
-        let inner = Radix2Plan::new(m);
-        let mut chirp = vec![ZERO; n];
-        for k in 0..n {
-            // k^2 mod 2n keeps the angle argument small & exact.
-            let kk = (k as u128 * k as u128 % (2 * n as u128)) as f64;
-            chirp[k] = C64::cis(-std::f64::consts::PI * kk / n as f64);
-        }
-        let mut kernel = vec![ZERO; m];
-        kernel[0] = chirp[0].conj();
-        for k in 1..n {
-            kernel[k] = chirp[k].conj();
-            kernel[m - k] = chirp[k].conj();
-        }
-        inner.process(&mut kernel, Dir::Forward);
-        Self { n, m, inner, chirp, kernel_fft: kernel }
-    }
-
-    /// `scratch` is the length-`m` convolution buffer — caller-owned so hot
-    /// loops (via [`super::workspace::FftWorkspace`]) reuse it instead of
-    /// allocating per transform.
-    fn process_scratch(&self, data: &mut [C64], dir: Dir, scratch: &mut Vec<C64>) {
-        let n = self.n;
-        debug_assert_eq!(data.len(), n);
-        scratch.clear();
-        scratch.resize(self.m, ZERO);
-        let a = scratch;
-        match dir {
-            Dir::Forward => {
-                for k in 0..n {
-                    a[k] = data[k] * self.chirp[k];
-                }
-            }
-            Dir::Inverse => {
-                // inverse DFT = conj(forward DFT of conj(x))/n
-                for k in 0..n {
-                    a[k] = data[k].conj() * self.chirp[k];
-                }
-            }
-        }
-        self.inner.process(a, Dir::Forward);
-        for (x, k) in a.iter_mut().zip(self.kernel_fft.iter()) {
-            *x = *x * *k;
-        }
-        self.inner.process(a, Dir::Inverse);
-        match dir {
-            Dir::Forward => {
-                for k in 0..n {
-                    data[k] = a[k] * self.chirp[k];
-                }
-            }
-            Dir::Inverse => {
-                let inv = 1.0 / n as f64;
-                for k in 0..n {
-                    data[k] = (a[k] * self.chirp[k]).conj().scale(inv);
-                }
-            }
-        }
-    }
-}
-
-/// A plan for one transform length.
-#[derive(Debug)]
-enum PlanKind {
-    Radix2(Radix2Plan),
-    Bluestein(BluesteinPlan),
-}
-
-/// Shareable FFT plan for a fixed length.
-#[derive(Debug)]
-pub struct Plan {
-    kind: PlanKind,
-    pub n: usize,
-}
-
-impl Plan {
-    pub fn new(n: usize) -> Self {
-        let kind = if n.is_power_of_two() {
-            PlanKind::Radix2(Radix2Plan::new(n))
-        } else {
-            PlanKind::Bluestein(BluesteinPlan::new(n))
-        };
-        Self { kind, n }
-    }
-
-    /// In-place transform. `data.len()` must equal `self.n`.
-    pub fn process(&self, data: &mut [C64], dir: Dir) {
-        let mut scratch = Vec::new();
-        self.process_scratch(data, dir, &mut scratch);
-    }
-
-    /// In-place transform with caller-owned Bluestein scratch (unused for
-    /// power-of-two lengths). Zero-allocation when `scratch` has capacity.
-    pub fn process_scratch(&self, data: &mut [C64], dir: Dir, scratch: &mut Vec<C64>) {
-        assert_eq!(data.len(), self.n, "FFT plan length mismatch");
-        match &self.kind {
-            PlanKind::Radix2(p) => p.process(data, dir),
-            PlanKind::Bluestein(p) => p.process_scratch(data, dir, scratch),
-        }
-    }
-}
+// ---------------------------------------------------------------------------
+// Real-transform recombination twiddles
+// ---------------------------------------------------------------------------
 
 /// Recombination twiddles for the packed real-input transform of even
 /// length `n = 2m`: `twiddles[k] = e^{-iπk/m}` for `k ∈ [0, m)`. The forward
@@ -268,6 +571,10 @@ impl RealPlan {
         Self { n, twiddles }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Planner (process-wide plan cache)
+// ---------------------------------------------------------------------------
 
 /// Process-wide plan cache. The FCS hot loop transforms many vectors of the
 /// same length; building twiddles once matters (§Perf).
@@ -395,14 +702,29 @@ mod tests {
     }
 
     #[test]
-    fn radix2_matches_naive() {
+    fn radix4_matches_naive() {
         let mut rng = Rng::seed_from_u64(1);
-        for &n in &[1usize, 2, 4, 8, 64, 256] {
+        for &n in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
             let x = rand_signal(&mut rng, n);
             let mut y = x.clone();
             fft_inplace(&mut y);
             let z = dft_naive(&x, Dir::Forward);
             assert!(max_err(&y, &z) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn radix4_matches_scalar_radix2_oracle() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &n in &[2usize, 4, 8, 64, 512, 1024] {
+            let x = rand_signal(&mut rng, n);
+            for dir in [Dir::Forward, Dir::Inverse] {
+                let mut y = x.clone();
+                Plan::new(n).process(&mut y, dir);
+                let mut z = x.clone();
+                ScalarRadix2Plan::new(n).process(&mut z, dir);
+                assert!(max_err(&y, &z) < 1e-10 * (n as f64), "n={n} dir={dir:?}");
+            }
         }
     }
 
@@ -415,6 +737,33 @@ mod tests {
             fft_inplace(&mut y);
             let z = dft_naive(&x, Dir::Forward);
             assert!(max_err(&y, &z) < 1e-8 * (n as f64), "n={n} err={}", max_err(&y, &z));
+        }
+    }
+
+    #[test]
+    fn process_many_matches_single_lane_process() {
+        let mut rng = Rng::seed_from_u64(12);
+        for &(n, batch) in &[(8usize, 3usize), (16, 1), (21, 4), (64, 5), (100, 2)] {
+            let lanes: Vec<Vec<C64>> = (0..batch).map(|_| rand_signal(&mut rng, n)).collect();
+            let mut re = vec![0.0; n * batch];
+            let mut im = vec![0.0; n * batch];
+            for (b, lane) in lanes.iter().enumerate() {
+                for (k, z) in lane.iter().enumerate() {
+                    re[k * batch + b] = z.re;
+                    im[k * batch + b] = z.im;
+                }
+            }
+            let plan = Plan::new(n);
+            let mut scratch = FftScratch::new();
+            plan.process_many(&mut re, &mut im, batch, Dir::Forward, &mut scratch);
+            for (b, lane) in lanes.iter().enumerate() {
+                let mut single = lane.clone();
+                plan.process(&mut single, Dir::Forward);
+                for (k, z) in single.iter().enumerate() {
+                    let d = (re[k * batch + b] - z.re).abs() + (im[k * batch + b] - z.im).abs();
+                    assert!(d < 1e-10 * n as f64, "n={n} batch={batch} lane={b} k={k}");
+                }
+            }
         }
     }
 

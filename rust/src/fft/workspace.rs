@@ -6,11 +6,15 @@
 //! Also home of the packed **real-input FFT**: a length-`n` transform of a
 //! real signal runs as one length-`n/2` complex transform (Hermitian
 //! symmetry), halving butterfly work for every convolution in the crate.
-//! `fft_real_into` / `inverse_real_into` are the workspace-based primitives;
-//! the allocating wrappers in [`super::plan`] route through them.
+//! `fft_real_into` / `inverse_real_into` are the single-signal primitives;
+//! `fft_real_many_into` / `inverse_real_many_into` transform a strided batch
+//! of same-length signals in one blocked pass over the split-plane kernel
+//! (twiddles loaded once per stage, batch innermost — the rank-R spectral
+//! paths route every mode spectrum of a rank batch through one such call).
+//! The allocating wrappers in [`super::plan`] route through them.
 
 use super::complex::{C64, ZERO};
-use super::plan::{global_planner, Dir, Plan, RealPlan};
+use super::plan::{global_planner, Dir, FftScratch, Plan, RealPlan};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -27,9 +31,9 @@ pub struct FftWorkspace {
     real_plans: HashMap<usize, Arc<RealPlan>>,
     c64_pool: Vec<Vec<C64>>,
     f64_pool: Vec<Vec<f64>>,
-    /// Scratch for Bluestein's inner convolution, kept out of the pools so a
-    /// transform can run while rented buffers are outstanding.
-    bluestein: Vec<C64>,
+    /// Split-plane staging + Bluestein convolution scratch, kept out of the
+    /// pools so a transform can run while rented buffers are outstanding.
+    scratch: FftScratch,
 }
 
 impl FftWorkspace {
@@ -59,12 +63,29 @@ impl FftWorkspace {
         p
     }
 
-    /// In-place transform using cached plans and reusable Bluestein scratch.
+    /// In-place transform using cached plans and reusable scratch planes.
     pub fn process(&mut self, data: &mut [C64], dir: Dir) {
         let plan = self.plan(data.len());
-        let mut scratch = std::mem::take(&mut self.bluestein);
+        let mut scratch = std::mem::take(&mut self.scratch);
         plan.process_scratch(data, dir, &mut scratch);
-        self.bluestein = scratch;
+        self.scratch = scratch;
+    }
+
+    /// Batched in-place transform on split re/im planes (lane-major, batch
+    /// innermost — see [`Plan::process_many`]) using cached plans and
+    /// reusable Bluestein scratch.
+    pub fn process_many(
+        &mut self,
+        re: &mut [f64],
+        im: &mut [f64],
+        n: usize,
+        batch: usize,
+        dir: Dir,
+    ) {
+        let plan = self.plan(n);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        plan.process_many(re, im, batch, dir, &mut scratch);
+        self.scratch = scratch;
     }
 
     /// Rent a zeroed complex buffer of length `n`.
@@ -160,6 +181,98 @@ pub fn fft_real_into(x: &[f64], n: usize, ws: &mut FftWorkspace, out: &mut Vec<C
     ws.give_c64(z);
 }
 
+/// Batched forward real FFT: `batch` signals packed **signal-major** in `xs`
+/// at uniform `stride` (`xs[b*stride..(b+1)*stride]` is signal `b`,
+/// zero-padded within its slot by the caller), each transformed at length
+/// `n ≥ stride`. The full Hermitian spectra are written **lane-major** into
+/// the split planes: `out_re[k*batch + b] + i·out_im[k*batch + b]` is
+/// `X_b[k]` — the layout the spectral-product consumers iterate (fixed `k`,
+/// batch innermost) and the layout [`inverse_real_many_into`] accepts back.
+///
+/// Even `n` runs one batched length-`n/2` complex transform (Hermitian
+/// packing, exactly as [`fft_real_into`]); odd `n` falls back to the full
+/// batched complex transform. Zero heap allocations in steady state.
+pub fn fft_real_many_into(
+    xs: &[f64],
+    stride: usize,
+    batch: usize,
+    n: usize,
+    ws: &mut FftWorkspace,
+    out_re: &mut Vec<f64>,
+    out_im: &mut Vec<f64>,
+) {
+    assert_eq!(xs.len(), stride * batch, "fft_real_many_into: xs/stride/batch mismatch");
+    assert!(
+        stride <= n,
+        "fft_real_many_into: signal stride longer than transform ({stride} > {n})"
+    );
+    out_re.clear();
+    out_im.clear();
+    out_re.resize(n * batch, 0.0);
+    out_im.resize(n * batch, 0.0);
+    if n == 0 || batch == 0 {
+        return;
+    }
+    if n % 2 != 0 {
+        // Odd length: full complex transform directly in the output planes.
+        for (b, sig) in xs.chunks_exact(stride).enumerate() {
+            for (j, &v) in sig.iter().enumerate() {
+                out_re[j * batch + b] = v;
+            }
+        }
+        ws.process_many(out_re, out_im, n, batch, Dir::Forward);
+        return;
+    }
+    let m = n / 2;
+    let rp = ws.real_plan(n);
+    let mut zre = ws.take_f64(m * batch);
+    let mut zim = ws.take_f64(m * batch);
+    // Pack z[j] = x[2j] + i·x[2j+1] per lane (slot tails beyond `stride`
+    // stay zero from the rental).
+    for (b, sig) in xs.chunks_exact(stride).enumerate() {
+        let mut pairs = sig.chunks_exact(2);
+        for (j, pair) in pairs.by_ref().enumerate() {
+            zre[j * batch + b] = pair[0];
+            zim[j * batch + b] = pair[1];
+        }
+        if let [last] = pairs.remainder() {
+            zre[(stride / 2) * batch + b] = *last;
+        }
+    }
+    ws.process_many(&mut zre, &mut zim, m, batch, Dir::Forward);
+    // Recombine — same identity as fft_real_into, batch innermost.
+    for k in 0..m {
+        let w = rp.twiddles[k];
+        let krow = k * batch;
+        let mrow = ((m - k) % m) * batch;
+        for l in 0..batch {
+            let (zkr, zki) = (zre[krow + l], zim[krow + l]);
+            let (zmr, zmi) = (zre[mrow + l], -zim[mrow + l]);
+            let er = 0.5 * (zkr + zmr);
+            let ei = 0.5 * (zki + zmi);
+            // o = (zk − zmk)·(−i/2)
+            let odr = 0.5 * (zki - zmi);
+            let odi = -0.5 * (zkr - zmr);
+            out_re[krow + l] = er + (w.re * odr - w.im * odi);
+            out_im[krow + l] = ei + (w.re * odi + w.im * odr);
+        }
+    }
+    // X[m] = Re(Z[0]) − Im(Z[0]) (real); the mirror below fills k > m.
+    let mrow = m * batch;
+    for l in 0..batch {
+        out_re[mrow + l] = zre[l] - zim[l];
+    }
+    for k in 1..m {
+        let (src, dst) = (k * batch, (n - k) * batch);
+        for l in 0..batch {
+            out_re[dst + l] = out_re[src + l];
+            out_im[dst + l] = -out_im[src + l];
+        }
+    }
+    ws.give_f64(zim);
+    ws.give_f64(zre);
+}
+
 /// Inverse FFT of a Hermitian spectrum, returning the real signal in `out`.
 /// `spec` is consumed as scratch (its contents are destroyed).
 ///
@@ -219,6 +332,92 @@ pub fn inverse_real_into(spec: &mut [C64], ws: &mut FftWorkspace, out: &mut Vec<
     ws.give_c64(z);
 }
 
+/// Batched inverse of [`fft_real_many_into`]: `batch` Hermitian spectra in
+/// **lane-major** split planes (consumed as scratch), real signals written
+/// **signal-major** into `out` (`out[b*n..(b+1)*n]` is signal `b` — the
+/// layout per-repetition consumers slice apart). Debug builds assert each
+/// lane's spectrum is numerically Hermitian, as [`inverse_real_into`] does.
+pub fn inverse_real_many_into(
+    spec_re: &mut [f64],
+    spec_im: &mut [f64],
+    batch: usize,
+    ws: &mut FftWorkspace,
+    out: &mut Vec<f64>,
+) {
+    assert!(batch > 0, "inverse_real_many_into: empty batch");
+    assert_eq!(spec_re.len(), spec_im.len(), "inverse_real_many_into: plane length mismatch");
+    assert_eq!(spec_re.len() % batch, 0, "inverse_real_many_into: planes not a lane multiple");
+    let n = spec_re.len() / batch;
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    #[cfg(debug_assertions)]
+    for l in 0..batch {
+        let mut scale2 = 1.0f64;
+        for k in 0..n {
+            let (r, i) = (spec_re[k * batch + l], spec_im[k * batch + l]);
+            scale2 = scale2.max(r * r + i * i);
+        }
+        for k in 0..n {
+            let kc = (n - k) % n;
+            let dr = spec_re[k * batch + l] - spec_re[kc * batch + l];
+            let di = spec_im[k * batch + l] + spec_im[kc * batch + l];
+            let resid2 = dr * dr + di * di;
+            debug_assert!(
+                resid2 <= 1e-14 * scale2,
+                "inverse_real_many_into: non-Hermitian spectrum in lane {l} at k={k}/{n} \
+                 (|residue|²={resid2:.3e}, max|X|²={scale2:.3e})"
+            );
+        }
+    }
+    if n % 2 != 0 {
+        ws.process_many(spec_re, spec_im, n, batch, Dir::Inverse);
+        out.resize(n * batch, 0.0);
+        for j in 0..n {
+            let row = j * batch;
+            for l in 0..batch {
+                out[l * n + j] = spec_re[row + l];
+            }
+        }
+        return;
+    }
+    let m = n / 2;
+    let rp = ws.real_plan(n);
+    let mut zre = ws.take_f64(m * batch);
+    let mut zim = ws.take_f64(m * batch);
+    for k in 0..m {
+        let w = rp.twiddles[k];
+        let krow = k * batch;
+        let hrow = (k + m) * batch;
+        for l in 0..batch {
+            let (ar, ai) = (spec_re[krow + l], spec_im[krow + l]);
+            let (br, bi) = (spec_re[hrow + l], spec_im[hrow + l]);
+            let er = 0.5 * (ar + br);
+            let ei = 0.5 * (ai + bi);
+            // o = ((a − b)/2)·conj(w)
+            let hr = 0.5 * (ar - br);
+            let hi = 0.5 * (ai - bi);
+            let our = hr * w.re + hi * w.im;
+            let oui = hi * w.re - hr * w.im;
+            // z[k] = E[k] + i·O[k]
+            zre[krow + l] = er - oui;
+            zim[krow + l] = ei + our;
+        }
+    }
+    ws.process_many(&mut zre, &mut zim, m, batch, Dir::Inverse);
+    out.resize(n * batch, 0.0);
+    for j in 0..m {
+        let row = j * batch;
+        for l in 0..batch {
+            out[l * n + 2 * j] = zre[row + l];
+            out[l * n + 2 * j + 1] = zim[row + l];
+        }
+    }
+    ws.give_f64(zim);
+    ws.give_f64(zre);
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::plan::{dft_naive, fft_real, ifft_to_real};
@@ -275,6 +474,44 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0, f64::max);
             assert!(err < 1e-10 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn batched_real_transforms_match_single_lane() {
+        // fft_real_many_into ≡ a loop of fft_real_into, and the batched
+        // inverse returns each lane's signal — for even, odd, and padded
+        // lengths (the qcheck property lives in tests/fft_kernel.rs; this is
+        // the in-module smoke check).
+        let mut rng = Rng::seed_from_u64(24);
+        let mut ws = FftWorkspace::new();
+        for &(stride, n, batch) in &[(8usize, 8usize, 3usize), (5, 12, 2), (7, 7, 4), (9, 16, 1)] {
+            let xs: Vec<f64> = rng.normal_vec(stride * batch);
+            let mut sre = Vec::new();
+            let mut sim = Vec::new();
+            fft_real_many_into(&xs, stride, batch, n, &mut ws, &mut sre, &mut sim);
+            let mut single = Vec::new();
+            for b in 0..batch {
+                fft_real_into(&xs[b * stride..(b + 1) * stride], n, &mut ws, &mut single);
+                for k in 0..n {
+                    let dr = (sre[k * batch + b] - single[k].re).abs();
+                    let di = (sim[k * batch + b] - single[k].im).abs();
+                    assert!(dr + di < 1e-10 * n as f64, "stride={stride} n={n} b={b} k={k}");
+                }
+            }
+            let mut back = Vec::new();
+            inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+            for b in 0..batch {
+                for j in 0..stride {
+                    assert!(
+                        (back[b * n + j] - xs[b * stride + j]).abs() < 1e-10 * n as f64,
+                        "roundtrip stride={stride} n={n} b={b} j={j}"
+                    );
+                }
+                for j in stride..n {
+                    assert!(back[b * n + j].abs() < 1e-10 * n as f64, "pad residue b={b} j={j}");
+                }
+            }
         }
     }
 

@@ -18,10 +18,41 @@
 
 use super::cs::CountSketch;
 use crate::fft::complex::ZERO;
-use crate::fft::{self, fft_real_into, C64, FftWorkspace};
+use crate::fft::{self, fft_real_many_into, C64, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::linalg::Matrix;
 use crate::tensor::{CpTensor, Tensor};
+
+/// Upper bound on simultaneous lanes in the batched spectral transforms:
+/// wide enough to keep the batch (innermost SIMD) axis full with headroom,
+/// small enough that the lane-major `fft_len × lanes` planes stay cache- and
+/// pool-friendly at the largest practical transform lengths.
+pub(crate) const MAX_FFT_LANES: usize = 16;
+
+/// Multiply the complex product of `count` consecutive lanes
+/// `(sre, sim)[s..s+count]` of one lane-major frequency row into the
+/// accumulator `(pr, pi)`; with `conj` each lane enters conjugated (spectral
+/// correlation rather than convolution). The single home of the batched
+/// pointwise-product inner loop every spectral fold runs.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mul_lane_run(
+    sre: &[f64],
+    sim: &[f64],
+    s: usize,
+    count: usize,
+    conj: bool,
+    pr: &mut f64,
+    pi: &mut f64,
+) {
+    for d in 0..count {
+        let qr = sre[s + d];
+        let qi = if conj { -sim[s + d] } else { sim[s + d] };
+        let t = *pr * qr - *pi * qi;
+        *pi = *pr * qi + *pi * qr;
+        *pr = t;
+    }
+}
 
 /// Accumulate the sketch of a dense tensor into `out`.
 ///
@@ -160,83 +191,57 @@ impl<'a> SpectralSketchCore<'a> {
         Self::linear(modes, j_tilde)
     }
 
-    /// The shared mode-product loop: fold `F(CS_d(get(d)))` over every mode
-    /// `d ≠ skip` into `acc` (length `fft_len`). With `fresh`, the first
-    /// factor *overwrites* `acc` (no all-ones priming); otherwise `acc`
-    /// arrives seeded (e.g. with a cached `F(st)`) and every factor
-    /// multiplies in — conjugated when `conj` (spectral correlation). All
-    /// scratch is rented from `ws`: zero allocations in steady state.
-    fn fold_spectra_into<'v>(
-        &self,
-        get: impl Fn(usize) -> &'v [f64],
-        skip: Option<usize>,
-        conj: bool,
-        fresh: bool,
-        ws: &mut FftWorkspace,
-        acc: &mut Vec<C64>,
-    ) {
-        let max_j = self.modes.iter().map(|m| m.range()).max().unwrap_or(0);
-        let mut csbuf = ws.take_f64(max_j);
-        let mut fs = ws.take_c64(self.fft_len);
-        self.fold_spectra_with(get, skip, conj, fresh, ws, &mut csbuf, &mut fs, acc);
-        ws.give_c64(fs);
-        ws.give_f64(csbuf);
+    /// Largest per-mode sketch range — the uniform slot stride the batched
+    /// transforms pack mode sketches at (the estimator's cross-repetition
+    /// packing reuses it, so this is the single home of the stride rule).
+    /// Always `≤ fft_len`: for TS every range *is* `J = fft_len`; for FCS
+    /// `J̃ = Σ J_d − N + 1 ≥ max_d J_d` and `fft_len = next_pow2(J̃)`.
+    #[inline]
+    pub(crate) fn mode_stride(&self) -> usize {
+        self.modes.iter().map(|m| m.range()).max().unwrap_or(0)
     }
 
-    /// [`Self::fold_spectra_into`] with caller-owned `csbuf`/`fs` scratch
-    /// (`csbuf.len() ≥ max mode range`; `fs` is overwritten), so per-rank
-    /// loops hoist the rent-and-zero out of the hot path instead of paying
-    /// an O(fft_len) memset per rank.
-    #[allow(clippy::too_many_arguments)]
-    fn fold_spectra_with<'v>(
-        &self,
-        get: impl Fn(usize) -> &'v [f64],
-        skip: Option<usize>,
-        conj: bool,
-        fresh: bool,
-        ws: &mut FftWorkspace,
-        csbuf: &mut [f64],
-        fs: &mut Vec<C64>,
-        acc: &mut Vec<C64>,
-    ) {
-        debug_assert!(!(fresh && conj), "fresh start would skip conjugating the first factor");
-        let n = self.fft_len;
-        let mut first = fresh;
-        for (d, cs) in self.modes.iter().enumerate() {
-            if Some(d) == skip {
-                continue;
-            }
-            let jd = cs.range();
-            cs.apply_into(get(d), &mut csbuf[..jd]);
-            if first {
-                fft_real_into(&csbuf[..jd], n, ws, acc);
-                first = false;
-            } else {
-                fft_real_into(&csbuf[..jd], n, ws, fs);
-                if conj {
-                    for (x, y) in acc.iter_mut().zip(fs.iter()) {
-                        *x = *x * y.conj();
-                    }
-                } else {
-                    for (x, y) in acc.iter_mut().zip(fs.iter()) {
-                        *x = *x * *y;
-                    }
-                }
-            }
-        }
-    }
-
-    /// Write `Π_d F(CS_d(vs[d]))` at `fft_len` points into `out`.
+    /// Write `Π_d F(CS_d(vs[d]))` at `fft_len` points into `out`. All N mode
+    /// sketches are transformed by **one** batched call (`fft_real_many_into`
+    /// with the modes as lanes) and folded pointwise, batch innermost.
     pub fn rank1_spectrum_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<C64>) {
         // Hard assert (matching the pre-refactor inherent methods): a wrong
         // arity must fail loudly, not silently drop the extra vector in
         // release builds.
         assert_eq!(self.modes.len(), vs.len(), "rank-1 sketch arity mismatch");
-        self.fold_spectra_into(|d| vs[d], None, false, true, ws, out);
+        let n = self.fft_len;
+        let nm = self.modes.len();
+        let stride = self.mode_stride();
+        let mut xs = ws.take_f64(nm * stride);
+        for (d, cs) in self.modes.iter().enumerate() {
+            let jd = cs.range();
+            cs.apply_into(vs[d], &mut xs[d * stride..d * stride + jd]);
+        }
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        fft_real_many_into(&xs, stride, nm, n, ws, &mut sre, &mut sim);
+        out.clear();
+        out.resize(n, ZERO);
+        for (k, o) in out.iter_mut().enumerate() {
+            let row = k * nm;
+            let mut pr = sre[row];
+            let mut pi = sim[row];
+            mul_lane_run(&sre, &sim, row + 1, nm - 1, false, &mut pr, &mut pi);
+            o.re = pr;
+            o.im = pi;
+        }
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
     }
 
     /// Accumulate `Σ_{r ∈ ranks} λ_r · Π_d F(CS_d(U_d[:, r]))` into `acc`
     /// (length `fft_len`). The caller inverts once at the end — R IFFTs → 1.
+    ///
+    /// Ranks are processed in chunks of whole ranks, all `chunk·N` mode
+    /// sketches of a chunk going through **one** batched forward transform
+    /// (instead of R·N single-plan dispatches); the fold below then reads
+    /// each rank's N spectra side by side in the lane-major planes.
     pub fn accumulate_cp_spectra(
         &self,
         factors: &[Matrix],
@@ -247,32 +252,47 @@ impl<'a> SpectralSketchCore<'a> {
     ) {
         debug_assert_eq!(acc.len(), self.fft_len);
         debug_assert_eq!(self.modes.len(), factors.len());
-        // Scratch hoisted out of the rank loop: renting (and zero-filling)
-        // per rank would add R redundant O(fft_len) memsets to the hottest
-        // CP path.
-        let max_j = self.modes.iter().map(|m| m.range()).max().unwrap_or(0);
-        let mut csbuf = ws.take_f64(max_j);
-        let mut fs = ws.take_c64(self.fft_len);
-        let mut spec = ws.take_c64(self.fft_len);
-        for r in ranks {
-            self.fold_spectra_with(
-                |d| factors[d].col(r),
-                None,
-                false,
-                true,
-                ws,
-                &mut csbuf,
-                &mut fs,
-                &mut spec,
-            );
-            let lr = lambda[r];
-            for (a, s) in acc.iter_mut().zip(spec.iter()) {
-                *a += s.scale(lr);
-            }
+        if self.modes.is_empty() {
+            return;
         }
-        ws.give_c64(spec);
-        ws.give_c64(fs);
-        ws.give_f64(csbuf);
+        let n = self.fft_len;
+        let nm = self.modes.len();
+        let stride = self.mode_stride();
+        let ranks_per = (MAX_FFT_LANES / nm).max(1);
+        // Slot tails beyond each mode's J_d stay zero: the rental arrives
+        // zeroed and every chunk rewrites the same (lane-slot, J_d) layout.
+        let mut xs = ws.take_f64(ranks_per * nm * stride);
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        let mut r0 = ranks.start;
+        while r0 < ranks.end {
+            let rc = (ranks.end - r0).min(ranks_per);
+            let lanes = rc * nm;
+            for ri in 0..rc {
+                for (d, cs) in self.modes.iter().enumerate() {
+                    let jd = cs.range();
+                    let slot = (ri * nm + d) * stride;
+                    cs.apply_into(factors[d].col(r0 + ri), &mut xs[slot..slot + jd]);
+                }
+            }
+            fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            for (k, a) in acc.iter_mut().enumerate() {
+                let row = k * lanes;
+                for ri in 0..rc {
+                    let s = row + ri * nm;
+                    let mut pr = sre[s];
+                    let mut pi = sim[s];
+                    mul_lane_run(&sre, &sim, s + 1, nm - 1, false, &mut pr, &mut pi);
+                    let lr = lambda[r0 + ri];
+                    a.re += lr * pr;
+                    a.im += lr * pi;
+                }
+            }
+            r0 += rc;
+        }
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
     }
 
     /// Rank-parallel variant: chunks the CP ranks over `par_map` worker
@@ -370,9 +390,36 @@ impl<'a> SpectralSketchCore<'a> {
         out: &mut Vec<f64>,
     ) {
         debug_assert_eq!(st_fft.len(), self.fft_len);
-        let mut fz = ws.take_c64(self.fft_len);
-        fz.copy_from_slice(st_fft);
-        self.fold_spectra_into(|d| vs[d], Some(mode), true, false, ws, &mut fz);
+        let n = self.fft_len;
+        let nm = self.modes.len();
+        let lanes = nm - 1;
+        let stride = self.mode_stride();
+        // One batched forward transform for the N−1 contracted-mode sketches.
+        let mut xs = ws.take_f64(lanes * stride);
+        let mut lane = 0usize;
+        for (d, cs) in self.modes.iter().enumerate() {
+            if d == mode {
+                continue;
+            }
+            let jd = cs.range();
+            cs.apply_into(vs[d], &mut xs[lane * stride..lane * stride + jd]);
+            lane += 1;
+        }
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        fft_real_many_into(&xs, stride, lanes, n, ws, &mut sre, &mut sim);
+        let mut fz = ws.take_c64(n);
+        for (k, z) in fz.iter_mut().enumerate() {
+            let mut pr = st_fft[k].re;
+            let mut pi = st_fft[k].im;
+            // conjugated factors: spectral correlation, not convolution
+            mul_lane_run(&sre, &sim, k * lanes, lanes, true, &mut pr, &mut pi);
+            z.re = pr;
+            z.im = pi;
+        }
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
         let mut z = ws.take_f64(self.fft_len);
         fft::inverse_real_into(&mut fz, ws, &mut z);
         let cs_m = &self.modes[mode];

@@ -35,26 +35,41 @@ impl CountSketch {
 
     /// Apply, accumulating into a caller-provided buffer (hot path: avoids
     /// re-allocation inside power iterations).
+    ///
+    /// Dense inputs take the scatter unconditionally — the old `xi != 0.0`
+    /// skip-branch made the loop data-dependent (defeating vectorization and
+    /// mispredicting on dense signals) to save an add of `±0.0`. Sparsity is
+    /// [`Self::apply_sparse`]'s job.
     pub fn apply_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(out.len(), self.range());
         out.fill(0.0);
         let h = &self.table.h;
         let s = &self.table.s;
         for (i, &xi) in x.iter().enumerate() {
-            if xi != 0.0 {
-                // s as i8 → f64 multiply compiles to a select; branch-free.
-                out[h[i] as usize] += (s[i] as f64) * xi;
-            }
+            // s as i8 → f64 multiply compiles to a select; branch-free.
+            out[h[i] as usize] += (s[i] as f64) * xi;
         }
     }
 
     /// Apply to a sparse vector given as (index, value) pairs.
     pub fn apply_sparse(&self, entries: &[(usize, f64)]) -> Vec<f64> {
         let mut out = vec![0.0; self.range()];
+        self.apply_sparse_into(entries, &mut out);
+        out
+    }
+
+    /// Buffer-reusing variant of [`Self::apply_sparse`]. Asserts every entry
+    /// index is in-domain, matching the length assert of
+    /// [`Self::apply`]/[`Self::apply_into`] — an out-of-range index would
+    /// otherwise read a hash slot belonging to nothing.
+    pub fn apply_sparse_into(&self, entries: &[(usize, f64)], out: &mut [f64]) {
+        assert_eq!(out.len(), self.range());
+        out.fill(0.0);
+        let domain = self.domain();
         for &(i, v) in entries {
+            assert!(i < domain, "CS domain mismatch: sparse index {i} ≥ {domain}");
             out[self.table.h(i)] += self.table.s(i) * v;
         }
-        out
     }
 
     /// Column-wise application to a matrix (`CS_n(U^{(n)})` in Eqs. 3/5/8).
@@ -163,6 +178,24 @@ mod tests {
         let dense = cs.apply(&x);
         let sparse = cs.apply_sparse(&[(3, 1.5), (77, -2.0)]);
         assert_eq!(dense, sparse);
+    }
+
+    #[test]
+    fn sparse_into_reuses_buffer_and_matches() {
+        let mut rng = Rng::seed_from_u64(14);
+        let cs = make(&mut rng, 60, 12);
+        let mut out = vec![7.0; 12]; // stale contents must be cleared
+        cs.apply_sparse_into(&[(0, 2.0), (59, -1.0)], &mut out);
+        let fresh = cs.apply_sparse(&[(0, 2.0), (59, -1.0)]);
+        assert_eq!(out, fresh);
+    }
+
+    #[test]
+    #[should_panic(expected = "CS domain mismatch")]
+    fn sparse_rejects_out_of_domain_index() {
+        let mut rng = Rng::seed_from_u64(15);
+        let cs = make(&mut rng, 10, 4);
+        let _ = cs.apply_sparse(&[(10, 1.0)]);
     }
 
     #[test]

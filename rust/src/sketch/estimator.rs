@@ -16,12 +16,12 @@
 //! `t_uuu`, the Eq. 17 correlate-and-gather behind `t_mode`, and the
 //! sketch-domain `deflate` — is written exactly once.
 
-use super::common::SpectralSketchOp;
+use super::common::{mul_lane_run, SpectralSketchOp, MAX_FFT_LANES};
 use super::cs::CountSketch;
 use super::fcs::FastCountSketch;
 use super::hcs::HigherOrderCountSketch;
 use super::ts::TensorSketch;
-use crate::fft::{self, FftWorkspace};
+use crate::fft::{self, fft_real_many_into, inverse_real_many_into, FftWorkspace};
 use crate::hash::{HashPair, ModeHashes};
 use crate::tensor::{contract_all_but, t_iuu, t_uuu, Tensor};
 use crate::util::parallel::par_map;
@@ -421,8 +421,22 @@ impl<S: SpectralSketchOp> SpectralEstimator<S> {
     }
 
     /// Build reusing existing hash draws (for TS/FCS equalization, §4.1).
+    ///
+    /// Every repetition must share the same per-mode sketch ranges (every
+    /// in-crate builder draws them that way): the batched serial
+    /// `t_mode_into`/`deflate` paths pack all repetitions' mode sketches
+    /// into one uniform-stride arena and index every `st_fft` at the shared
+    /// `fft_len`, so a heterogeneous repetition would silently corrupt the
+    /// fold — reject it loudly here instead.
     pub fn build_with_hashes(t: &Tensor, hashes: &[ModeHashes]) -> Self {
         assert!(!hashes.is_empty());
+        for h in &hashes[1..] {
+            assert!(
+                h.modes.len() == hashes[0].modes.len()
+                    && h.modes.iter().zip(&hashes[0].modes).all(|(a, b)| a.range == b.range),
+                "spectral estimator repetitions must share per-mode sketch ranges"
+            );
+        }
         let reps = par_map(hashes.len(), crate::util::parallel::default_threads(), |i| {
             let op = S::from_hashes(hashes[i].clone());
             let st = op.apply_dense(t);
@@ -457,7 +471,8 @@ impl<S: SpectralSketchOp> SpectralEstimator<S> {
     }
 
     /// One repetition of the Eq. 17 query: the core's correlate-and-gather
-    /// with this repetition's cached `F(st)`.
+    /// with this repetition's cached `F(st)` (the per-rep body the parallel
+    /// fan-out runs; the serial path batches across repetitions instead).
     fn t_mode_one_rep(
         &self,
         rep: &SpectralRep<S>,
@@ -467,6 +482,13 @@ impl<S: SpectralSketchOp> SpectralEstimator<S> {
         out: &mut Vec<f64>,
     ) {
         rep.op.core().correlate_gather_into(&rep.st_fft, mode, vs, ws, out);
+    }
+
+    /// Largest per-mode sketch range across every repetition — the uniform
+    /// slot stride the cross-repetition batched transforms pack at. Derived
+    /// from the core's stride rule (its single home), maxed over reps.
+    fn mode_stride(&self) -> usize {
+        self.reps.iter().map(|r| r.op.core().mode_stride()).max().unwrap_or(0)
     }
 }
 
@@ -502,6 +524,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
     fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
         let d_reps = self.reps.len();
         let im = self.reps[0].op.core().modes[mode].domain();
+        let nm = self.reps[0].op.core().modes.len();
         if reps_parallel(d_reps, self.fft_len) {
             let rows = par_map(d_reps, crate::util::parallel::default_threads(), |ri| {
                 let mut ws = FftWorkspace::new();
@@ -514,18 +537,84 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
             out.extend_from_slice(&med);
             return;
         }
+        // Serial path, batched across repetitions in MAX_FFT_LANES-bounded
+        // chunks (same cap as the core's rank chunking, so the lane-major
+        // planes stay cache- and pool-friendly): per chunk, ONE forward
+        // transform for the chunk's D_c·(N−1) contracted-mode sketches, the
+        // per-rep Eq. 17 products folded lane-major against each cached
+        // F(st), then ONE batched inverse for the D_c correlation signals —
+        // instead of D·N plan dispatches per query.
+        let n = self.fft_len;
+        let lanes_per = nm - 1;
+        let stride = self.mode_stride();
+        let reps_per = if lanes_per == 0 {
+            d_reps
+        } else {
+            (MAX_FFT_LANES / lanes_per).max(1).min(d_reps)
+        };
         fft::with_thread_workspace(|ws| {
+            let mut xs = ws.take_f64(reps_per * lanes_per * stride);
+            let mut sre = ws.take_f64(0);
+            let mut sim = ws.take_f64(0);
+            let mut izre = ws.take_f64(n * reps_per);
+            let mut izim = ws.take_f64(n * reps_per);
+            let mut z = ws.take_f64(0);
             let mut rows = ws.take_f64(d_reps * im);
-            let mut row = ws.take_f64(im);
-            for (ri, rep) in self.reps.iter().enumerate() {
-                self.t_mode_one_rep(rep, mode, vs, ws, &mut row);
-                rows[ri * im..(ri + 1) * im].copy_from_slice(&row);
+            let mut r0 = 0usize;
+            while r0 < d_reps {
+                let rc = (d_reps - r0).min(reps_per);
+                let batch = rc * lanes_per;
+                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
+                    let core = rep.op.core();
+                    let mut lane = ci * lanes_per;
+                    for (d, cs) in core.modes.iter().enumerate() {
+                        if d == mode {
+                            continue;
+                        }
+                        let jd = cs.range();
+                        cs.apply_into(vs[d], &mut xs[lane * stride..lane * stride + jd]);
+                        lane += 1;
+                    }
+                }
+                fft_real_many_into(&xs[..batch * stride], stride, batch, n, ws, &mut sre, &mut sim);
+                // One inverse lane per repetition in the chunk:
+                // F(st_r)·Π_{d≠mode} conj(F(CS_d(v_d))).
+                for k in 0..n {
+                    let srow = k * batch;
+                    let irow = k * rc;
+                    for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
+                        let mut pr = rep.st_fft[k].re;
+                        let mut pi = rep.st_fft[k].im;
+                        let s = srow + ci * lanes_per;
+                        mul_lane_run(&sre, &sim, s, lanes_per, true, &mut pr, &mut pi);
+                        izre[irow + ci] = pr;
+                        izim[irow + ci] = pi;
+                    }
+                }
+                inverse_real_many_into(&mut izre[..n * rc], &mut izim[..n * rc], rc, ws, &mut z);
+                // Per-rep mode-basis gather (Eq. 17's ⟨z, CS(e_i)⟩ trick).
+                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
+                    let cs_m = &rep.op.core().modes[mode];
+                    let zr = &z[ci * n..(ci + 1) * n];
+                    let row = (r0 + ci) * im;
+                    for (i, o) in rows[row..row + im].iter_mut().enumerate() {
+                        let (bk, s) = cs_m.basis(i);
+                        *o = s * zr[bk];
+                    }
+                }
+                r0 += rc;
             }
+            // Elementwise median across all repetitions.
             let mut scratch = ws.take_f64(d_reps);
             elementwise_median_flat(&rows, d_reps, im, &mut scratch, out);
             ws.give_f64(scratch);
-            ws.give_f64(row);
             ws.give_f64(rows);
+            ws.give_f64(z);
+            ws.give_f64(izim);
+            ws.give_f64(izre);
+            ws.give_f64(sim);
+            ws.give_f64(sre);
+            ws.give_f64(xs);
         });
     }
 
@@ -535,21 +624,89 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
     }
 
     fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        let (sketch_len, fft_len) = (self.sketch_len, self.fft_len);
+        // Batched sketch-domain rank-1 subtraction, chunked across
+        // repetitions at MAX_FFT_LANES lanes: per chunk, ONE forward
+        // transform for the D_c·N mode sketches, per-rep spectral products
+        // folded lane-major, ONE batched inverse for the D_c rank-1
+        // sketches, and one batched forward of the truncated sketches to
+        // keep every F(st) cache coherent (F is linear) — instead of
+        // D·(N+1) plan dispatches.
+        let (sketch_len, n) = (self.sketch_len, self.fft_len);
+        let d_reps = self.reps.len();
+        let nm = self.reps[0].op.core().modes.len();
+        assert_eq!(vs.len(), nm, "deflate: rank-1 arity mismatch");
+        let stride = self.mode_stride();
+        let reps_per = (MAX_FFT_LANES / nm).max(1).min(d_reps);
         fft::with_thread_workspace(|ws| {
-            let mut sk = ws.take_f64(sketch_len);
-            let mut fs = ws.take_c64(fft_len);
-            for rep in &mut self.reps {
-                rep.op.apply_rank1_into(vs, ws, &mut sk);
-                crate::linalg::axpy(-lambda, &sk, &mut rep.st);
-                // Keep the spectral cache coherent (F is linear).
-                fft::fft_real_into(&sk, fft_len, ws, &mut fs);
-                for (x, y) in rep.st_fft.iter_mut().zip(fs.iter()) {
-                    *x = *x - y.scale(lambda);
+            let mut xs = ws.take_f64(reps_per * nm * stride);
+            let mut sre = ws.take_f64(0);
+            let mut sim = ws.take_f64(0);
+            let mut izre = ws.take_f64(n * reps_per);
+            let mut izim = ws.take_f64(n * reps_per);
+            let mut sk = ws.take_f64(0);
+            let mut fre = ws.take_f64(0);
+            let mut fim = ws.take_f64(0);
+            let mut r0 = 0usize;
+            while r0 < d_reps {
+                let rc = (d_reps - r0).min(reps_per);
+                let batch = rc * nm;
+                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
+                    let core = rep.op.core();
+                    for (d, cs) in core.modes.iter().enumerate() {
+                        let jd = cs.range();
+                        let slot = (ci * nm + d) * stride;
+                        cs.apply_into(vs[d], &mut xs[slot..slot + jd]);
+                    }
                 }
+                fft_real_many_into(
+                    &xs[..batch * stride],
+                    stride,
+                    batch,
+                    n,
+                    ws,
+                    &mut sre,
+                    &mut sim,
+                );
+                for k in 0..n {
+                    let srow = k * batch;
+                    let irow = k * rc;
+                    for ci in 0..rc {
+                        let s = srow + ci * nm;
+                        let mut pr = sre[s];
+                        let mut pi = sim[s];
+                        mul_lane_run(&sre, &sim, s + 1, nm - 1, false, &mut pr, &mut pi);
+                        izre[irow + ci] = pr;
+                        izim[irow + ci] = pi;
+                    }
+                }
+                inverse_real_many_into(&mut izre[..n * rc], &mut izim[..n * rc], rc, ws, &mut sk);
+                // Truncate each lane to sketch_len, zeroing the tail so the
+                // F(st) cache update sees exactly the subtracted signal.
+                for ci in 0..rc {
+                    for v in sk[ci * n + sketch_len..(ci + 1) * n].iter_mut() {
+                        *v = 0.0;
+                    }
+                }
+                for (ci, rep) in self.reps[r0..r0 + rc].iter_mut().enumerate() {
+                    crate::linalg::axpy(-lambda, &sk[ci * n..ci * n + sketch_len], &mut rep.st);
+                }
+                fft_real_many_into(&sk[..n * rc], n, rc, n, ws, &mut fre, &mut fim);
+                for (ci, rep) in self.reps[r0..r0 + rc].iter_mut().enumerate() {
+                    for (k, x) in rep.st_fft.iter_mut().enumerate() {
+                        x.re -= lambda * fre[k * rc + ci];
+                        x.im -= lambda * fim[k * rc + ci];
+                    }
+                }
+                r0 += rc;
             }
-            ws.give_c64(fs);
+            ws.give_f64(fim);
+            ws.give_f64(fre);
             ws.give_f64(sk);
+            ws.give_f64(izim);
+            ws.give_f64(izre);
+            ws.give_f64(sim);
+            ws.give_f64(sre);
+            ws.give_f64(xs);
         });
     }
 
@@ -864,6 +1021,20 @@ mod tests {
         let via_iuu = crate::linalg::dot(&est.t_iuu(&u), &u);
         let direct = est.t_uuu(&u);
         assert!((via_iuu - direct).abs() < 1e-8, "{via_iuu} vs {direct}");
+    }
+
+    #[test]
+    #[should_panic(expected = "share per-mode sketch ranges")]
+    fn heterogeneous_rep_ranges_rejected() {
+        // The batched cross-repetition paths pack every rep at one uniform
+        // stride and fft_len; mixed-range repetitions must fail at build.
+        let mut rng = Rng::seed_from_u64(11);
+        let t = test_tensor(&mut rng, 8);
+        let hashes = vec![
+            ModeHashes::draw_uniform(&mut rng, &t.shape, 16),
+            ModeHashes::draw_uniform(&mut rng, &t.shape, 8),
+        ];
+        let _ = FcsEstimator::build_with_hashes(&t, &hashes);
     }
 
     #[test]

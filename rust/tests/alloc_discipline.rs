@@ -92,6 +92,43 @@ fn hot_paths_are_allocation_free_in_steady_state() {
         assert_eq!(n, 0, "conv_circular_many_into (Bluestein) allocated {n} times");
     }
 
+    // --- batched multi-spectrum transforms (the split-plane kernel's
+    // --- *_many_into entry points: forward packed batch → lane-major
+    // --- spectra → batched inverse) -----------------------------------------
+    {
+        let mut ws = FftWorkspace::new();
+        let stride = 11usize;
+        let batch = 6usize;
+        let xs: Vec<f64> = rng.normal_vec(stride * batch);
+        let mut sre = Vec::new();
+        let mut sim = Vec::new();
+        let mut back = Vec::new();
+        // Power-of-two transform length (the FCS path) …
+        for _ in 0..2 {
+            fcs::fft::fft_real_many_into(&xs, stride, batch, 32, &mut ws, &mut sre, &mut sim);
+            fcs::fft::inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs::fft::fft_real_many_into(&xs, stride, batch, 32, &mut ws, &mut sre, &mut sim);
+                fcs::fft::inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+            }
+        });
+        assert_eq!(n, 0, "batched *_many_into (pow2) allocated {n} times in steady state");
+        // … and a Bluestein length (odd n: the TS circular path).
+        for _ in 0..2 {
+            fcs::fft::fft_real_many_into(&xs, stride, batch, 21, &mut ws, &mut sre, &mut sim);
+            fcs::fft::inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                fcs::fft::fft_real_many_into(&xs, stride, batch, 21, &mut ws, &mut sre, &mut sim);
+                fcs::fft::inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+            }
+        });
+        assert_eq!(n, 0, "batched *_many_into (Bluestein) allocated {n} times in steady state");
+    }
+
     // --- FCS / TS CP fast paths (one IFFT, spectral accumulation) ----------
     {
         let shape = [8usize, 9, 7];
@@ -224,5 +261,18 @@ fn hot_paths_are_allocation_free_in_steady_state() {
         // twice through a cold workspace — all of them global-cache hits.
         assert!(h1 >= h0 + 8, "expected ≥8 plan-cache hits, got {}", h1 - h0);
         assert_eq!(m1, m0, "steady-state transforms must not rebuild plans (misses grew)");
+        // The batched entry points resolve the same per-length plans: after
+        // the warmup above, a cold workspace running *_many at length 64 is
+        // all cache hits too.
+        let xs: Vec<f64> = (0..3 * 48).map(|i| i as f64).collect();
+        let (mut sre, mut sim, mut back) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..2 {
+            let mut ws3 = FftWorkspace::new();
+            fcs::fft::fft_real_many_into(&xs, 48, 3, 64, &mut ws3, &mut sre, &mut sim);
+            fcs::fft::inverse_real_many_into(&mut sre, &mut sim, 3, &mut ws3, &mut back);
+        }
+        let (h2, m2) = planner.cache_counters();
+        assert!(h2 >= h1 + 4, "expected ≥4 batched plan-cache hits, got {}", h2 - h1);
+        assert_eq!(m2, m1, "batched *_many_into rebuilt plans (misses grew)");
     }
 }

@@ -1,0 +1,217 @@
+//! Conformance suite for the split-plane radix-4 FFT core and its batched
+//! entry points: exhaustive cross-checks against the `dft_naive` oracle for
+//! every length 1..=128 (power-of-two → radix-4 kernel, everything else →
+//! Bluestein composed over it), representative larger Bluestein lengths,
+//! real-packed roundtrips, agreement with the retired scalar radix-2 kernel,
+//! and qcheck properties pinning `process_many`/`*_many_into` to a loop of
+//! their single-signal counterparts.
+
+use fcs::fft::{
+    dft_naive, fft_real, fft_real_into, fft_real_many_into, ifft_to_real, inverse_real_into,
+    inverse_real_many_into, C64, Dir, FftScratch, FftWorkspace, Plan, ScalarRadix2Plan,
+};
+use fcs::util::prng::Rng;
+use fcs::util::qcheck::qcheck;
+
+fn rand_signal(rng: &mut Rng, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+}
+
+fn max_err(a: &[C64], b: &[C64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn exhaustive_forward_matches_naive_for_lengths_1_to_128() {
+    let mut rng = Rng::seed_from_u64(1);
+    for n in 1usize..=128 {
+        let plan = Plan::new(n);
+        let x = rand_signal(&mut rng, n);
+        let mut y = x.clone();
+        plan.process(&mut y, Dir::Forward);
+        let naive = dft_naive(&x, Dir::Forward);
+        let err = max_err(&y, &naive);
+        assert!(err < 1e-8 * (n as f64 + 1.0), "forward n={n} err={err}");
+    }
+}
+
+#[test]
+fn exhaustive_inverse_matches_naive_and_roundtrips_for_lengths_1_to_128() {
+    let mut rng = Rng::seed_from_u64(2);
+    for n in 1usize..=128 {
+        let plan = Plan::new(n);
+        let x = rand_signal(&mut rng, n);
+        // direct inverse vs the oracle
+        let mut y = x.clone();
+        plan.process(&mut y, Dir::Inverse);
+        let naive = dft_naive(&x, Dir::Inverse);
+        let err = max_err(&y, &naive);
+        assert!(err < 1e-8 * (n as f64 + 1.0), "inverse n={n} err={err}");
+        // forward ∘ inverse roundtrip
+        let mut z = x.clone();
+        plan.process(&mut z, Dir::Forward);
+        plan.process(&mut z, Dir::Inverse);
+        let err = max_err(&z, &x);
+        assert!(err < 1e-9 * (n as f64 + 1.0), "roundtrip n={n} err={err}");
+    }
+}
+
+#[test]
+fn exhaustive_real_packed_roundtrip_for_lengths_1_to_128() {
+    let mut rng = Rng::seed_from_u64(3);
+    for n in 1usize..=128 {
+        let x: Vec<f64> = rng.normal_vec(n);
+        let spec = fft_real(&x, n);
+        let full: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
+        let naive = dft_naive(&full, Dir::Forward);
+        let err = max_err(&spec, &naive);
+        assert!(err < 1e-8 * (n as f64 + 1.0), "rfft n={n} err={err}");
+        let back = ifft_to_real(spec);
+        let rerr = x
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(rerr < 1e-9 * (n as f64 + 1.0), "rfft roundtrip n={n} err={rerr}");
+    }
+}
+
+#[test]
+fn representative_bluestein_lengths() {
+    let mut rng = Rng::seed_from_u64(4);
+    // Odd primes, an even composite, and 2^k ± 1 — the shapes TS's circular
+    // J lands on; forward checked against the oracle, then roundtripped.
+    for &n in &[251usize, 509, 997, 1000, 1023] {
+        let plan = Plan::new(n);
+        let x = rand_signal(&mut rng, n);
+        let mut y = x.clone();
+        plan.process(&mut y, Dir::Forward);
+        let naive = dft_naive(&x, Dir::Forward);
+        let err = max_err(&y, &naive);
+        assert!(err < 1e-8 * n as f64, "bluestein n={n} err={err}");
+        plan.process(&mut y, Dir::Inverse);
+        let err = max_err(&y, &x);
+        assert!(err < 1e-9 * n as f64, "bluestein roundtrip n={n} err={err}");
+        // real-packed path at the same length
+        let xr: Vec<f64> = rng.normal_vec(n);
+        let back = ifft_to_real(fft_real(&xr, n));
+        let rerr = xr
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(rerr < 1e-9 * n as f64, "bluestein rfft roundtrip n={n} err={rerr}");
+    }
+    // One big length, roundtrip only (the O(n²) oracle is too slow here).
+    let n = 4093usize;
+    let plan = Plan::new(n);
+    let x = rand_signal(&mut rng, n);
+    let mut y = x.clone();
+    plan.process(&mut y, Dir::Forward);
+    plan.process(&mut y, Dir::Inverse);
+    assert!(max_err(&y, &x) < 1e-9 * n as f64, "bluestein roundtrip n={n}");
+}
+
+#[test]
+fn scalar_radix2_oracle_agrees_with_split_plane_kernel() {
+    let mut rng = Rng::seed_from_u64(5);
+    let mut n = 1usize;
+    while n <= 1024 {
+        let plan = Plan::new(n);
+        let oracle = ScalarRadix2Plan::new(n);
+        let x = rand_signal(&mut rng, n);
+        for dir in [Dir::Forward, Dir::Inverse] {
+            let mut a = x.clone();
+            plan.process(&mut a, dir);
+            let mut b = x.clone();
+            oracle.process(&mut b, dir);
+            let err = max_err(&a, &b);
+            assert!(err < 1e-10 * (n as f64 + 1.0), "n={n} dir={dir:?} err={err}");
+        }
+        n *= 2;
+    }
+}
+
+#[test]
+fn qcheck_process_many_equals_loop_of_process() {
+    qcheck(40, |g| {
+        let n = g.usize_in(1, 160);
+        let batch = g.usize_in(1, 6);
+        let dir = if g.bool() { Dir::Forward } else { Dir::Inverse };
+        let lanes: Vec<Vec<C64>> = (0..batch)
+            .map(|_| {
+                (0..n)
+                    .map(|_| C64::new(g.f64_in(-1.0, 1.0), g.f64_in(-1.0, 1.0)))
+                    .collect()
+            })
+            .collect();
+        // lane-major split planes
+        let mut re = vec![0.0; n * batch];
+        let mut im = vec![0.0; n * batch];
+        for (b, lane) in lanes.iter().enumerate() {
+            for (k, z) in lane.iter().enumerate() {
+                re[k * batch + b] = z.re;
+                im[k * batch + b] = z.im;
+            }
+        }
+        let plan = Plan::new(n);
+        let mut scratch = FftScratch::new();
+        plan.process_many(&mut re, &mut im, batch, dir, &mut scratch);
+        for (b, lane) in lanes.iter().enumerate() {
+            let mut single = lane.clone();
+            plan.process(&mut single, dir);
+            for (k, z) in single.iter().enumerate() {
+                let d = (re[k * batch + b] - z.re).abs() + (im[k * batch + b] - z.im).abs();
+                assert!(
+                    d < 1e-10 * (n as f64 + 1.0),
+                    "case {}: n={n} batch={batch} lane={b} k={k} d={d}",
+                    g.case
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn qcheck_batched_real_transforms_equal_loop_of_single() {
+    let mut ws = FftWorkspace::new();
+    qcheck(40, |g| {
+        let n = g.usize_in(1, 96);
+        let stride = g.usize_in(1, n);
+        let batch = g.usize_in(1, 5);
+        let xs = g.f64_vec(stride * batch, -1.0, 1.0);
+        let mut sre = Vec::new();
+        let mut sim = Vec::new();
+        fft_real_many_into(&xs, stride, batch, n, &mut ws, &mut sre, &mut sim);
+        let mut single = Vec::new();
+        for b in 0..batch {
+            fft_real_into(&xs[b * stride..(b + 1) * stride], n, &mut ws, &mut single);
+            for (k, z) in single.iter().enumerate() {
+                let d = (sre[k * batch + b] - z.re).abs() + (sim[k * batch + b] - z.im).abs();
+                assert!(
+                    d < 1e-10 * (n as f64 + 1.0),
+                    "case {}: forward n={n} stride={stride} batch={batch} b={b} k={k}",
+                    g.case
+                );
+            }
+        }
+        // Batched inverse returns every lane's (zero-padded) signal,
+        // signal-major; cross-check against the single-spectrum inverse.
+        let mut back = Vec::new();
+        fft_real_many_into(&xs, stride, batch, n, &mut ws, &mut sre, &mut sim);
+        inverse_real_many_into(&mut sre, &mut sim, batch, &mut ws, &mut back);
+        let mut one = Vec::new();
+        for b in 0..batch {
+            fft_real_into(&xs[b * stride..(b + 1) * stride], n, &mut ws, &mut single);
+            inverse_real_into(&mut single, &mut ws, &mut one);
+            for (j, v) in one.iter().enumerate() {
+                assert!(
+                    (back[b * n + j] - v).abs() < 1e-10 * (n as f64 + 1.0),
+                    "case {}: inverse n={n} stride={stride} batch={batch} b={b} j={j}",
+                    g.case
+                );
+            }
+        }
+    });
+}
