@@ -221,6 +221,69 @@ fn main() {
         }
     }
 
+    // (ii-c) SpectralDriver cross-repetition batching: the estimator's
+    // serial t_mode (ONE driver pass over all D repetitions — chunk-shared
+    // forwards/inverses) vs the per-repetition loop of single-group
+    // correlate-and-gather calls it collapsed (the shape of the deleted
+    // duplicated chunk scaffolding, and what the rayon-less parallel path
+    // runs per thread). §Perf "t_mode_driver" rows.
+    {
+        use fcs::sketch::{elementwise_median, ContractionEstimator};
+        let dim = 100usize;
+        let j = 4000usize;
+        let d_reps = 5usize;
+        let mut rng = Rng::seed_from_u64(6);
+        let t = Tensor::randn(&mut rng, &[dim, dim, dim]);
+        let hashes: Vec<ModeHashes> = (0..d_reps)
+            .map(|_| ModeHashes::draw_uniform(&mut rng, &[dim, dim, dim], j))
+            .collect();
+        let est = FcsEstimator::build_with_hashes(&t, &hashes);
+        let ops: Vec<FastCountSketch> =
+            hashes.iter().map(|h| FastCountSketch::new(h.clone())).collect();
+        let rep_ffts: Vec<Vec<fcs::fft::C64>> = ops
+            .iter()
+            .map(|op| op.core().sketch_spectrum(&op.apply_dense(&t)))
+            .collect();
+        let u = rng.normal_vec(dim);
+        let v = rng.normal_vec(dim);
+        let w = rng.normal_vec(dim);
+        let vs: [&[f64]; 3] = [&u, &v, &w];
+        let mut out = Vec::new();
+        let s_driver = measure(2, reps, || est.t_mode_into(0, &vs, &mut out));
+        let mut ws = FftWorkspace::new();
+        let mut rows: Vec<Vec<f64>> = vec![Vec::new(); d_reps];
+        let s_loop = measure(2, reps, || {
+            for ((op, st_fft), row) in ops.iter().zip(&rep_ffts).zip(rows.iter_mut()) {
+                op.core().correlate_gather_into(st_fft, 0, &vs, &mut ws, row);
+            }
+            let _ = elementwise_median(&rows);
+        });
+        let speedup = s_loop.median / s_driver.median;
+        table.row(vec![
+            format!("t_mode driver batched (D={d_reps},J={j})"),
+            "time".into(),
+            fmt_secs(s_driver.median),
+        ]);
+        table.row(vec![
+            format!("t_mode per-rep loop (D={d_reps},J={j})"),
+            "time".into(),
+            fmt_secs(s_loop.median),
+        ]);
+        table.row(vec![
+            "t_mode driver vs per-rep loop".into(),
+            "speedup".into(),
+            format!("{speedup:.2}x"),
+        ]);
+        sink.record(&[
+            ("path", "t_mode_driver".into()),
+            ("d_reps", (d_reps as f64).into()),
+            ("j", (j as f64).into()),
+            ("secs_batched_serial", s_driver.median.into()),
+            ("secs_per_rep_loop", s_loop.median.into()),
+            ("speedup", speedup.into()),
+        ]);
+    }
+
     // (iii) estimator query latency
     {
         let dim = 100usize;

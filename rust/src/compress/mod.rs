@@ -34,30 +34,10 @@ impl Codec {
     }
 }
 
-/// Median of a small scratch buffer (decode hot path: D ≤ ~20 entries).
-/// Uses selection (O(D)) rather than a full sort — the median is evaluated
-/// once per reconstructed element, so this is the §4.3 decompression hot
-/// loop (§Perf: ~1.6× on decompress).
-#[inline]
-pub(crate) fn median_inplace(buf: &mut [f64]) -> f64 {
-    let n = buf.len();
-    debug_assert!(n > 0);
-    if n == 1 {
-        return buf[0];
-    }
-    let mid = n / 2;
-    let (_, &mut upper_med, _) =
-        buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
-    if n % 2 == 1 {
-        upper_med
-    } else {
-        // lower median = max of the left partition
-        let lower_med = buf[..mid]
-            .iter()
-            .fold(f64::NEG_INFINITY, |m, &x| m.max(x));
-        0.5 * (lower_med + upper_med)
-    }
-}
+/// Median of a small scratch buffer (decode hot path: D ≤ ~20 entries) —
+/// the selection-based O(D) primitive now lives in `util::timing` as the
+/// crate-wide single home (§Perf: ~1.6× on decompress vs a full sort).
+pub(crate) use crate::util::timing::median_inplace;
 
 /// Given a target sketch size `s`, the per-mode hash length for FCS's
 /// 4-mode composite (`J̃ = 4J − 3 = s` ⇒ `J = (s + 3) / 4`).

@@ -13,6 +13,12 @@
 //! consecutively on a warm workspace: one plan lookup and zero arena
 //! resizing serve the whole run. Under light load workers take one job per
 //! wakeup, keeping bursts fanned out across the pool.
+//!
+//! Robustness: requests are validated up front (shape/data coherence with an
+//! overflow-checked shape product, zero-dim/zero-rep rejection), and each
+//! job of a drained batch executes under `catch_unwind` — a poisoned request
+//! that still trips a kernel assert costs exactly its own reply (an
+//! [`ServiceError::Exec`]), never the rest of the batch or the worker.
 
 use super::msg::{Request, Response, ServiceError, SketchMethod};
 use super::stats::{Stats, StatsReport};
@@ -110,8 +116,19 @@ impl ServiceHandle {
         // internally inconsistent value (data length ≠ shape product). The
         // sketch kernels index hash tables by shape-derived fibers, so such
         // a request would panic a worker mid-batch — reject it up front.
-        fn well_formed(t: &Tensor) -> bool {
-            !t.shape.is_empty() && t.data.len() == t.shape.iter().product::<usize>()
+        // The shape product is overflow-checked (a hostile shape like
+        // `[usize::MAX, 2]` must be a BadRequest, not a client-thread
+        // overflow panic), and the zero-dim / zero-rep degenerate cases are
+        // rejected here so they never reach a worker.
+        fn checked_numel(t: &Tensor) -> Option<usize> {
+            if t.shape.is_empty() {
+                return None;
+            }
+            let numel = t
+                .shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))?;
+            (t.data.len() == numel).then_some(numel)
         }
         match req {
             Request::CsVec { x } => {
@@ -124,11 +141,11 @@ impl ServiceHandle {
                 }
             }
             Request::SketchDense { tensor, j, .. } => {
-                if tensor.numel() == 0 || *j == 0 {
-                    return Err(ServiceError::BadRequest("empty tensor or j=0".into()));
-                }
-                if !well_formed(tensor) {
+                let Some(numel) = checked_numel(tensor) else {
                     return Err(ServiceError::BadRequest("tensor shape/data mismatch".into()));
+                };
+                if numel == 0 || *j == 0 {
+                    return Err(ServiceError::BadRequest("empty tensor or j=0".into()));
                 }
             }
             Request::SketchCp { cp, j } => {
@@ -136,7 +153,11 @@ impl ServiceHandle {
                     return Err(ServiceError::BadRequest("empty cp or j=0".into()));
                 }
                 for f in &cp.factors {
-                    if f.rows == 0 || f.cols != cp.rank() || f.data.len() != f.rows * f.cols {
+                    // Same overflow-checked product discipline as the dense
+                    // tensor arms: hostile dims must be a BadRequest, not a
+                    // client-thread overflow panic (debug) or wrap (release).
+                    let numel = f.rows.checked_mul(f.cols);
+                    if f.rows == 0 || f.cols != cp.rank() || numel != Some(f.data.len()) {
                         return Err(ServiceError::BadRequest(
                             "cp factor shape/data mismatch".into(),
                         ));
@@ -147,11 +168,11 @@ impl ServiceHandle {
                 if a.shape != b.shape {
                     return Err(ServiceError::BadRequest("shape mismatch".into()));
                 }
-                if *d == 0 || *j == 0 || a.numel() == 0 {
-                    return Err(ServiceError::BadRequest("empty tensor, d=0 or j=0".into()));
-                }
-                if !well_formed(a) || !well_formed(b) {
+                let (Some(na), Some(_)) = (checked_numel(a), checked_numel(b)) else {
                     return Err(ServiceError::BadRequest("tensor shape/data mismatch".into()));
+                };
+                if *d == 0 || *j == 0 || na == 0 {
+                    return Err(ServiceError::BadRequest("empty tensor, d=0 or j=0".into()));
                 }
             }
         }
@@ -595,23 +616,55 @@ fn worker_loop(
         // in-place unstable sort — no allocation in the drain loop.
         batch.sort_unstable_by_key(|job| job.req.shape_key());
         busy.fetch_add(1, Ordering::Relaxed);
-        // Drop guard: if execute() ever panics mid-batch, the unwind must
+        // Drop guard: if anything below panics mid-batch, the unwind must
         // still decrement the busy counter, or every surviving worker would
         // see a permanently inflated saturation signal and over-drain.
         let _busy_guard = BusyGuard(&busy);
         for job in batch.drain(..) {
-            let op = job.req.op_name();
+            let Job { req, reply, enqueued } = *job;
+            let op = req.op_name();
             let req_id = counter.fetch_add(1, Ordering::Relaxed);
             let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
-            let result = state.execute(job.req, &runtime, &mut rng);
-            let latency = job.enqueued.elapsed().as_secs_f64() * 1e6;
+            // Per-job panic isolation: a poisoned request (validation is a
+            // best effort — degenerate numerics can still trip kernel
+            // asserts) must cost exactly its own reply, not unwind the
+            // worker and silently drop every remaining drained job's sender.
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                state.execute(req, &runtime, &mut rng)
+            }));
+            let result = match caught {
+                Ok(r) => r,
+                Err(payload) => {
+                    // The arenas may have been mid-rewrite when the unwind
+                    // tore through them — rebuild rather than trust a torn
+                    // workspace.
+                    state = WorkerState::new();
+                    Err(ServiceError::Exec(format!(
+                        "worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    )))
+                }
+            };
+            let latency = enqueued.elapsed().as_secs_f64() * 1e6;
             stats.record(op, latency);
-            let _ = job.reply.send(result);
+            let _ = reply.send(result);
         }
         drop(_busy_guard);
         if stopping {
             return;
         }
+    }
+}
+
+/// Best-effort human-readable message from a caught panic payload
+/// (`panic!("…")` carries a `&str` or `String`; anything else gets a tag).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 

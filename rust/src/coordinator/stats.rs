@@ -84,7 +84,7 @@ impl Stats {
         for (op, s) in &g.per_op {
             total += s.completed;
             let mut lat = s.latencies_us.clone();
-            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lat.sort_unstable_by(f64::total_cmp);
             let pct = |p: f64| {
                 if lat.is_empty() {
                     0.0

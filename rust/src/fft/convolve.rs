@@ -14,7 +14,10 @@
 
 use super::complex::{C64, ZERO};
 use super::plan::Dir;
-use super::workspace::{fft_real_into, inverse_real_into, with_thread_workspace, FftWorkspace};
+use super::workspace::{
+    fft_real_into, fft_real_many_into, inverse_real_into, mul_lane_run, with_thread_workspace,
+    FftWorkspace,
+};
 
 /// Product spectrum `F(a)·F(b)` of two real signals at length `n`, computed
 /// with **one** complex FFT via the real-pair packing identity: with
@@ -29,23 +32,24 @@ pub fn packed_product_spectrum_into(
     out: &mut Vec<C64>,
 ) {
     debug_assert!(a.len() <= n && b.len() <= n);
-    let mut z = ws.take_c64(n);
-    for (i, &v) in a.iter().enumerate() {
-        z[i].re = v;
-    }
-    for (i, &v) in b.iter().enumerate() {
-        z[i].im = v;
-    }
-    ws.process(&mut z, Dir::Forward);
+    // Native split planes: `a` is the real plane, `b` the imaginary one —
+    // the batch=1 plane entry runs the kernel with no interleaved staging.
+    let mut zre = ws.take_f64(n);
+    let mut zim = ws.take_f64(n);
+    zre[..a.len()].copy_from_slice(a);
+    zim[..b.len()].copy_from_slice(b);
+    ws.process_planes(&mut zre, &mut zim, Dir::Forward);
     out.clear();
     out.resize(n, ZERO);
     let quarter_negi = C64::new(0.0, -0.25);
     for (k, o) in out.iter_mut().enumerate() {
-        let zk = z[k];
-        let zmk = z[(n - k) % n].conj();
+        let zk = C64::new(zre[k], zim[k]);
+        let mk = (n - k) % n;
+        let zmk = C64::new(zre[mk], -zim[mk]);
         *o = (zk * zk - zmk * zmk) * quarter_negi;
     }
-    ws.give_c64(z);
+    ws.give_f64(zim);
+    ws.give_f64(zre);
 }
 
 /// Allocating wrapper over [`packed_product_spectrum_into`].
@@ -58,8 +62,12 @@ pub fn packed_product_spectrum(a: &[f64], b: &[f64], n: usize) -> Vec<C64> {
 }
 
 /// Product spectrum `Π_i F(signals[i])` at length `n`, written into `out`.
-/// Signals are consumed pairwise through the packing trick; an odd leftover
-/// goes through the half-length real transform.
+///
+/// All signals are packed at a uniform stride and transformed by **one**
+/// batched real-input call ([`fft_real_many_into`], half-length complex
+/// kernel, batch innermost), then each bin's lanes are folded pointwise —
+/// one blocked plan dispatch instead of one packed-pair transform per two
+/// signals (the pre-PR 5 chain this replaced).
 pub fn product_spectrum_into(
     signals: &[&[f64]],
     n: usize,
@@ -71,23 +79,29 @@ pub fn product_spectrum_into(
         fft_real_into(signals[0], n, ws, out);
         return;
     }
-    packed_product_spectrum_into(signals[0], signals[1], n, ws, out);
-    let mut rest = &signals[2..];
-    let mut tmp = ws.take_c64(n);
-    while rest.len() >= 2 {
-        packed_product_spectrum_into(rest[0], rest[1], n, ws, &mut tmp);
-        for (x, y) in out.iter_mut().zip(tmp.iter()) {
-            *x = *x * *y;
-        }
-        rest = &rest[2..];
+    let m = signals.len();
+    let stride = signals.iter().map(|s| s.len()).max().unwrap().max(1);
+    assert!(stride <= n, "product_spectrum_into: signal longer than transform");
+    let mut xs = ws.take_f64(m * stride);
+    for (b, s) in signals.iter().enumerate() {
+        xs[b * stride..b * stride + s.len()].copy_from_slice(s);
     }
-    if let Some(s) = rest.first() {
-        fft_real_into(s, n, ws, &mut tmp);
-        for (x, y) in out.iter_mut().zip(tmp.iter()) {
-            *x = *x * *y;
-        }
+    let mut sre = ws.take_f64(0);
+    let mut sim = ws.take_f64(0);
+    fft_real_many_into(&xs, stride, m, n, ws, &mut sre, &mut sim);
+    out.clear();
+    out.resize(n, ZERO);
+    for (k, o) in out.iter_mut().enumerate() {
+        let row = k * m;
+        let mut pr = sre[row];
+        let mut pi = sim[row];
+        mul_lane_run(&sre, &sim, row + 1, m - 1, false, &mut pr, &mut pi);
+        o.re = pr;
+        o.im = pi;
     }
-    ws.give_c64(tmp);
+    ws.give_f64(sim);
+    ws.give_f64(sre);
+    ws.give_f64(xs);
 }
 
 /// Linear convolution of real signals into `out`, output length

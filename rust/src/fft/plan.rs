@@ -405,6 +405,21 @@ impl Plan {
         scratch.im = im;
     }
 
+    /// Native batch=1 transform on **caller-owned** split re/im planes —
+    /// the single-signal plan entry the ROADMAP follow-up called for: callers
+    /// that already hold split planes skip the O(n) interleaved-`C64`
+    /// pack/unpack staging [`Self::process_scratch`] pays. `scratch` is only
+    /// touched for Bluestein lengths.
+    pub fn process_planes(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        dir: Dir,
+        scratch: &mut FftScratch,
+    ) {
+        self.process_many(re, im, 1, dir, scratch)
+    }
+
     /// Batched in-place transform of `batch` same-length signals on split
     /// re/im planes, stored with the frequency index major and the **batch
     /// as the innermost (SIMD) axis**: element `k` of signal `b` lives at
@@ -762,6 +777,29 @@ mod tests {
                 for (k, z) in single.iter().enumerate() {
                     let d = (re[k * batch + b] - z.re).abs() + (im[k * batch + b] - z.im).abs();
                     assert!(d < 1e-10 * n as f64, "n={n} batch={batch} lane={b} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn process_planes_matches_interleaved_process() {
+        // The native batch=1 plane entry must agree with the staged
+        // interleaved path for pow2 and Bluestein lengths, both directions.
+        let mut rng = Rng::seed_from_u64(13);
+        for &n in &[1usize, 2, 8, 64, 100, 243] {
+            let x = rand_signal(&mut rng, n);
+            let plan = Plan::new(n);
+            let mut scratch = FftScratch::new();
+            for dir in [Dir::Forward, Dir::Inverse] {
+                let mut re: Vec<f64> = x.iter().map(|z| z.re).collect();
+                let mut im: Vec<f64> = x.iter().map(|z| z.im).collect();
+                plan.process_planes(&mut re, &mut im, dir, &mut scratch);
+                let mut y = x.clone();
+                plan.process(&mut y, dir);
+                for k in 0..n {
+                    let d = (re[k] - y[k].re).abs() + (im[k] - y[k].im).abs();
+                    assert!(d < 1e-10 * (n as f64).max(1.0), "n={n} dir={dir:?} k={k}");
                 }
             }
         }

@@ -19,6 +19,33 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// Multiply the complex product of `count` consecutive lanes
+/// `(sre, sim)[s..s+count]` of one lane-major frequency row into the
+/// accumulator `(pr, pi)`; with `conj` each lane enters conjugated (spectral
+/// correlation rather than convolution). The single home of the batched
+/// pointwise-product inner loop every spectral fold runs — the sketch-layer
+/// [`crate::sketch::common::SpectralDriver`] and the convolution layer's
+/// [`super::convolve::product_spectrum_into`] both fold through it.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mul_lane_run(
+    sre: &[f64],
+    sim: &[f64],
+    s: usize,
+    count: usize,
+    conj: bool,
+    pr: &mut f64,
+    pi: &mut f64,
+) {
+    for d in 0..count {
+        let qr = sre[s + d];
+        let qi = if conj { -sim[s + d] } else { sim[s + d] };
+        let t = *pr * qr - *pi * qi;
+        *pi = *pr * qi + *pi * qr;
+        *pr = t;
+    }
+}
+
 /// Reusable transform scratch + plan cache. Buffers are rented with
 /// `take_*` and returned with `give_*`; in steady state (same call sequence
 /// each iteration) every rental is served from the pool without allocating.
@@ -68,6 +95,19 @@ impl FftWorkspace {
         let plan = self.plan(data.len());
         let mut scratch = std::mem::take(&mut self.scratch);
         plan.process_scratch(data, dir, &mut scratch);
+        self.scratch = scratch;
+    }
+
+    /// Native batch=1 transform on caller-owned split re/im planes: the
+    /// signal goes straight into the split-plane kernel with **no**
+    /// interleaved-`C64` staging (the O(n) pack/unpack [`Self::process`]
+    /// pays) — the ROADMAP follow-up's "native batch=1 plane entry". Plans
+    /// cached locally, Bluestein scratch reused.
+    pub fn process_planes(&mut self, re: &mut [f64], im: &mut [f64], dir: Dir) {
+        assert_eq!(re.len(), im.len(), "process_planes: plane length mismatch");
+        let plan = self.plan(re.len());
+        let mut scratch = std::mem::take(&mut self.scratch);
+        plan.process_planes(re, im, dir, &mut scratch);
         self.scratch = scratch;
     }
 
@@ -157,28 +197,37 @@ pub fn fft_real_into(x: &[f64], n: usize, ws: &mut FftWorkspace, out: &mut Vec<C
     }
     let m = n / 2;
     let rp = ws.real_plan(n);
-    let mut z = ws.take_c64(m);
-    for (j, zj) in z.iter_mut().enumerate() {
-        let re = if 2 * j < x.len() { x[2 * j] } else { 0.0 };
-        let im = if 2 * j + 1 < x.len() { x[2 * j + 1] } else { 0.0 };
-        *zj = C64::new(re, im);
+    // Native split-plane packing: the half-length complex signal is built
+    // directly in two f64 planes and transformed through the batch=1 plane
+    // entry — no interleaved-C64 staging round-trip.
+    let mut zre = ws.take_f64(m);
+    let mut zim = ws.take_f64(m);
+    for j in 0..m {
+        if 2 * j < x.len() {
+            zre[j] = x[2 * j];
+        }
+        if 2 * j + 1 < x.len() {
+            zim[j] = x[2 * j + 1];
+        }
     }
-    ws.process(&mut z, Dir::Forward);
+    ws.process_planes(&mut zre, &mut zim, Dir::Forward);
     out.resize(n, ZERO);
     for k in 0..m {
-        let zk = z[k];
-        let zmk = z[(m - k) % m].conj();
+        let zk = C64::new(zre[k], zim[k]);
+        let mk = (m - k) % m;
+        let zmk = C64::new(zre[mk], -zim[mk]);
         let e = (zk + zmk).scale(0.5);
         let o = (zk - zmk) * C64::new(0.0, -0.5);
         // Cached e^{-iπk/m} (ROADMAP follow-up: no per-point sin_cos).
         out[k] = e + rp.twiddles[k] * o;
     }
     // X[m] = E[0] − O[0] (both real: Re(Z[0]) and Im(Z[0])).
-    out[m] = C64::real(z[0].re - z[0].im);
+    out[m] = C64::real(zre[0] - zim[0]);
     for k in 1..m {
         out[n - k] = out[k].conj();
     }
-    ws.give_c64(z);
+    ws.give_f64(zim);
+    ws.give_f64(zre);
 }
 
 /// Batched forward real FFT: `batch` signals packed **signal-major** in `xs`
@@ -313,23 +362,28 @@ pub fn inverse_real_into(spec: &mut [C64], ws: &mut FftWorkspace, out: &mut Vec<
     }
     let m = n / 2;
     let rp = ws.real_plan(n);
-    let mut z = ws.take_c64(m);
-    for (k, zk) in z.iter_mut().enumerate() {
+    // Native split planes, as in `fft_real_into`: build the half-length
+    // signal directly in f64 planes and run the batch=1 plane entry.
+    let mut zre = ws.take_f64(m);
+    let mut zim = ws.take_f64(m);
+    for k in 0..m {
         let a = spec[k];
         let b = spec[k + m];
         let e = (a + b).scale(0.5);
         // e^{+iπk/m} = conj of the cached forward twiddle.
         let o = ((a - b).scale(0.5)) * rp.twiddles[k].conj();
         // z[k] = E[k] + i·O[k]
-        *zk = C64::new(e.re - o.im, e.im + o.re);
+        zre[k] = e.re - o.im;
+        zim[k] = e.im + o.re;
     }
-    ws.process(&mut z, Dir::Inverse);
+    ws.process_planes(&mut zre, &mut zim, Dir::Inverse);
     out.resize(n, 0.0);
-    for (j, zj) in z.iter().enumerate() {
-        out[2 * j] = zj.re;
-        out[2 * j + 1] = zj.im;
+    for j in 0..m {
+        out[2 * j] = zre[j];
+        out[2 * j + 1] = zim[j];
     }
-    ws.give_c64(z);
+    ws.give_f64(zim);
+    ws.give_f64(zre);
 }
 
 /// Batched inverse of [`fft_real_many_into`]: `batch` Hermitian spectra in

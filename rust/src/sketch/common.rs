@@ -18,10 +18,12 @@
 
 use super::cs::CountSketch;
 use crate::fft::complex::ZERO;
-use crate::fft::{self, fft_real_many_into, C64, FftWorkspace};
+use crate::fft::{self, fft_real_many_into, inverse_real_many_into, C64, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::linalg::Matrix;
 use crate::tensor::{CpTensor, Tensor};
+
+pub(crate) use crate::fft::workspace::mul_lane_run;
 
 /// Upper bound on simultaneous lanes in the batched spectral transforms:
 /// wide enough to keep the batch (innermost SIMD) axis full with headroom,
@@ -29,28 +31,231 @@ use crate::tensor::{CpTensor, Tensor};
 /// pool-friendly at the largest practical transform lengths.
 pub(crate) const MAX_FFT_LANES: usize = 16;
 
-/// Multiply the complex product of `count` consecutive lanes
-/// `(sre, sim)[s..s+count]` of one lane-major frequency row into the
-/// accumulator `(pr, pi)`; with `conj` each lane enters conjugated (spectral
-/// correlation rather than convolution). The single home of the batched
-/// pointwise-product inner loop every spectral fold runs.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn mul_lane_run(
-    sre: &[f64],
-    sim: &[f64],
-    s: usize,
-    count: usize,
-    conj: bool,
-    pr: &mut f64,
-    pi: &mut f64,
-) {
-    for d in 0..count {
-        let qr = sre[s + d];
-        let qi = if conj { -sim[s + d] } else { sim[s + d] };
-        let t = *pr * qr - *pi * qi;
-        *pi = *pr * qi + *pi * qr;
-        *pr = t;
+// ---------------------------------------------------------------------------
+// SpectralDriver — the one pack → fold → inverse engine
+// ---------------------------------------------------------------------------
+
+/// How each group's spectral fold is seeded.
+pub(crate) enum FoldSeed<F> {
+    /// Start from the group's first packed lane; the fold multiplies the
+    /// remaining `lanes − 1` spectra into it (the convolution paths:
+    /// CP/rank-1 accumulation, deflation).
+    FirstLane,
+    /// Start from an external per-group spectrum value `(re, im)` at bin
+    /// `(group, k)`; the fold multiplies all `lanes` spectra into it (the
+    /// Eq. 17 correlation paths seed with the cached `F(st)`).
+    External(F),
+}
+
+/// `FoldSeed::FirstLane` with its closure slot pinned to a concrete fn type,
+/// so call sites need no turbofish.
+pub(crate) fn seed_first_lane() -> FoldSeed<fn(usize, usize) -> (f64, f64)> {
+    FoldSeed::FirstLane
+}
+
+/// The single batched **pack → `fft_real_many_into` → fold →
+/// `inverse_real_many_into`** engine behind every spectral consumer in the
+/// crate. Work is organized as *groups* of `lanes` equal-stride real signals
+/// (a CP rank's N mode sketches, one repetition's N−1 contracted-mode
+/// sketches, …); groups are processed in [`MAX_FFT_LANES`]-bounded chunks,
+/// each chunk's `gc·lanes` signals going through **one** batched forward
+/// transform, each bin folded batch-innermost via [`mul_lane_run`], and —
+/// on the [`Self::fold_inverse`] path — each chunk's `gc` product spectra
+/// returning through **one** batched inverse.
+///
+/// The three lane layouts the callers instantiate (rank-chunk CP
+/// accumulation, single-group mode-chunk rank-1/Eq. 17, cross-repetition
+/// estimator batching) and the two fold directions (convolution vs
+/// conjugated correlation) are all parameters of this one type — the
+/// estimator's former private chunk-loop scaffolding is gone.
+///
+/// Packing contract: `pack(g, lane, slot)` writes into a `stride`-length
+/// slot rented zeroed; a given lane index must fill the same prefix length
+/// on every chunk (all callers pack a fixed mode per lane position), so slot
+/// tails beyond each signal stay zero without per-chunk re-clearing.
+#[derive(Clone, Copy)]
+pub(crate) struct SpectralDriver {
+    /// Transform length.
+    pub n: usize,
+    /// Uniform per-lane slot stride in the packed input arena (`≤ n`).
+    pub stride: usize,
+    /// Real signals per group: `N` for convolution folds, `N − 1` for the
+    /// Eq. 17 correlation (the free mode contributes no spectrum).
+    pub lanes: usize,
+    /// Fold direction: `false` ⇒ convolution (plain spectral product),
+    /// `true` ⇒ conjugated correlation.
+    pub conj: bool,
+}
+
+impl SpectralDriver {
+    /// Convolution-fold driver (CP accumulation, rank-1 sketches, deflate).
+    pub fn convolve(n: usize, stride: usize, lanes: usize) -> Self {
+        Self { n, stride, lanes, conj: false }
+    }
+
+    /// Conjugated-correlation driver (the Eq. 17 correlate-and-gather).
+    pub fn correlate(n: usize, stride: usize, lanes: usize) -> Self {
+        Self { n, stride, lanes, conj: true }
+    }
+
+    /// Whole groups per batched chunk under the [`MAX_FFT_LANES`] cap.
+    #[inline]
+    pub fn groups_per_chunk(&self) -> usize {
+        (MAX_FFT_LANES / self.lanes.max(1)).max(1)
+    }
+
+    /// Pack → forward → fold into a complex accumulator: for every group
+    /// `g ∈ groups`, `acc[k] += weight(g) · fold_g[k]` (fold seeded from the
+    /// group's first lane). The caller inverts `acc` once at the end —
+    /// that is the R-IFFTs→1 trick of the CP fast path.
+    pub fn accumulate_spectra(
+        &self,
+        groups: std::ops::Range<usize>,
+        ws: &mut FftWorkspace,
+        mut pack: impl FnMut(usize, usize, &mut [f64]),
+        mut weight: impl FnMut(usize) -> f64,
+        acc: &mut [C64],
+    ) {
+        debug_assert_eq!(acc.len(), self.n);
+        if self.lanes == 0 || groups.is_empty() {
+            return;
+        }
+        let (n, nm, stride) = (self.n, self.lanes, self.stride);
+        let per = self.groups_per_chunk().min(groups.end - groups.start);
+        // Slot tails beyond each packed signal stay zero: the rental arrives
+        // zeroed and every chunk rewrites the same (lane-slot, prefix) layout.
+        let mut xs = ws.take_f64(per * nm * stride);
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        let mut g0 = groups.start;
+        while g0 < groups.end {
+            let gc = (groups.end - g0).min(per);
+            let lanes = gc * nm;
+            for gi in 0..gc {
+                for l in 0..nm {
+                    let slot = (gi * nm + l) * stride;
+                    pack(g0 + gi, l, &mut xs[slot..slot + stride]);
+                }
+            }
+            fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            for (k, a) in acc.iter_mut().enumerate() {
+                let row = k * lanes;
+                for gi in 0..gc {
+                    let s = row + gi * nm;
+                    let mut pr = sre[s];
+                    let mut pi = sim[s];
+                    mul_lane_run(&sre, &sim, s + 1, nm - 1, self.conj, &mut pr, &mut pi);
+                    let w = weight(g0 + gi);
+                    a.re += w * pr;
+                    a.im += w * pi;
+                }
+            }
+            g0 += gc;
+        }
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
+    }
+
+    /// Pack → forward → fold → batched inverse: for every group
+    /// `g ∈ 0..groups`, the folded product spectrum (seeded per `seed`) is
+    /// inverse-transformed and its length-`n` real signal handed to
+    /// `emit(g, signal)` — mutable, so emitters may truncate in place.
+    /// Chunks share one forward and one inverse dispatch each.
+    pub fn fold_inverse<F: FnMut(usize, usize) -> (f64, f64)>(
+        &self,
+        groups: usize,
+        ws: &mut FftWorkspace,
+        mut pack: impl FnMut(usize, usize, &mut [f64]),
+        mut seed: FoldSeed<F>,
+        mut emit: impl FnMut(usize, &mut [f64]),
+    ) {
+        if groups == 0 {
+            return;
+        }
+        debug_assert!(
+            self.lanes > 0 || matches!(seed, FoldSeed::External(_)),
+            "fold_inverse: a first-lane seed needs at least one lane"
+        );
+        let (n, nm, stride) = (self.n, self.lanes, self.stride);
+        let per = self.groups_per_chunk().min(groups);
+        let mut xs = ws.take_f64(per * nm * stride);
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        let mut izre = ws.take_f64(n * per);
+        let mut izim = ws.take_f64(n * per);
+        let mut z = ws.take_f64(0);
+        let mut g0 = 0usize;
+        while g0 < groups {
+            let gc = (groups - g0).min(per);
+            let lanes = gc * nm;
+            for gi in 0..gc {
+                for l in 0..nm {
+                    let slot = (gi * nm + l) * stride;
+                    pack(g0 + gi, l, &mut xs[slot..slot + stride]);
+                }
+            }
+            fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            for k in 0..n {
+                let srow = k * lanes;
+                let irow = k * gc;
+                for gi in 0..gc {
+                    let s = srow + gi * nm;
+                    let (mut pr, mut pi, skip) = match &mut seed {
+                        FoldSeed::FirstLane => (sre[s], sim[s], 1),
+                        FoldSeed::External(f) => {
+                            let (r, i) = f(g0 + gi, k);
+                            (r, i, 0)
+                        }
+                    };
+                    mul_lane_run(&sre, &sim, s + skip, nm - skip, self.conj, &mut pr, &mut pi);
+                    izre[irow + gi] = pr;
+                    izim[irow + gi] = pi;
+                }
+            }
+            inverse_real_many_into(&mut izre[..n * gc], &mut izim[..n * gc], gc, ws, &mut z);
+            for gi in 0..gc {
+                emit(g0 + gi, &mut z[gi * n..(gi + 1) * n]);
+            }
+            g0 += gc;
+        }
+        ws.give_f64(z);
+        ws.give_f64(izim);
+        ws.give_f64(izre);
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
+    }
+
+    /// Batched forward sweep over `groups` signal-major length-`n` real
+    /// signals (chunked at [`MAX_FFT_LANES`]), handing every spectrum value
+    /// to `emit(g, k, re, im)` — the deflation cache-coherency pass that
+    /// keeps each repetition's `F(st)` in step with its updated sketch.
+    pub fn forward_each(
+        &self,
+        signals: &[f64],
+        groups: usize,
+        ws: &mut FftWorkspace,
+        mut emit: impl FnMut(usize, usize, f64, f64),
+    ) {
+        let n = self.n;
+        debug_assert_eq!(signals.len(), groups * n);
+        let mut fre = ws.take_f64(0);
+        let mut fim = ws.take_f64(0);
+        let mut g0 = 0usize;
+        while g0 < groups {
+            let gc = (groups - g0).min(MAX_FFT_LANES);
+            fft_real_many_into(&signals[g0 * n..(g0 + gc) * n], n, gc, n, ws, &mut fre, &mut fim);
+            for k in 0..n {
+                let row = k * gc;
+                for gi in 0..gc {
+                    emit(g0 + gi, k, fre[row + gi], fim[row + gi]);
+                }
+            }
+            g0 += gc;
+        }
+        ws.give_f64(fim);
+        ws.give_f64(fre);
     }
 }
 
@@ -201,47 +406,46 @@ impl<'a> SpectralSketchCore<'a> {
         self.modes.iter().map(|m| m.range()).max().unwrap_or(0)
     }
 
-    /// Write `Π_d F(CS_d(vs[d]))` at `fft_len` points into `out`. All N mode
-    /// sketches are transformed by **one** batched call (`fft_real_many_into`
-    /// with the modes as lanes) and folded pointwise, batch innermost.
+    /// The driver for this core's fold direction/lane layout: `lanes` is the
+    /// signals-per-group count (`N` for convolution folds, `N−1` for the
+    /// Eq. 17 correlation), `conj` picks the fold direction.
+    #[inline]
+    pub(crate) fn driver(&self, lanes: usize, conj: bool) -> SpectralDriver {
+        let (n, stride) = (self.fft_len, self.mode_stride());
+        if conj {
+            SpectralDriver::correlate(n, stride, lanes)
+        } else {
+            SpectralDriver::convolve(n, stride, lanes)
+        }
+    }
+
+    /// Write `Π_d F(CS_d(vs[d]))` at `fft_len` points into `out`: one
+    /// single-group [`SpectralDriver`] accumulation (all N mode sketches in
+    /// one batched forward, folded batch-innermost).
     pub fn rank1_spectrum_into(&self, vs: &[&[f64]], ws: &mut FftWorkspace, out: &mut Vec<C64>) {
         // Hard assert (matching the pre-refactor inherent methods): a wrong
         // arity must fail loudly, not silently drop the extra vector in
         // release builds.
         assert_eq!(self.modes.len(), vs.len(), "rank-1 sketch arity mismatch");
-        let n = self.fft_len;
-        let nm = self.modes.len();
-        let stride = self.mode_stride();
-        let mut xs = ws.take_f64(nm * stride);
-        for (d, cs) in self.modes.iter().enumerate() {
-            let jd = cs.range();
-            cs.apply_into(vs[d], &mut xs[d * stride..d * stride + jd]);
-        }
-        let mut sre = ws.take_f64(0);
-        let mut sim = ws.take_f64(0);
-        fft_real_many_into(&xs, stride, nm, n, ws, &mut sre, &mut sim);
         out.clear();
-        out.resize(n, ZERO);
-        for (k, o) in out.iter_mut().enumerate() {
-            let row = k * nm;
-            let mut pr = sre[row];
-            let mut pi = sim[row];
-            mul_lane_run(&sre, &sim, row + 1, nm - 1, false, &mut pr, &mut pi);
-            o.re = pr;
-            o.im = pi;
-        }
-        ws.give_f64(sim);
-        ws.give_f64(sre);
-        ws.give_f64(xs);
+        out.resize(self.fft_len, ZERO);
+        self.driver(self.modes.len(), false).accumulate_spectra(
+            0..1,
+            ws,
+            |_, d, slot| {
+                let cs = &self.modes[d];
+                cs.apply_into(vs[d], &mut slot[..cs.range()]);
+            },
+            |_| 1.0,
+            out,
+        );
     }
 
     /// Accumulate `Σ_{r ∈ ranks} λ_r · Π_d F(CS_d(U_d[:, r]))` into `acc`
     /// (length `fft_len`). The caller inverts once at the end — R IFFTs → 1.
-    ///
-    /// Ranks are processed in chunks of whole ranks, all `chunk·N` mode
-    /// sketches of a chunk going through **one** batched forward transform
-    /// (instead of R·N single-plan dispatches); the fold below then reads
-    /// each rank's N spectra side by side in the lane-major planes.
+    /// One rank-chunk [`SpectralDriver`] accumulation: every chunk's
+    /// `chunk·N` mode sketches share one batched forward transform (instead
+    /// of R·N single-plan dispatches).
     pub fn accumulate_cp_spectra(
         &self,
         factors: &[Matrix],
@@ -252,47 +456,23 @@ impl<'a> SpectralSketchCore<'a> {
     ) {
         debug_assert_eq!(acc.len(), self.fft_len);
         debug_assert_eq!(self.modes.len(), factors.len());
+        assert!(
+            lambda.len() >= ranks.end,
+            "accumulate_cp_spectra: lambda shorter than rank range"
+        );
         if self.modes.is_empty() {
             return;
         }
-        let n = self.fft_len;
-        let nm = self.modes.len();
-        let stride = self.mode_stride();
-        let ranks_per = (MAX_FFT_LANES / nm).max(1);
-        // Slot tails beyond each mode's J_d stay zero: the rental arrives
-        // zeroed and every chunk rewrites the same (lane-slot, J_d) layout.
-        let mut xs = ws.take_f64(ranks_per * nm * stride);
-        let mut sre = ws.take_f64(0);
-        let mut sim = ws.take_f64(0);
-        let mut r0 = ranks.start;
-        while r0 < ranks.end {
-            let rc = (ranks.end - r0).min(ranks_per);
-            let lanes = rc * nm;
-            for ri in 0..rc {
-                for (d, cs) in self.modes.iter().enumerate() {
-                    let jd = cs.range();
-                    let slot = (ri * nm + d) * stride;
-                    cs.apply_into(factors[d].col(r0 + ri), &mut xs[slot..slot + jd]);
-                }
-            }
-            fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
-            for (k, a) in acc.iter_mut().enumerate() {
-                let row = k * lanes;
-                for ri in 0..rc {
-                    let s = row + ri * nm;
-                    let mut pr = sre[s];
-                    let mut pi = sim[s];
-                    mul_lane_run(&sre, &sim, s + 1, nm - 1, false, &mut pr, &mut pi);
-                    let lr = lambda[r0 + ri];
-                    a.re += lr * pr;
-                    a.im += lr * pi;
-                }
-            }
-            r0 += rc;
-        }
-        ws.give_f64(sim);
-        ws.give_f64(sre);
-        ws.give_f64(xs);
+        self.driver(self.modes.len(), false).accumulate_spectra(
+            ranks,
+            ws,
+            |r, d, slot| {
+                let cs = &self.modes[d];
+                cs.apply_into(factors[d].col(r), &mut slot[..cs.range()]);
+            },
+            |r| lambda[r],
+            acc,
+        );
     }
 
     /// Rank-parallel variant: chunks the CP ranks over `par_map` worker
@@ -390,47 +570,30 @@ impl<'a> SpectralSketchCore<'a> {
         out: &mut Vec<f64>,
     ) {
         debug_assert_eq!(st_fft.len(), self.fft_len);
-        let n = self.fft_len;
         let nm = self.modes.len();
-        let lanes = nm - 1;
-        let stride = self.mode_stride();
-        // One batched forward transform for the N−1 contracted-mode sketches.
-        let mut xs = ws.take_f64(lanes * stride);
-        let mut lane = 0usize;
-        for (d, cs) in self.modes.iter().enumerate() {
-            if d == mode {
-                continue;
-            }
-            let jd = cs.range();
-            cs.apply_into(vs[d], &mut xs[lane * stride..lane * stride + jd]);
-            lane += 1;
-        }
-        let mut sre = ws.take_f64(0);
-        let mut sim = ws.take_f64(0);
-        fft_real_many_into(&xs, stride, lanes, n, ws, &mut sre, &mut sim);
-        let mut fz = ws.take_c64(n);
-        for (k, z) in fz.iter_mut().enumerate() {
-            let mut pr = st_fft[k].re;
-            let mut pi = st_fft[k].im;
-            // conjugated factors: spectral correlation, not convolution
-            mul_lane_run(&sre, &sim, k * lanes, lanes, true, &mut pr, &mut pi);
-            z.re = pr;
-            z.im = pi;
-        }
-        ws.give_f64(sim);
-        ws.give_f64(sre);
-        ws.give_f64(xs);
-        let mut z = ws.take_f64(self.fft_len);
-        fft::inverse_real_into(&mut fz, ws, &mut z);
         let cs_m = &self.modes[mode];
         out.clear();
         out.resize(cs_m.domain(), 0.0);
-        for (i, o) in out.iter_mut().enumerate() {
-            let (b, s) = cs_m.basis(i);
-            *o = s * z[b];
-        }
-        ws.give_f64(z);
-        ws.give_c64(fz);
+        // One single-group correlation pass: the N−1 contracted-mode sketches
+        // share one batched forward, the fold is seeded with F(st), and the
+        // product returns through the driver's batched inverse.
+        self.driver(nm - 1, true).fold_inverse(
+            1,
+            ws,
+            |_, l, slot| {
+                let d = if l < mode { l } else { l + 1 };
+                let cs = &self.modes[d];
+                cs.apply_into(vs[d], &mut slot[..cs.range()]);
+            },
+            FoldSeed::External(|_, k: usize| (st_fft[k].re, st_fft[k].im)),
+            |_, z| {
+                // The mode-`mode` basis gather (Eq. 17's ⟨z, CS(e_i)⟩ trick).
+                for (i, o) in out.iter_mut().enumerate() {
+                    let (b, s) = cs_m.basis(i);
+                    *o = s * z[b];
+                }
+            },
+        );
     }
 }
 

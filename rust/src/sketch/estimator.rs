@@ -16,12 +16,12 @@
 //! `t_uuu`, the Eq. 17 correlate-and-gather behind `t_mode`, and the
 //! sketch-domain `deflate` — is written exactly once.
 
-use super::common::{mul_lane_run, SpectralSketchOp, MAX_FFT_LANES};
+use super::common::{seed_first_lane, FoldSeed, SpectralDriver, SpectralSketchOp};
 use super::cs::CountSketch;
 use super::fcs::FastCountSketch;
 use super::hcs::HigherOrderCountSketch;
 use super::ts::TensorSketch;
-use crate::fft::{self, fft_real_many_into, inverse_real_many_into, FftWorkspace};
+use crate::fft::{self, FftWorkspace};
 use crate::hash::{HashPair, ModeHashes};
 use crate::tensor::{contract_all_but, t_iuu, t_uuu, Tensor};
 use crate::util::parallel::par_map;
@@ -80,7 +80,9 @@ pub trait ContractionEstimator: Send + Sync {
     fn hash_bytes(&self) -> usize;
 }
 
-/// Elementwise median across `D` equal-length vectors.
+/// Elementwise median across `D` equal-length vectors. NaN-tolerant:
+/// `total_cmp` ordering (NaN sorts to the tail) — a degenerate sketch must
+/// yield a degenerate *estimate*, never a panic in a serving worker.
 pub fn elementwise_median(rows: &[Vec<f64>]) -> Vec<f64> {
     assert!(!rows.is_empty());
     let n = rows[0].len();
@@ -93,7 +95,7 @@ pub fn elementwise_median(rows: &[Vec<f64>]) -> Vec<f64> {
         for (b, row) in buf.iter_mut().zip(rows) {
             *b = row[i];
         }
-        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        buf.sort_unstable_by(f64::total_cmp);
         out[i] = crate::util::timing::percentile_sorted(&buf, 50.0);
     }
     out
@@ -124,15 +126,9 @@ pub fn elementwise_median_flat(
         for r in 0..d {
             scratch[r] = rows[r * n + i];
         }
-        scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        scratch.sort_unstable_by(f64::total_cmp);
         out[i] = crate::util::timing::percentile_sorted(scratch, 50.0);
     }
-}
-
-/// Median of a small sample, sorting in place (allocation-free).
-fn median_inplace_sorted(xs: &mut [f64]) -> f64 {
-    xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-    crate::util::timing::percentile_sorted(xs, 50.0)
 }
 
 /// Repetition fan-out threshold for estimator queries: enough independent
@@ -508,7 +504,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
                 rep.op.apply_rank1_into(&[u, u, u], ws, &mut sk);
                 ests[i] = crate::linalg::dot(&rep.st, &sk);
             }
-            let m = median_inplace_sorted(&mut ests);
+            let m = crate::util::timing::median_inplace(&mut ests);
             ws.give_f64(sk);
             ws.give_f64(ests);
             m
@@ -537,84 +533,44 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
             out.extend_from_slice(&med);
             return;
         }
-        // Serial path, batched across repetitions in MAX_FFT_LANES-bounded
-        // chunks (same cap as the core's rank chunking, so the lane-major
-        // planes stay cache- and pool-friendly): per chunk, ONE forward
-        // transform for the chunk's D_c·(N−1) contracted-mode sketches, the
-        // per-rep Eq. 17 products folded lane-major against each cached
-        // F(st), then ONE batched inverse for the D_c correlation signals —
-        // instead of D·N plan dispatches per query.
-        let n = self.fft_len;
-        let lanes_per = nm - 1;
-        let stride = self.mode_stride();
-        let reps_per = if lanes_per == 0 {
-            d_reps
-        } else {
-            (MAX_FFT_LANES / lanes_per).max(1).min(d_reps)
-        };
+        // Serial path: one cross-repetition SpectralDriver correlation pass.
+        // The driver chunks repetitions at its MAX_FFT_LANES cap — per chunk,
+        // ONE forward transform for the chunk's D_c·(N−1) contracted-mode
+        // sketches, the per-rep Eq. 17 fold seeded with each cached F(st),
+        // and ONE batched inverse for the D_c correlation signals — instead
+        // of D·N plan dispatches per query.
+        let driver =
+            SpectralDriver::correlate(self.fft_len, self.mode_stride(), nm.saturating_sub(1));
+        let reps = &self.reps;
         fft::with_thread_workspace(|ws| {
-            let mut xs = ws.take_f64(reps_per * lanes_per * stride);
-            let mut sre = ws.take_f64(0);
-            let mut sim = ws.take_f64(0);
-            let mut izre = ws.take_f64(n * reps_per);
-            let mut izim = ws.take_f64(n * reps_per);
-            let mut z = ws.take_f64(0);
             let mut rows = ws.take_f64(d_reps * im);
-            let mut r0 = 0usize;
-            while r0 < d_reps {
-                let rc = (d_reps - r0).min(reps_per);
-                let batch = rc * lanes_per;
-                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
-                    let core = rep.op.core();
-                    let mut lane = ci * lanes_per;
-                    for (d, cs) in core.modes.iter().enumerate() {
-                        if d == mode {
-                            continue;
-                        }
-                        let jd = cs.range();
-                        cs.apply_into(vs[d], &mut xs[lane * stride..lane * stride + jd]);
-                        lane += 1;
-                    }
-                }
-                fft_real_many_into(&xs[..batch * stride], stride, batch, n, ws, &mut sre, &mut sim);
-                // One inverse lane per repetition in the chunk:
-                // F(st_r)·Π_{d≠mode} conj(F(CS_d(v_d))).
-                for k in 0..n {
-                    let srow = k * batch;
-                    let irow = k * rc;
-                    for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
-                        let mut pr = rep.st_fft[k].re;
-                        let mut pi = rep.st_fft[k].im;
-                        let s = srow + ci * lanes_per;
-                        mul_lane_run(&sre, &sim, s, lanes_per, true, &mut pr, &mut pi);
-                        izre[irow + ci] = pr;
-                        izim[irow + ci] = pi;
-                    }
-                }
-                inverse_real_many_into(&mut izre[..n * rc], &mut izim[..n * rc], rc, ws, &mut z);
-                // Per-rep mode-basis gather (Eq. 17's ⟨z, CS(e_i)⟩ trick).
-                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
-                    let cs_m = &rep.op.core().modes[mode];
-                    let zr = &z[ci * n..(ci + 1) * n];
-                    let row = (r0 + ci) * im;
-                    for (i, o) in rows[row..row + im].iter_mut().enumerate() {
+            driver.fold_inverse(
+                d_reps,
+                ws,
+                |g, l, slot| {
+                    let core = reps[g].op.core();
+                    let d = if l < mode { l } else { l + 1 };
+                    let cs = &core.modes[d];
+                    cs.apply_into(vs[d], &mut slot[..cs.range()]);
+                },
+                FoldSeed::External(|g: usize, k: usize| {
+                    let f = reps[g].st_fft[k];
+                    (f.re, f.im)
+                }),
+                |g, z| {
+                    // Per-rep mode-basis gather (Eq. 17's ⟨z, CS(e_i)⟩ trick).
+                    let cs_m = &reps[g].op.core().modes[mode];
+                    for (i, o) in rows[g * im..g * im + im].iter_mut().enumerate() {
                         let (bk, s) = cs_m.basis(i);
-                        *o = s * zr[bk];
+                        *o = s * z[bk];
                     }
-                }
-                r0 += rc;
-            }
+                },
+            );
             // Elementwise median across all repetitions.
             let mut scratch = ws.take_f64(d_reps);
             elementwise_median_flat(&rows, d_reps, im, &mut scratch, out);
             ws.give_f64(scratch);
             ws.give_f64(rows);
-            ws.give_f64(z);
-            ws.give_f64(izim);
-            ws.give_f64(izre);
-            ws.give_f64(sim);
-            ws.give_f64(sre);
-            ws.give_f64(xs);
         });
     }
 
@@ -624,89 +580,51 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
     }
 
     fn deflate(&mut self, lambda: f64, vs: &[&[f64]]) {
-        // Batched sketch-domain rank-1 subtraction, chunked across
-        // repetitions at MAX_FFT_LANES lanes: per chunk, ONE forward
-        // transform for the D_c·N mode sketches, per-rep spectral products
-        // folded lane-major, ONE batched inverse for the D_c rank-1
-        // sketches, and one batched forward of the truncated sketches to
-        // keep every F(st) cache coherent (F is linear) — instead of
-        // D·(N+1) plan dispatches.
+        // Batched sketch-domain rank-1 subtraction: one cross-repetition
+        // SpectralDriver convolution pass (per chunk, ONE forward for the
+        // D_c·N mode sketches and ONE batched inverse for the D_c rank-1
+        // sketches), then one batched forward sweep of the truncated
+        // signals to keep every F(st) cache coherent (F is linear) —
+        // instead of D·(N+1) plan dispatches.
         let (sketch_len, n) = (self.sketch_len, self.fft_len);
         let d_reps = self.reps.len();
         let nm = self.reps[0].op.core().modes.len();
         assert_eq!(vs.len(), nm, "deflate: rank-1 arity mismatch");
-        let stride = self.mode_stride();
-        let reps_per = (MAX_FFT_LANES / nm).max(1).min(d_reps);
+        let driver = SpectralDriver::convolve(n, self.mode_stride(), nm);
         fft::with_thread_workspace(|ws| {
-            let mut xs = ws.take_f64(reps_per * nm * stride);
-            let mut sre = ws.take_f64(0);
-            let mut sim = ws.take_f64(0);
-            let mut izre = ws.take_f64(n * reps_per);
-            let mut izim = ws.take_f64(n * reps_per);
-            let mut sk = ws.take_f64(0);
-            let mut fre = ws.take_f64(0);
-            let mut fim = ws.take_f64(0);
-            let mut r0 = 0usize;
-            while r0 < d_reps {
-                let rc = (d_reps - r0).min(reps_per);
-                let batch = rc * nm;
-                for (ci, rep) in self.reps[r0..r0 + rc].iter().enumerate() {
-                    let core = rep.op.core();
-                    for (d, cs) in core.modes.iter().enumerate() {
-                        let jd = cs.range();
-                        let slot = (ci * nm + d) * stride;
-                        cs.apply_into(vs[d], &mut xs[slot..slot + jd]);
-                    }
-                }
-                fft_real_many_into(
-                    &xs[..batch * stride],
-                    stride,
-                    batch,
-                    n,
+            // The subtracted rank-1 sketch signals, signal-major — truncated
+            // to sketch_len (tails zeroed) so the cache update below sees
+            // exactly the signal taken out of each `st`.
+            let mut sk_all = ws.take_f64(d_reps * n);
+            {
+                let reps = &self.reps;
+                driver.fold_inverse(
+                    d_reps,
                     ws,
-                    &mut sre,
-                    &mut sim,
+                    |g, d, slot| {
+                        let cs = &reps[g].op.core().modes[d];
+                        cs.apply_into(vs[d], &mut slot[..cs.range()]);
+                    },
+                    seed_first_lane(),
+                    |g, z| {
+                        for v in z[sketch_len..].iter_mut() {
+                            *v = 0.0;
+                        }
+                        sk_all[g * n..(g + 1) * n].copy_from_slice(z);
+                    },
                 );
-                for k in 0..n {
-                    let srow = k * batch;
-                    let irow = k * rc;
-                    for ci in 0..rc {
-                        let s = srow + ci * nm;
-                        let mut pr = sre[s];
-                        let mut pi = sim[s];
-                        mul_lane_run(&sre, &sim, s + 1, nm - 1, false, &mut pr, &mut pi);
-                        izre[irow + ci] = pr;
-                        izim[irow + ci] = pi;
-                    }
-                }
-                inverse_real_many_into(&mut izre[..n * rc], &mut izim[..n * rc], rc, ws, &mut sk);
-                // Truncate each lane to sketch_len, zeroing the tail so the
-                // F(st) cache update sees exactly the subtracted signal.
-                for ci in 0..rc {
-                    for v in sk[ci * n + sketch_len..(ci + 1) * n].iter_mut() {
-                        *v = 0.0;
-                    }
-                }
-                for (ci, rep) in self.reps[r0..r0 + rc].iter_mut().enumerate() {
-                    crate::linalg::axpy(-lambda, &sk[ci * n..ci * n + sketch_len], &mut rep.st);
-                }
-                fft_real_many_into(&sk[..n * rc], n, rc, n, ws, &mut fre, &mut fim);
-                for (ci, rep) in self.reps[r0..r0 + rc].iter_mut().enumerate() {
-                    for (k, x) in rep.st_fft.iter_mut().enumerate() {
-                        x.re -= lambda * fre[k * rc + ci];
-                        x.im -= lambda * fim[k * rc + ci];
-                    }
-                }
-                r0 += rc;
             }
-            ws.give_f64(fim);
-            ws.give_f64(fre);
-            ws.give_f64(sk);
-            ws.give_f64(izim);
-            ws.give_f64(izre);
-            ws.give_f64(sim);
-            ws.give_f64(sre);
-            ws.give_f64(xs);
+            for (g, rep) in self.reps.iter_mut().enumerate() {
+                crate::linalg::axpy(-lambda, &sk_all[g * n..g * n + sketch_len], &mut rep.st);
+            }
+            // Cache-coherency sweep: F(st) ← F(st) − λ·F(subtracted signal).
+            let reps = &mut self.reps;
+            driver.forward_each(&sk_all, d_reps, ws, |g, k, fr, fi| {
+                let x = &mut reps[g].st_fft[k];
+                x.re -= lambda * fr;
+                x.im -= lambda * fi;
+            });
+            ws.give_f64(sk_all);
         });
     }
 

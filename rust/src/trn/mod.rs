@@ -197,9 +197,10 @@ pub fn train_and_eval(rt: &RuntimeHandle, cfg: &TrnRunConfig) -> Result<TrnRunRe
         for row in 0..batch {
             let pred = (0..NUM_CLASSES)
                 .max_by(|&a, &b| {
+                    // total_cmp: a NaN logit (diverged training) must not
+                    // panic the evaluation loop.
                     logits.data[row * NUM_CLASSES + a]
-                        .partial_cmp(&logits.data[row * NUM_CLASSES + b])
-                        .unwrap()
+                        .total_cmp(&logits.data[row * NUM_CLASSES + b])
                 })
                 .unwrap();
             if pred as i32 == y[row] {
@@ -230,7 +231,7 @@ pub fn available_cr_tags(rt: &RuntimeHandle, method: TrnMethod) -> Vec<(f64, Str
                 .map(|tag| (e.meta_f64("cr").unwrap_or(0.0), tag.to_string()))
         })
         .collect();
-    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out.sort_by(|a, b| a.0.total_cmp(&b.0));
     out
 }
 

@@ -61,10 +61,10 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_unstable_by(f64::total_cmp);
         let median = percentile_sorted(&sorted, 50.0);
         let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_unstable_by(f64::total_cmp);
         let mad = percentile_sorted(&devs, 50.0) * 1.4826;
         Summary {
             n,
@@ -81,8 +81,16 @@ impl Summary {
 }
 
 /// Linear-interpolated percentile of an ascending-sorted slice.
+///
+/// **Non-panicking contract** (the estimator/coordinator hot paths call this
+/// on worker threads a panic would permanently shrink): an empty slice
+/// returns `NaN` — a degenerate *value* the caller can observe — instead of
+/// asserting. Callers sort with [`f64::total_cmp`], so NaN inputs land at
+/// the tail rather than aborting the sort.
 pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -93,11 +101,35 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Median of a possibly-unsorted slice (does not mutate the input).
+/// Median of a mutable scratch sample — the allocation-free, NaN-tolerant
+/// primitive the estimator and decompression hot paths share. Selection
+/// (O(n) `select_nth_unstable_by` under `total_cmp`) rather than a full
+/// sort; empty ⇒ `NaN`, never panics. Matches `percentile_sorted(·, 50)` on
+/// a sorted copy: odd n takes the middle element, even n averages the two.
+pub fn median_inplace(xs: &mut [f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n == 1 {
+        return xs[0];
+    }
+    let mid = n / 2;
+    let (_, &mut upper_med, _) = xs.select_nth_unstable_by(mid, |a, b| a.total_cmp(b));
+    if n % 2 == 1 {
+        upper_med
+    } else {
+        // lower median = max of the left partition
+        let lower_med = xs[..mid].iter().fold(f64::NEG_INFINITY, |m, &x| m.max(x));
+        0.5 * (lower_med + upper_med)
+    }
+}
+
+/// Median of a possibly-unsorted slice (does not mutate the input;
+/// allocates — use [`median_inplace`] on hot paths).
 pub fn median(xs: &[f64]) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&v, 50.0)
+    median_inplace(&mut v)
 }
 
 #[cfg(test)]
@@ -130,6 +162,19 @@ mod tests {
     fn mad_robust_to_outlier() {
         let s = Summary::of(&[1.0, 1.0, 1.0, 1.0, 100.0]);
         assert!(s.mad < 1.0, "mad should ignore the outlier, got {}", s.mad);
+    }
+
+    #[test]
+    fn nan_inputs_do_not_panic() {
+        // Regression (PR 5): a NaN from a degenerate sketch used to abort
+        // the partial_cmp sort; total_cmp sends it to the tail instead.
+        let m = median(&[f64::NAN, 1.0, 2.0]);
+        assert_eq!(m, 2.0, "NaN must sort last, leaving the finite median");
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.median, 3.0); // [1, 3, NaN] under total_cmp
+        let mut buf = [4.0, f64::NAN, 0.0];
+        assert_eq!(median_inplace(&mut buf), 4.0);
+        assert!(percentile_sorted(&[], 50.0).is_nan(), "empty sample yields NaN, not a panic");
     }
 
     #[test]

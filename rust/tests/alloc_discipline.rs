@@ -177,7 +177,7 @@ fn hot_paths_are_allocation_free_in_steady_state() {
     {
         let dim = 10usize;
         let t = Tensor::randn(&mut rng, &[dim, dim, dim]);
-        let est = FcsEstimator::build(&t, 3, 16, &mut rng);
+        let mut est = FcsEstimator::build(&t, 3, 16, &mut rng);
         let u = rng.normal_vec(dim);
         let v = rng.normal_vec(dim);
         let w = rng.normal_vec(dim);
@@ -201,6 +201,18 @@ fn hot_paths_are_allocation_free_in_steady_state() {
             n, 0,
             "FcsEstimator t_mode_into/t_iuu_into/t_uuu allocated {n} times in steady state"
         );
+        // Sketch-domain deflation (the RTPM outer loop): one SpectralDriver
+        // convolution pass + the batched F(st) coherency sweep — zero
+        // allocations once the workspace pools are warm.
+        for _ in 0..3 {
+            est.deflate(1e-3, &vs);
+        }
+        let n = allocs_of(|| {
+            for _ in 0..5 {
+                est.deflate(1e-3, &vs);
+            }
+        });
+        assert_eq!(n, 0, "FcsEstimator deflate allocated {n} times in steady state");
     }
 
     // --- coordinator WorkerState: the service's sketch_dense / sketch_cp /

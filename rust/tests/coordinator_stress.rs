@@ -170,6 +170,96 @@ fn shutdown_under_fire_loses_no_response() {
 }
 
 #[test]
+fn poison_jobs_never_lose_responses_and_workers_survive() {
+    // Adversarial/degenerate traffic interleaved with healthy jobs: NaN
+    // tensors (estimator medians must be NaN-tolerant, not panic) and NaN CP
+    // factors (in debug builds the non-Hermitian-residue kernel assert fires
+    // — the per-job catch_unwind must convert that into an Exec error, keep
+    // the worker alive, and keep every other drained job's reply flowing).
+    // The contract under test: EVERY accepted submission resolves, and the
+    // healthy jobs around the poison keep producing finite sketches.
+    let svc = start(2, 512);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(0xBAD);
+    let nan_tensor = |rng: &mut Rng, shape: &[usize]| {
+        let mut t = Tensor::randn(rng, shape);
+        let mid = t.data.len() / 2;
+        t.data[0] = f64::NAN;
+        t.data[mid] = f64::NAN;
+        t
+    };
+    let nan_cp = |rng: &mut Rng| {
+        let mut cp = CpTensor::randn(rng, &[5, 4, 6], 2);
+        cp.factors[1].data[3] = f64::NAN;
+        cp
+    };
+    let mut rxs = Vec::new();
+    let total = 160usize;
+    for i in 0..total {
+        let req = match i % 4 {
+            0 => Request::SketchDense {
+                tensor: Tensor::randn(&mut rng, &[6, 6, 6]),
+                method: SketchMethod::Fcs,
+                j: 16,
+            },
+            1 => Request::InnerEstimate {
+                a: nan_tensor(&mut rng, &[4, 4, 4]),
+                b: nan_tensor(&mut rng, &[4, 4, 4]),
+                method: SketchMethod::Fcs,
+                j: 24,
+                d: 3,
+            },
+            2 => Request::SketchCp { cp: nan_cp(&mut rng), j: 12 },
+            _ => Request::SketchCp { cp: CpTensor::randn(&mut rng, &[5, 5, 5], 2), j: 12 },
+        };
+        rxs.push(h.submit(req).expect("validation must accept these"));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("job {i}: reply sender dropped — response lost"));
+        match (i % 4, resp) {
+            // Healthy jobs must succeed with finite payloads even when a
+            // poison job panicked earlier in the same drained batch.
+            (0, Ok(Response::Sketch(v))) | (3, Ok(Response::Sketch(v))) => {
+                assert!(!v.is_empty());
+                assert!(v.iter().all(|x| x.is_finite()), "job {i}: healthy sketch corrupted");
+            }
+            (0, other) | (3, other) => panic!("job {i}: healthy job failed: {other:?}"),
+            // NaN inner estimates: a NaN scalar (total_cmp median) is fine;
+            // a caught panic surfacing as Exec is fine; a lost reply is not.
+            (1, Ok(Response::Scalar(_))) => {}
+            (1, Err(ServiceError::Exec(_))) => {}
+            (1, other) => panic!("job {i}: unexpected NaN-estimate outcome: {other:?}"),
+            // NaN CP sketches: debug builds trip the Hermitian-residue
+            // assert (caught → Exec); release builds return a NaN sketch.
+            (2, Ok(Response::Sketch(_))) => {}
+            (2, Err(ServiceError::Exec(msg))) => {
+                assert!(msg.contains("panicked"), "job {i}: unexpected Exec: {msg}");
+            }
+            (2, other) => panic!("job {i}: unexpected poison-CP outcome: {other:?}"),
+            _ => unreachable!("i % 4 ∈ 0..4"),
+        }
+    }
+    // The pool must still be fully alive: a healthy tail job round-trips.
+    let tail = h
+        .call(Request::SketchDense {
+            tensor: Tensor::randn(&mut rng, &[6, 6, 6]),
+            method: SketchMethod::Ts,
+            j: 16,
+        })
+        .expect("worker pool dead after poison batch");
+    let Response::Sketch(v) = tail else { panic!("wrong response kind") };
+    assert!(v.iter().all(|x| x.is_finite()));
+    // Books reconcile: every accepted job (poison included) was recorded
+    // exactly once — panicked jobs still count as completed-with-error.
+    let report = svc.stats();
+    assert_eq!(report.total_completed as usize, total + 1, "stats lost a job");
+    assert_eq!(report.rejected_busy, 0);
+    svc.shutdown();
+}
+
+#[test]
 fn repeated_start_shutdown_cycles_are_clean() {
     // Shutdown determinism: cycles must neither deadlock nor leak panics,
     // with and without in-flight work.

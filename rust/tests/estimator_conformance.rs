@@ -199,6 +199,137 @@ fn cp_spectral_path_matches_oracle_and_dense_equalized() {
 }
 
 #[test]
+fn driver_routed_t_mode_and_deflate_match_per_rep_oracle() {
+    // PR 5 pin: the estimator's serial t_mode/deflate no longer own any FFT
+    // chunk loops — both dispatch through the core's SpectralDriver. This
+    // rebuilds each answer per repetition from the *independent*
+    // single-signal kernels (`spectral_corr` = fft_real_into /
+    // inverse_real_into chains, `conv_linear_many` / `conv_circular_many`
+    // for the rank-1 subtraction) under shared hash draws, and pins the
+    // driver-batched cross-repetition path to the looped oracle — before
+    // AND after a sketch-domain deflation (which also pins the F(st) cache
+    // coherency the driver's forward sweep maintains).
+    qcheck(4, |g| {
+        let shape = [g.usize_in(3, 6), g.usize_in(4, 7), g.usize_in(3, 6)];
+        let t = Tensor::randn(g.rng(), &shape);
+        let j = g.usize_in(5, 11);
+        let d_reps = g.usize_in(2, 4);
+        let hashes: Vec<ModeHashes> = (0..d_reps)
+            .map(|_| ModeHashes::draw_uniform(g.rng(), &shape, j))
+            .collect();
+        let v0 = g.normal_vec(shape[0]);
+        let v1 = g.normal_vec(shape[1]);
+        let v2 = g.normal_vec(shape[2]);
+        let vs: [&[f64]; 3] = [&v0, &v1, &v2];
+        let lambda = g.f64_in(-1.5, 1.5);
+
+        // Per-rep sketches under the SAME draws, deflated by hand via the
+        // independent convolution kernels.
+        let fcs_ops: Vec<FastCountSketch> =
+            hashes.iter().map(|h| FastCountSketch::new(h.clone())).collect();
+        let ts_ops: Vec<TensorSketch> =
+            hashes.iter().map(|h| TensorSketch::new(h.clone())).collect();
+        let rank1_fcs = |op: &FastCountSketch| {
+            let sk: Vec<Vec<f64>> =
+                op.modes.iter().zip(&vs).map(|(cs, v)| cs.apply(v)).collect();
+            let refs: Vec<&[f64]> = sk.iter().map(|v| v.as_slice()).collect();
+            fcs::fft::conv_linear_many(&refs)
+        };
+        let rank1_ts = |op: &TensorSketch| {
+            let sk: Vec<Vec<f64>> =
+                op.modes.iter().zip(&vs).map(|(cs, v)| cs.apply(v)).collect();
+            let refs: Vec<&[f64]> = sk.iter().map(|v| v.as_slice()).collect();
+            fcs::fft::conv_circular_many(&refs)
+        };
+        // Looped oracle for one free mode over a set of per-rep sketches.
+        fn oracle_t_mode(
+            sts: &[Vec<f64>],
+            per_rep_modes: &[Vec<&fcs::sketch::CountSketch>],
+            vs: &[&[f64]; 3],
+            n: usize,
+            mode: usize,
+        ) -> Vec<f64> {
+            let rows: Vec<Vec<f64>> = sts
+                .iter()
+                .zip(per_rep_modes)
+                .map(|(st, cs)| {
+                    let contracted: Vec<Vec<f64>> = (0..3)
+                        .filter(|&d| d != mode)
+                        .map(|d| cs[d].apply(vs[d]))
+                        .collect();
+                    let refs: Vec<&[f64]> = contracted.iter().map(|v| v.as_slice()).collect();
+                    let z = fcs::fft::spectral_corr(st, &refs, n);
+                    (0..cs[mode].domain())
+                        .map(|i| {
+                            let (b, s) = cs[mode].basis(i);
+                            s * z[b]
+                        })
+                        .collect()
+                })
+                .collect();
+            fcs::sketch::elementwise_median(&rows)
+        }
+
+        // FCS: driver path vs oracle, fresh and deflated.
+        let mut fcs_est = fcs::sketch::FcsEstimator::build_with_hashes(&t, &hashes);
+        let mut fcs_sts: Vec<Vec<f64>> = fcs_ops.iter().map(|op| op.apply_dense(&t)).collect();
+        let n_fcs = fcs_ops[0].fft_len();
+        let fcs_modes: Vec<Vec<&fcs::sketch::CountSketch>> =
+            fcs_ops.iter().map(|op| op.modes.iter().collect()).collect();
+        for mode in 0..3 {
+            let got = fcs_est.t_mode(mode, &vs);
+            let want = oracle_t_mode(&fcs_sts, &fcs_modes, &vs, n_fcs, mode);
+            assert_close(&got, &want, 1e-8, &format!("case {}: fcs t_mode {mode}", g.case));
+        }
+        fcs_est.deflate(lambda, &vs);
+        for (op, st) in fcs_ops.iter().zip(fcs_sts.iter_mut()) {
+            let r1 = rank1_fcs(op);
+            for (x, y) in st.iter_mut().zip(&r1) {
+                *x -= lambda * y;
+            }
+        }
+        for mode in 0..3 {
+            let got = fcs_est.t_mode(mode, &vs);
+            let want = oracle_t_mode(&fcs_sts, &fcs_modes, &vs, n_fcs, mode);
+            assert_close(
+                &got,
+                &want,
+                1e-7,
+                &format!("case {}: fcs deflated t_mode {mode}", g.case),
+            );
+        }
+
+        // TS: same contract on the circular parameterization.
+        let mut ts_est = fcs::sketch::TsEstimator::build_with_hashes(&t, &hashes);
+        let mut ts_sts: Vec<Vec<f64>> = ts_ops.iter().map(|op| op.apply_dense(&t)).collect();
+        let ts_modes: Vec<Vec<&fcs::sketch::CountSketch>> =
+            ts_ops.iter().map(|op| op.modes.iter().collect()).collect();
+        for mode in 0..3 {
+            let got = ts_est.t_mode(mode, &vs);
+            let want = oracle_t_mode(&ts_sts, &ts_modes, &vs, j, mode);
+            assert_close(&got, &want, 1e-8, &format!("case {}: ts t_mode {mode}", g.case));
+        }
+        ts_est.deflate(lambda, &vs);
+        for (op, st) in ts_ops.iter().zip(ts_sts.iter_mut()) {
+            let r1 = rank1_ts(op);
+            for (x, y) in st.iter_mut().zip(&r1) {
+                *x -= lambda * y;
+            }
+        }
+        for mode in 0..3 {
+            let got = ts_est.t_mode(mode, &vs);
+            let want = oracle_t_mode(&ts_sts, &ts_modes, &vs, j, mode);
+            assert_close(
+                &got,
+                &want,
+                1e-7,
+                &format!("case {}: ts deflated t_mode {mode}", g.case),
+            );
+        }
+    });
+}
+
+#[test]
 fn median_of_reps_unbiased_within_tolerance() {
     // Statistical contract: averaging many independent D=3 median estimates
     // of T(u,u,u) recovers the true contraction within a generous

@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Bench trend guard.
+
+Folds the quick-bench JSON emitted by `scripts/verify.sh` (the `bench-results`
+CI artifact: `results/*.json` and/or `rust/results/*.json`) into one
+`BENCH_pr<N>.json` snapshot at the repo root — seeding the bench trajectory —
+and fails (exit 2) on a >20% regression against the newest committed
+`BENCH_pr*.json` baseline once one exists.
+
+Metric extraction is generic so new bench rows join the trajectory for free:
+
+* every numeric field named `secs*`/`*_secs` is a lower-is-better timing;
+* every numeric field named `speedup*` is a higher-is-better ratio;
+* rows are identified by their source file, `path` field, and any of the
+  qualifier fields (rank, n, lanes, batch, d_reps, j) present.
+
+Usage:
+    scripts/bench_trend.py [--results DIR ...] [--out BENCH_pr5.json]
+                           [--threshold 0.20] [--soft]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+QUALIFIERS = ("rank", "n", "lanes", "batch", "d_reps", "j")
+TIMING_RE = re.compile(r"(^secs|_secs$)")
+SPEEDUP_RE = re.compile(r"^speedup")
+
+
+def record_id(source: str, row: dict) -> str:
+    parts = [source]
+    path = row.get("path")
+    if isinstance(path, str):
+        parts.append(path)
+    for q in QUALIFIERS:
+        v = row.get(q)
+        if isinstance(v, (int, float)):
+            parts.append(f"{q}={v:g}")
+    return ":".join(parts)
+
+
+def extract_metrics(results_dirs: list[str]) -> dict[str, dict]:
+    """metric id -> {"value": float, "better": "lower"|"higher"}"""
+    metrics: dict[str, dict] = {}
+    for d in results_dirs:
+        for fp in sorted(glob.glob(os.path.join(d, "*.json"))):
+            source = os.path.splitext(os.path.basename(fp))[0]
+            try:
+                with open(fp) as f:
+                    rows = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"[bench-trend] skipping unreadable {fp}: {e}")
+                continue
+            if not isinstance(rows, list):
+                rows = [rows]
+            for row in rows:
+                if not isinstance(row, dict):
+                    continue
+                rid = record_id(source, row)
+                for key, val in row.items():
+                    if not isinstance(val, (int, float)):
+                        continue
+                    if TIMING_RE.search(key):
+                        better = "lower"
+                    elif SPEEDUP_RE.search(key):
+                        better = "higher"
+                    else:
+                        continue
+                    metrics[f"{rid}:{key}"] = {"value": float(val), "better": better}
+    return metrics
+
+
+def newest_baseline(repo_root: str) -> str | None:
+    """The committed BENCH_pr<N>.json with the highest N — including the
+    file this run is about to overwrite (its committed content IS the
+    baseline), so the gate arms without bumping --out every PR."""
+    best, best_n = None, -1
+    for fp in glob.glob(os.path.join(repo_root, "BENCH_pr*.json")):
+        m = re.match(r"BENCH_pr(\d+)\.json$", os.path.basename(fp))
+        if m and int(m.group(1)) > best_n:
+            best, best_n = fp, int(m.group(1))
+    return best
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--results",
+        nargs="*",
+        default=["results", "rust/results"],
+        help="directories holding the bench JSON (default: results rust/results)",
+    )
+    ap.add_argument("--out", default="BENCH_pr5.json", help="snapshot file at the repo root")
+    ap.add_argument("--threshold", type=float, default=0.20, help="regression gate (fraction)")
+    ap.add_argument("--soft", action="store_true", help="report regressions but exit 0")
+    args = ap.parse_args()
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    results_dirs = [d if os.path.isabs(d) else os.path.join(repo_root, d) for d in args.results]
+    metrics = extract_metrics(results_dirs)
+    if not metrics:
+        print("[bench-trend] no bench results found — nothing to snapshot")
+        return 0
+
+    # Read the baseline BEFORE overwriting the snapshot: when --out names the
+    # already-committed file, its committed content is the baseline.
+    baseline_path = newest_baseline(repo_root)
+    baseline = {}
+    if baseline_path is not None:
+        with open(baseline_path) as f:
+            baseline = json.load(f).get("metrics", {})
+
+    out_path = os.path.join(repo_root, os.path.basename(args.out))
+    snapshot = {"metrics": metrics}
+    with open(out_path, "w") as f:
+        json.dump(snapshot, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench-trend] wrote {out_path} ({len(metrics)} metrics)")
+
+    if baseline_path is None:
+        print("[bench-trend] no BENCH_pr*.json baseline yet — snapshot seeds the trajectory")
+        return 0
+    regressions = []
+    compared = 0
+    for mid, cur in metrics.items():
+        base = baseline.get(mid)
+        if not base:
+            continue
+        compared += 1
+        old, new = float(base["value"]), float(cur["value"])
+        if old <= 0.0:
+            continue
+        if cur["better"] == "lower":
+            ratio = new / old
+        else:
+            ratio = old / new if new > 0.0 else float("inf")
+        if ratio > 1.0 + args.threshold:
+            regressions.append((mid, old, new, ratio))
+    print(
+        f"[bench-trend] compared {compared} shared metrics against "
+        f"{os.path.basename(baseline_path)}"
+    )
+    for mid, old, new, ratio in regressions:
+        print(f"[bench-trend] REGRESSION {mid}: {old:g} -> {new:g} ({(ratio - 1) * 100:.0f}% worse)")
+    if regressions and not args.soft:
+        print(f"[bench-trend] FAIL: {len(regressions)} metric(s) regressed >{args.threshold:.0%}")
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
