@@ -360,6 +360,85 @@ fn main() {
         svc.shutdown();
     }
 
+    // (iv-b) coordinator fused-flight throughput: same-class SketchCp floods
+    // against a single worker at several burst widths. Width-1 bursts are the
+    // serial baseline (every job its own width-1 flight); wider bursts let
+    // the saturated drain-and-fuse path pack cross-request flights (capped
+    // by the WORKER_DRAIN batch bound). §Perf "coord_flood" rows: `secs` is
+    // the trend-gated timing, `width` its qualifier; the flight-width
+    // histogram (mean/max from the per-width stats) verifies the fused path
+    // actually engaged rather than silently degenerating to serial.
+    {
+        let n_jobs = if quick_mode() { 64 } else { 512 };
+        let mut rng = Rng::seed_from_u64(7);
+        let cp = CpTensor::randn(&mut rng, &[10, 10, 10], 2);
+        let j = 32usize;
+        for width in [1usize, 4, 16, 64] {
+            let svc = Service::start(
+                ServiceConfig {
+                    workers: 1,
+                    queue_capacity: 256,
+                    batch_deadline: std::time::Duration::from_micros(200),
+                    seed: 9,
+                },
+                None,
+            )
+            .unwrap();
+            let h = svc.handle();
+            let sw = fcs::util::timing::Stopwatch::start();
+            let mut done = 0usize;
+            while done < n_jobs {
+                let burst = width.min(n_jobs - done);
+                let mut rxs = Vec::with_capacity(burst);
+                for _ in 0..burst {
+                    loop {
+                        match h.submit(Request::SketchCp { cp: cp.clone(), j }) {
+                            Ok(rx) => {
+                                rxs.push(rx);
+                                break;
+                            }
+                            Err(fcs::coordinator::ServiceError::Busy) => std::thread::yield_now(),
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                }
+                for rx in rxs {
+                    rx.recv().unwrap().unwrap();
+                }
+                done += burst;
+            }
+            let secs = sw.elapsed_secs();
+            let report = svc.stats();
+            let (mut flights, mut jobs, mut max_w) = (0u64, 0u64, 0usize);
+            for f in &report.flights {
+                flights += f.flights;
+                jobs += f.jobs;
+                max_w = max_w.max(f.width);
+            }
+            let mean_w = if flights > 0 { jobs as f64 / flights as f64 } else { 0.0 };
+            table.row(vec![
+                format!("coord flood sketch_cp (burst={width})"),
+                "jobs/s".into(),
+                format!("{:.0}", n_jobs as f64 / secs),
+            ]);
+            table.row(vec![
+                format!("coord flood flight width (burst={width})"),
+                "mean/max".into(),
+                format!("{mean_w:.2}/{max_w}"),
+            ]);
+            sink.record(&[
+                ("path", "coord_flood".into()),
+                ("width", (width as f64).into()),
+                ("n", (n_jobs as f64).into()),
+                ("secs", secs.into()),
+                ("jobs_per_sec", (n_jobs as f64 / secs).into()),
+                ("mean_flight_width", mean_w.into()),
+                ("max_flight_width", (max_w as f64).into()),
+            ]);
+            svc.shutdown();
+        }
+    }
+
     table.print();
     sink.flush();
 }

@@ -4,17 +4,23 @@
 //! client → ServiceHandle (bounded queues, Busy on overflow)
 //!            ├─ cs_vec          → Batcher → XLA cs_batch executable
 //!            └─ sketch_* / est. → worker pool (pure Rust, or XLA fcs_rank1)
-//!          Stats: p50/p95/p99 per op, batch fill, rejections, throughput
+//!                                  └─ fused flights: same-class sketch runs
+//!                                     share spectral transform dispatches
+//!          Stats: p50/p95/p99 per op (queue-wait vs exec split), per-width
+//!                 fused-flight summaries, batch fill, rejections, throughput
 //! ```
 //!
-//! Invariants (property-tested in `rust/tests/coordinator_service.rs`):
-//! every accepted request is answered exactly once; batches never exceed the
-//! artifact batch size; XLA and pure-Rust paths agree numerically.
+//! Invariants (property-tested in `rust/tests/coordinator_service.rs` and
+//! `rust/tests/coordinator_stress.rs`): every accepted request is answered
+//! exactly once; batches never exceed the artifact batch size; XLA and
+//! pure-Rust paths agree numerically; fused flights are bit-identical to
+//! serial execution (per-job RNGs derive from [`service::job_rng`] either
+//! way) and a poisoned job inside a flight costs exactly its own reply.
 
 pub mod msg;
 pub mod service;
 pub mod stats;
 
 pub use msg::{Request, Response, ServiceError, SketchMethod};
-pub use service::{Service, ServiceConfig, ServiceHandle, WorkerState};
-pub use stats::{Stats, StatsReport};
+pub use service::{job_rng, Service, ServiceConfig, ServiceHandle, WorkerState};
+pub use stats::{FlightReport, Stats, StatsReport};

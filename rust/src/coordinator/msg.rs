@@ -74,6 +74,10 @@ impl Request {
     /// plan lengths), so the key folds the dims order-sensitively instead
     /// of collapsing them to a product — `[8,8]` and `[4,4,4]` must not
     /// group together.
+    ///
+    /// This key is for *sorting only*: an FNV dims-fold collision costs
+    /// warmth, never correctness. Cross-request fused flights need true
+    /// shape equality and must gate on [`Self::fuses_with`] instead.
     pub fn shape_key(&self) -> (u8, usize, usize) {
         // Tiny FNV-style mix; collisions only cost grouping quality, never
         // correctness (every job still gets its own hash draw).
@@ -107,6 +111,35 @@ impl Request {
             }
         }
     }
+
+    /// Exact fusion-class equality: whether two requests may share one fused
+    /// worker flight. Unlike [`Self::shape_key`]'s FNV dims-fold (where a
+    /// collision merely costs arena warmth), fusion packs jobs into shared
+    /// transform lanes, so the dims are compared **verbatim** — a hash
+    /// collision between `[8,8]` and `[4,4,4]` can never fuse them. Only
+    /// `SketchDense`/`SketchCp` fuse; CP rank is deliberately *not* part of
+    /// the class (rank is a per-job group count, not spectral geometry).
+    pub fn fuses_with(&self, other: &Request) -> bool {
+        match (self, other) {
+            (
+                Request::SketchDense { tensor: ta, method: ma, j: ja },
+                Request::SketchDense { tensor: tb, method: mb, j: jb },
+            ) => ma == mb && ja == jb && ta.shape == tb.shape,
+            (
+                Request::SketchCp { cp: ca, j: ja },
+                Request::SketchCp { cp: cb, j: jb },
+            ) => {
+                ja == jb
+                    && ca.factors.len() == cb.factors.len()
+                    && ca
+                        .factors
+                        .iter()
+                        .map(|f| f.rows)
+                        .eq(cb.factors.iter().map(|f| f.rows))
+            }
+            _ => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +155,73 @@ mod tests {
             "bad request: nope"
         );
         assert_eq!(ServiceError::Exec("boom".into()).to_string(), "execution failed: boom");
+    }
+
+    #[test]
+    fn fnv_collision_groups_but_never_fuses() {
+        // Deliberate dims-fold collision: with the FNV-style fold
+        // `h -> h·P + (d+1)` (P = 0x0100_0000_01B3), the one-mode shape
+        // `[9P + 8]` folds to exactly the same key as `[8, 8]`:
+        //   fold([x])    = x + 1
+        //   fold([8, 8]) = 9·P + 9
+        // shape_key may (and here does) group them — that only costs arena
+        // warmth — but fuses_with must still tell them apart, because a
+        // fused flight packs jobs into shared transform lanes.
+        const P: usize = 0x0100_0000_01B3;
+        let square = Request::SketchDense {
+            tensor: Tensor { shape: vec![8, 8], data: Vec::new() },
+            method: SketchMethod::Fcs,
+            j: 8,
+        };
+        let colliding = Request::SketchDense {
+            tensor: Tensor { shape: vec![9 * P + 8], data: Vec::new() },
+            method: SketchMethod::Fcs,
+            j: 8,
+        };
+        assert_eq!(
+            square.shape_key(),
+            colliding.shape_key(),
+            "test premise: the shapes must actually collide under the fold"
+        );
+        assert!(!square.fuses_with(&colliding), "collision must not fuse");
+        assert!(!colliding.fuses_with(&square), "collision must not fuse");
+        // Sanity: true same-shape requests do fuse, and fusion is symmetric.
+        let square2 = Request::SketchDense {
+            tensor: Tensor { shape: vec![8, 8], data: Vec::new() },
+            method: SketchMethod::Fcs,
+            j: 8,
+        };
+        assert!(square.fuses_with(&square2) && square2.fuses_with(&square));
+        // Method, j, and op-kind all split the fusion class.
+        let ts = Request::SketchDense {
+            tensor: Tensor { shape: vec![8, 8], data: Vec::new() },
+            method: SketchMethod::Ts,
+            j: 8,
+        };
+        assert!(!square.fuses_with(&ts));
+        let other_j = Request::SketchDense {
+            tensor: Tensor { shape: vec![8, 8], data: Vec::new() },
+            method: SketchMethod::Fcs,
+            j: 16,
+        };
+        assert!(!square.fuses_with(&other_j));
+    }
+
+    #[test]
+    fn cp_requests_fuse_on_dims_not_rank() {
+        let mut rng = crate::util::prng::Rng::seed_from_u64(2);
+        let a = Request::SketchCp { cp: CpTensor::randn(&mut rng, &[5, 4, 6], 2), j: 12 };
+        let b = Request::SketchCp { cp: CpTensor::randn(&mut rng, &[5, 4, 6], 7), j: 12 };
+        let c = Request::SketchCp { cp: CpTensor::randn(&mut rng, &[5, 6, 4], 2), j: 12 };
+        assert!(a.fuses_with(&b), "rank is not part of the fusion class");
+        assert!(!a.fuses_with(&c), "dims order matters");
+        assert!(
+            !a.fuses_with(&Request::SketchCp {
+                cp: CpTensor::randn(&mut rng, &[5, 4, 6], 2),
+                j: 16
+            }),
+            "j splits the class"
+        );
     }
 
     #[test]

@@ -8,24 +8,42 @@
 //! **zero heap allocations** in steady state (the response `Vec` handed to
 //! the client is the one unavoidable per-request allocation; it transfers
 //! ownership out of the worker). When the pool is saturated (every other
-//! worker mid-job), a worker also drains the backlog opportunistically and
-//! sorts the drained batch by [`Request::shape_key`], so same-shape jobs run
-//! consecutively on a warm workspace: one plan lookup and zero arena
-//! resizing serve the whole run. Under light load workers take one job per
-//! wakeup, keeping bursts fanned out across the pool.
+//! worker mid-job), a worker also drains the backlog opportunistically
+//! (waiting up to [`FUSE_MAX_WAIT`] for batch-mates) and sorts the drained
+//! batch by [`Request::shape_key`], so same-shape jobs run consecutively on
+//! a warm workspace. Under light load workers take one job per wakeup,
+//! keeping bursts fanned out across the pool.
+//!
+//! **Cross-request fused flights**: within a sorted batch, maximal runs of
+//! requests that [`Request::fuses_with`] each other execute as one *flight*.
+//! `SketchCp` flights wider than one job go through
+//! [`WorkerState::sketch_cp_fused`], which packs the rank spectra of
+//! *different requests* into shared `SpectralDriver` lane chunks — one pack
+//! → one batched rfft → per-job fold → one batched inverse per ≤16-lane
+//! chunk — so N small same-shape requests cost ⌈N·lanes/16⌉ transform
+//! dispatches instead of N·⌈lanes/16⌉. Every job keeps its own
+//! deterministic hash draw ([`job_rng`] over its `req_id`), so fused output
+//! is **bit-identical** to serial execution. `SketchDense` runs have no
+//! transform to share (the dense path is a pure `O(nnz)` scatter); their
+//! flights are warm-arena runs recorded at their true width. Per-width
+//! flight summaries and the queue-wait/exec split land in
+//! [`super::stats::Stats`].
 //!
 //! Robustness: requests are validated up front (shape/data coherence with an
 //! overflow-checked shape product, zero-dim/zero-rep rejection), and each
 //! job of a drained batch executes under `catch_unwind` — a poisoned request
 //! that still trips a kernel assert costs exactly its own reply (an
-//! [`ServiceError::Exec`]), never the rest of the batch or the worker.
+//! [`ServiceError::Exec`]), never the rest of the batch or the worker. A
+//! panic inside a *fused* flight falls back to per-job serial retry (each
+//! job's RNG re-derived from its stored `req_id`), preserving both the
+//! isolation contract and bit-identical healthy outputs.
 
 use super::msg::{Request, Response, ServiceError, SketchMethod};
 use super::stats::{Stats, StatsReport};
 use crate::fft::FftWorkspace;
 use crate::hash::{HashPair, HashTable, ModeHashes};
 use crate::runtime::{RuntimeHandle, TensorArg};
-use crate::sketch::common::sketch_dense_into;
+use crate::sketch::common::{apply_cp_fused, sketch_dense_into, FusedCpJob};
 use crate::sketch::{CountSketch, SpectralSketchCore};
 use crate::tensor::{CpTensor, Tensor};
 use crate::util::prng::Rng;
@@ -400,8 +418,26 @@ fn batcher_loop(
 /// saturated. Drained jobs are committed to this worker, so the bound also
 /// caps the transient head-of-line blocking if a sibling frees up mid-batch:
 /// small enough to keep that bounded, large enough that a burst of
-/// same-shape jobs shares one warm-up.
+/// same-shape jobs shares one warm-up. Fused flights are bounded by the
+/// same constant — a flight never exceeds one drained batch.
 const WORKER_DRAIN: usize = 8;
+
+/// Bounded batch-mate wait: when a saturated worker's opportunistic drain
+/// finds the queue momentarily empty, it waits at most this long for more
+/// jobs to arrive before executing what it has. This is the fusion flush
+/// policy's "lone request is never held hostage" bound — the extra latency
+/// a solitary request can pay for the *chance* of a wider flight.
+const FUSE_MAX_WAIT: Duration = Duration::from_micros(100);
+
+/// The deterministic per-request RNG: every worker-pool job's hash draws
+/// come from `seed ^ (req_id · φ₆₄)`, fully determined by the service seed
+/// and the request counter. This is the single home of that rule — the
+/// fused execution path re-derives per-job RNGs from stored `req_id`s (both
+/// for the flight itself and for the serial retry after a poisoned flight),
+/// and the determinism tests reconstruct reference outputs through it.
+pub fn job_rng(seed: u64, req_id: u64) -> Rng {
+    Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
 
 /// Per-worker reusable execution state: FFT workspace (scratch arenas +
 /// cached plan handles), a [`ModeHashes`] redraw arena for the dense paths,
@@ -414,6 +450,9 @@ pub struct WorkerState {
     hashes: ModeHashes,
     /// Per-mode count sketches for `sketch_cp` (tables redrawn in place).
     cs_modes: Vec<CountSketch>,
+    /// Flight-wide hash arena for fused `sketch_cp`: `width · order` tables,
+    /// job-major, each job's slice redrawn from its own RNG.
+    fused_tables: Vec<CountSketch>,
     /// Sketch scratch for `inner_estimate`.
     sa: Vec<f64>,
     sb: Vec<f64>,
@@ -433,6 +472,7 @@ impl WorkerState {
             ws: FftWorkspace::new(),
             hashes: ModeHashes::empty(),
             cs_modes: Vec::new(),
+            fused_tables: Vec::new(),
             sa: Vec::new(),
             sb: Vec::new(),
             ests: Vec::new(),
@@ -494,6 +534,78 @@ impl WorkerState {
         core.apply_cp_into(cp, &mut self.ws, out);
     }
 
+    /// Cross-request fused `sketch_cp`: execute `cps.len()` same-geometry CP
+    /// jobs as one spectral flight. Every job's per-mode tables are redrawn
+    /// into the flight arena from **its own** RNG (exactly the draw stream a
+    /// serial [`Self::sketch_cp_into`] would consume), then all jobs' rank
+    /// spectra share `SpectralDriver` lane chunks and batched inverses
+    /// through [`apply_cp_fused`]. `outs[jb]` receives job `jb`'s sketch,
+    /// **bit-identical** to its serial run — the coordinator's determinism
+    /// tests drive this entry point directly against the serial one.
+    ///
+    /// Requires all jobs to share `j`, order, and per-mode dims (the fusion
+    /// class [`Request::fuses_with`] enforces); ranks may differ.
+    pub fn sketch_cp_fused(
+        &mut self,
+        cps: &[&CpTensor],
+        j: usize,
+        rngs: &mut [Rng],
+        outs: &mut Vec<Vec<f64>>,
+    ) {
+        assert_eq!(cps.len(), rngs.len(), "one RNG per fused job");
+        outs.clear();
+        let width = cps.len();
+        if width == 0 {
+            return;
+        }
+        let order = cps[0].order();
+        debug_assert!(
+            cps.iter().all(|cp| cp.order() == order
+                && cp
+                    .factors
+                    .iter()
+                    .map(|f| f.rows)
+                    .eq(cps[0].factors.iter().map(|f| f.rows))),
+            "sketch_cp_fused: flight mixes shapes"
+        );
+        // Flight hash arena: width · order tables, job-major. Draw order is
+        // per job, modes in order — the same stream the serial path's
+        // per-job `cs_modes` redraw consumes.
+        let total = width * order;
+        self.fused_tables.truncate(total);
+        while self.fused_tables.len() < total {
+            self.fused_tables
+                .push(CountSketch::new(HashTable { h: Vec::new(), s: Vec::new(), range: 0 }));
+        }
+        for ((jb, cp), rng) in cps.iter().enumerate().zip(rngs.iter_mut()) {
+            crate::hash::redraw_tables_uniform(
+                rng,
+                j,
+                self.fused_tables[jb * order..(jb + 1) * order]
+                    .iter_mut()
+                    .map(|cs| &mut cs.table)
+                    .zip(cp.factors.iter().map(|f| f.rows)),
+            );
+        }
+        let tables = &self.fused_tables;
+        let flight: Vec<FusedCpJob<'_>> = cps
+            .iter()
+            .enumerate()
+            .map(|(jb, cp)| FusedCpJob {
+                core: SpectralSketchCore::linear_from_modes(&tables[jb * order..(jb + 1) * order]),
+                factors: &cp.factors,
+                lambda: &cp.lambda,
+                rank: cp.rank(),
+            })
+            .collect();
+        let sketch_len = flight[0].core.sketch_len;
+        outs.resize(width, Vec::new());
+        apply_cp_fused(&flight, &mut self.ws, |jb, z| {
+            outs[jb].clear();
+            outs[jb].extend_from_slice(&z[..sketch_len]);
+        });
+    }
+
     /// The `inner_estimate` op body: `d` independent hash redraws, both
     /// tensors sketched into reusable scratch, median of the per-repetition
     /// inner products. Zero heap allocations in steady state.
@@ -531,7 +643,7 @@ impl WorkerState {
     /// per-request allocation on the pure-Rust paths.
     fn execute(
         &mut self,
-        req: Request,
+        req: &Request,
         runtime: &Option<RuntimeHandle>,
         rng: &mut Rng,
     ) -> Result<Response, ServiceError> {
@@ -539,7 +651,7 @@ impl WorkerState {
             Request::CsVec { .. } => unreachable!("cs_vec is routed to the batcher"),
             Request::SketchDense { tensor, method, j } => {
                 let mut out = Vec::new();
-                self.sketch_dense_into(&tensor, method, j, rng, &mut out);
+                self.sketch_dense_into(tensor, *method, *j, rng, &mut out);
                 Ok(Response::Sketch(out))
             }
             Request::SketchCp { cp, j } => {
@@ -552,20 +664,20 @@ impl WorkerState {
                             cp.order() == 3 && cp.factors.iter().all(|f| f.rows == d)
                         }) == Some(true)
                             && e.meta_usize("rank") == Some(cp.rank())
-                            && e.meta_usize("j") == Some(j);
+                            && e.meta_usize("j") == Some(*j);
                         if dims_match {
-                            return sketch_cp_xla(rt, &cp, j, rng);
+                            return sketch_cp_xla(rt, cp, *j, rng);
                         }
                     }
                 }
                 // Workers are already a pool: run the serial spectral path
                 // with this worker's reusable state (one IFFT per request).
                 let mut out = Vec::new();
-                self.sketch_cp_into(&cp, j, rng, &mut out);
+                self.sketch_cp_into(cp, *j, rng, &mut out);
                 Ok(Response::Sketch(out))
             }
             Request::InnerEstimate { a, b, method, j, d } => {
-                Ok(Response::Scalar(self.inner_estimate(&a, &b, method, j, d, rng)))
+                Ok(Response::Scalar(self.inner_estimate(a, b, *method, *j, *d, rng)))
             }
         }
     }
@@ -595,11 +707,15 @@ fn worker_loop(
             // sibling would pick queued jobs up immediately, so grabbing
             // them here would serialize a light-load burst onto this one
             // thread. Under saturation the backlog waits either way, and
-            // draining buys same-shape warm-workspace grouping (residual
-            // trade-off: a drained job is committed to this worker, so a
-            // sibling freeing up mid-batch waits at most WORKER_DRAIN − 1
-            // jobs). Stop draining at the first sentinel — it is *this*
-            // worker's; eating further ones could leave a sibling running.
+            // draining buys same-shape warm-workspace grouping plus the
+            // chance of a fused flight (residual trade-off: a drained job is
+            // committed to this worker, so a sibling freeing up mid-batch
+            // waits at most WORKER_DRAIN − 1 jobs). When the queue is
+            // momentarily empty, wait up to FUSE_MAX_WAIT for batch-mates —
+            // bounded, so a lone request is never held hostage. Stop
+            // draining at the first sentinel — it is *this* worker's; eating
+            // further ones could leave a sibling running.
+            let flush_at = Instant::now() + FUSE_MAX_WAIT;
             while busy.load(Ordering::Relaxed) + 1 >= pool_size
                 && batch.len() < WORKER_DRAIN
                 && !stopping
@@ -607,7 +723,17 @@ fn worker_loop(
                 match guard.try_recv() {
                     Ok(QueueMsg::Work(j)) => batch.push(j),
                     Ok(QueueMsg::Stop) => stopping = true,
-                    Err(_) => break,
+                    Err(_) => {
+                        let now = Instant::now();
+                        if now >= flush_at {
+                            break;
+                        }
+                        match guard.recv_timeout(flush_at - now) {
+                            Ok(QueueMsg::Work(j)) => batch.push(j),
+                            Ok(QueueMsg::Stop) => stopping = true,
+                            Err(_) => break,
+                        }
+                    }
                 }
             }
         }
@@ -620,40 +746,146 @@ fn worker_loop(
         // still decrement the busy counter, or every surviving worker would
         // see a permanently inflated saturation signal and over-drain.
         let _busy_guard = BusyGuard(&busy);
-        for job in batch.drain(..) {
-            let Job { req, reply, enqueued } = *job;
-            let op = req.op_name();
-            let req_id = counter.fetch_add(1, Ordering::Relaxed);
-            let mut rng = Rng::seed_from_u64(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
-            // Per-job panic isolation: a poisoned request (validation is a
-            // best effort — degenerate numerics can still trip kernel
-            // asserts) must cost exactly its own reply, not unwind the
-            // worker and silently drop every remaining drained job's sender.
-            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                state.execute(req, &runtime, &mut rng)
-            }));
-            let result = match caught {
-                Ok(r) => r,
-                Err(payload) => {
-                    // The arenas may have been mid-rewrite when the unwind
-                    // tore through them — rebuild rather than trust a torn
-                    // workspace.
-                    state = WorkerState::new();
-                    Err(ServiceError::Exec(format!(
-                        "worker panicked: {}",
-                        panic_message(payload.as_ref())
-                    )))
-                }
-            };
-            let latency = enqueued.elapsed().as_secs_f64() * 1e6;
-            stats.record(op, latency);
-            let _ = reply.send(result);
+        // Partition the sorted batch into maximal fusion-class runs
+        // (flights). shape_key sorting makes same-class jobs adjacent;
+        // fuses_with draws the exact boundary (an FNV key collision lands
+        // two classes next to each other but never inside one flight).
+        let mut i = 0;
+        while i < batch.len() {
+            let mut end = i + 1;
+            while end < batch.len() && batch[end].req.fuses_with(&batch[i].req) {
+                end += 1;
+            }
+            execute_flight(&mut state, &batch[i..end], &runtime, seed, &counter, &stats);
+            i = end;
         }
+        batch.clear();
         drop(_busy_guard);
         if stopping {
             return;
         }
     }
+}
+
+/// Execute one flight — a maximal run of mutually fusing jobs from a sorted
+/// drained batch. CP flights wider than one job (whose class the XLA
+/// artifact would *not* serve) run through [`WorkerState::sketch_cp_fused`];
+/// everything else (dense warm-arena runs, inner estimates, singletons,
+/// XLA-eligible CP classes) runs serially per job so backend choice and
+/// draw streams match pre-fusion behavior exactly.
+///
+/// Every job's `req_id` is drawn from the shared counter *up front*, in
+/// batch order, so its deterministic [`job_rng`] is fixed before the
+/// execution strategy is chosen — a panic inside a fused attempt rebuilds
+/// the worker state and retries each job serially with the *same* RNG,
+/// keeping healthy outputs bit-identical while the poisoned job alone pays
+/// with an [`ServiceError::Exec`] reply.
+fn execute_flight(
+    state: &mut WorkerState,
+    jobs: &[Box<Job>],
+    runtime: &Option<RuntimeHandle>,
+    seed: u64,
+    counter: &AtomicU64,
+    stats: &Stats,
+) {
+    let width = jobs.len();
+    debug_assert!((1..=WORKER_DRAIN).contains(&width));
+    let mut req_ids = [0u64; WORKER_DRAIN];
+    for slot in req_ids.iter_mut().take(width) {
+        *slot = counter.fetch_add(1, Ordering::Relaxed);
+    }
+    let exec_start = Instant::now();
+    let op = jobs[0].req.op_name();
+    // Queue-wait is submit → flight start; exec is flight start → reply.
+    // saturating: Instant math must not panic on cross-thread clock skew.
+    let finish = |job: &Job, result: Result<Response, ServiceError>| {
+        let total_us = job.enqueued.elapsed().as_secs_f64() * 1e6;
+        let queue_us = exec_start.saturating_duration_since(job.enqueued).as_secs_f64() * 1e6;
+        let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+        stats.record_job(op, total_us, queue_us, exec_us);
+        let _ = job.reply.send(result);
+    };
+    let fused_cp = width > 1
+        && matches!(jobs[0].req, Request::SketchCp { .. })
+        && !cp_flight_matches_xla(runtime, &jobs[0].req);
+    let mut serial_from = 0;
+    if fused_cp {
+        let Request::SketchCp { j, .. } = &jobs[0].req else { unreachable!() };
+        let cps: Vec<&CpTensor> = jobs
+            .iter()
+            .map(|job| match &job.req {
+                Request::SketchCp { cp, .. } => cp,
+                _ => unreachable!("fused flight mixes ops"),
+            })
+            .collect();
+        // Flight-level panic isolation: a poisoned job inside the shared
+        // transform (validation is best-effort — degenerate numerics can
+        // still trip kernel asserts) unwinds the whole fused attempt; fall
+        // through to the per-job serial loop below, where it costs exactly
+        // its own reply.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rngs: Vec<Rng> =
+                req_ids[..width].iter().map(|&id| job_rng(seed, id)).collect();
+            let mut outs = Vec::new();
+            state.sketch_cp_fused(&cps, *j, &mut rngs, &mut outs);
+            outs
+        }));
+        match caught {
+            Ok(outs) => {
+                for (job, out) in jobs.iter().zip(outs) {
+                    finish(job, Ok(Response::Sketch(out)));
+                }
+                serial_from = width;
+            }
+            Err(_) => {
+                // The arenas may have been mid-rewrite when the unwind tore
+                // through them — rebuild rather than trust a torn workspace,
+                // then retry serially (fresh RNGs re-derived per req_id).
+                *state = WorkerState::new();
+            }
+        }
+    }
+    // Serial path: the sole path for non-CP flights and singletons, and the
+    // retry path after a poisoned fused attempt. Per-job panic isolation: a
+    // poisoned request must cost exactly its own reply, not unwind the
+    // worker and silently drop every remaining drained job's sender.
+    for (k, job) in jobs.iter().enumerate().skip(serial_from) {
+        let mut rng = job_rng(seed, req_ids[k]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            state.execute(&job.req, runtime, &mut rng)
+        }));
+        let result = match caught {
+            Ok(r) => r,
+            Err(payload) => {
+                *state = WorkerState::new();
+                Err(ServiceError::Exec(format!(
+                    "worker panicked: {}",
+                    panic_message(payload.as_ref())
+                )))
+            }
+        };
+        finish(job, result);
+    }
+    stats.record_flight(width, exec_start.elapsed().as_secs_f64() * 1e6);
+}
+
+/// Whether a CP request's fusion class would be served by the XLA
+/// `fcs_rank1` executable on the serial path. Such flights run serially per
+/// job — fusion must never change backend choice. Rank is deliberately
+/// unchecked: it is not part of the fusion class, so a mixed-rank flight
+/// where *some* jobs would go XLA still runs whole-flight serial, which
+/// preserves exact per-job serial behavior.
+fn cp_flight_matches_xla(runtime: &Option<RuntimeHandle>, req: &Request) -> bool {
+    let (Some(rt), Request::SketchCp { cp, j }) = (runtime.as_ref(), req) else {
+        return false;
+    };
+    let Some(e) = rt.manifest().entries.get("fcs_rank1") else {
+        return false;
+    };
+    e.meta_usize("dim")
+        .map(|d| cp.order() == 3 && cp.factors.iter().all(|f| f.rows == d))
+        == Some(true)
+        && e.meta_usize("j") == Some(*j)
 }
 
 /// Best-effort human-readable message from a caught panic payload

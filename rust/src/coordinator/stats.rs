@@ -1,14 +1,34 @@
-//! Service metrics: per-op latency percentiles, throughput, batching stats,
-//! backpressure counters.
+//! Service metrics: per-op latency percentiles (total, split into queue-wait
+//! vs execution), per-width fused-flight summaries, throughput, batching
+//! stats, backpressure counters.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Bounded reservoir size: only the newest samples up to this cap are kept
+/// per series, so a long-running service cannot grow its stats unboundedly.
+const RESERVOIR_CAP: usize = 100_000;
 
 #[derive(Debug, Default)]
 struct OpStats {
     latencies_us: Vec<f64>,
+    /// Submit → flight-start wait, recorded by [`Stats::record_job`]
+    /// (worker-pool ops only; the batcher's `record` leaves it empty).
+    queue_us: Vec<f64>,
+    /// Flight-start → reply execution time, parallel to `queue_us`.
+    exec_us: Vec<f64>,
     completed: u64,
+}
+
+/// Per-flight-width accounting for the worker pool's fused execution: how
+/// many flights ran at each width, how many jobs they carried, and how long
+/// the flights took end to end.
+#[derive(Debug, Default)]
+struct FlightStats {
+    flights: u64,
+    jobs: u64,
+    exec_us: Vec<f64>,
 }
 
 #[derive(Debug, Default)]
@@ -19,6 +39,9 @@ pub struct Stats {
 #[derive(Debug, Default)]
 struct StatsInner {
     per_op: HashMap<&'static str, OpStats>,
+    /// Fused-flight accounting keyed by flight width (BTreeMap so the
+    /// report comes out width-sorted for free).
+    flights: BTreeMap<usize, FlightStats>,
     rejected_busy: u64,
     batches: u64,
     batched_items: u64,
@@ -29,6 +52,9 @@ struct StatsInner {
 #[derive(Debug, Clone)]
 pub struct StatsReport {
     pub per_op: Vec<OpReport>,
+    /// Per-width fused-flight summaries, sorted by width. Widths > 1 here
+    /// are the direct evidence that cross-request fusion actually engaged.
+    pub flights: Vec<FlightReport>,
     pub rejected_busy: u64,
     pub batches: u64,
     pub mean_batch_fill: f64,
@@ -43,6 +69,24 @@ pub struct OpReport {
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// Median submit → flight-start wait (0 when the op records no split,
+    /// e.g. the batcher's `cs_vec`).
+    pub queue_p50_us: f64,
+    /// Median flight-start → reply execution time (0 when no split).
+    pub exec_p50_us: f64,
+}
+
+/// One row of the per-width fused-flight summary.
+#[derive(Debug, Clone)]
+pub struct FlightReport {
+    /// Jobs fused into each flight of this row.
+    pub width: usize,
+    /// Number of flights that ran at this width.
+    pub flights: u64,
+    /// Total jobs those flights carried (`width · flights`).
+    pub jobs: u64,
+    pub exec_p50_us: f64,
+    pub exec_p95_us: f64,
 }
 
 impl Stats {
@@ -61,9 +105,35 @@ impl Stats {
         let mut g = self.inner.lock().unwrap();
         let e = g.per_op.entry(op).or_default();
         e.completed += 1;
-        // Bounded reservoir: keep the newest 100k samples.
-        if e.latencies_us.len() < 100_000 {
+        // Bounded reservoir: keep the newest samples up to the cap.
+        if e.latencies_us.len() < RESERVOIR_CAP {
             e.latencies_us.push(latency_us);
+        }
+    }
+
+    /// Worker-pool job completion with its queue-wait/execution split:
+    /// `total_us` is submit → reply, `queue_us` is submit → flight start,
+    /// `exec_us` is flight start → reply (`queue + exec ≈ total`).
+    pub fn record_job(&self, op: &'static str, total_us: f64, queue_us: f64, exec_us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.per_op.entry(op).or_default();
+        e.completed += 1;
+        if e.latencies_us.len() < RESERVOIR_CAP {
+            e.latencies_us.push(total_us);
+            e.queue_us.push(queue_us);
+            e.exec_us.push(exec_us);
+        }
+    }
+
+    /// One worker flight finished: `width` jobs executed as a unit taking
+    /// `exec_us` end to end.
+    pub fn record_flight(&self, width: usize, exec_us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let f = g.flights.entry(width).or_default();
+        f.flights += 1;
+        f.jobs += width as u64;
+        if f.exec_us.len() < RESERVOIR_CAP {
+            f.exec_us.push(exec_us);
         }
     }
 
@@ -78,32 +148,47 @@ impl Stats {
     }
 
     pub fn report(&self) -> StatsReport {
+        // Sort-and-read a percentile from an unsorted reservoir (0 when
+        // the series recorded nothing, e.g. queue/exec for batcher ops).
+        fn pct_of(samples: &[f64], p: f64) -> f64 {
+            if samples.is_empty() {
+                return 0.0;
+            }
+            let mut s = samples.to_vec();
+            s.sort_unstable_by(f64::total_cmp);
+            crate::util::timing::percentile_sorted(&s, p)
+        }
         let g = self.inner.lock().unwrap();
         let mut per_op = Vec::new();
         let mut total = 0u64;
         for (op, s) in &g.per_op {
             total += s.completed;
-            let mut lat = s.latencies_us.clone();
-            lat.sort_unstable_by(f64::total_cmp);
-            let pct = |p: f64| {
-                if lat.is_empty() {
-                    0.0
-                } else {
-                    crate::util::timing::percentile_sorted(&lat, p)
-                }
-            };
             per_op.push(OpReport {
                 op,
                 completed: s.completed,
-                p50_us: pct(50.0),
-                p95_us: pct(95.0),
-                p99_us: pct(99.0),
+                p50_us: pct_of(&s.latencies_us, 50.0),
+                p95_us: pct_of(&s.latencies_us, 95.0),
+                p99_us: pct_of(&s.latencies_us, 99.0),
+                queue_p50_us: pct_of(&s.queue_us, 50.0),
+                exec_p50_us: pct_of(&s.exec_us, 50.0),
             });
         }
         per_op.sort_by_key(|r| r.op);
+        let flights = g
+            .flights
+            .iter()
+            .map(|(&width, f)| FlightReport {
+                width,
+                flights: f.flights,
+                jobs: f.jobs,
+                exec_p50_us: pct_of(&f.exec_us, 50.0),
+                exec_p95_us: pct_of(&f.exec_us, 95.0),
+            })
+            .collect();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         StatsReport {
             per_op,
+            flights,
             rejected_busy: g.rejected_busy,
             batches: g.batches,
             mean_batch_fill: if g.batches > 0 {
@@ -140,5 +225,32 @@ mod tests {
         assert_eq!(op.op, "cs_vec");
         assert!(op.p50_us > 40.0 && op.p50_us < 60.0);
         assert!(op.p99_us >= op.p95_us);
+        // Plain `record` carries no queue/exec split.
+        assert_eq!(op.queue_p50_us, 0.0);
+        assert_eq!(op.exec_p50_us, 0.0);
+    }
+
+    #[test]
+    fn flight_and_split_reporting() {
+        let s = Stats::new();
+        s.mark_started();
+        // 8 jobs in one width-8 flight, 1 singleton: queue + exec == total.
+        for i in 0..8 {
+            s.record_job("sketch_cp", 100.0 + i as f64, 40.0, 60.0 + i as f64);
+        }
+        s.record_flight(8, 75.0);
+        s.record_job("sketch_cp", 50.0, 10.0, 40.0);
+        s.record_flight(1, 40.0);
+        let r = s.report();
+        assert_eq!(r.total_completed, 9);
+        let op = r.per_op.iter().find(|o| o.op == "sketch_cp").unwrap();
+        assert_eq!(op.completed, 9);
+        assert!(op.queue_p50_us > 0.0 && op.exec_p50_us > 0.0);
+        // Width-sorted flight rows with consistent job accounting.
+        assert_eq!(r.flights.len(), 2);
+        assert_eq!((r.flights[0].width, r.flights[0].flights, r.flights[0].jobs), (1, 1, 1));
+        assert_eq!((r.flights[1].width, r.flights[1].flights, r.flights[1].jobs), (8, 1, 8));
+        assert!(r.flights[1].exec_p50_us > 0.0);
+        assert!(r.flights[1].exec_p95_us >= r.flights[1].exec_p50_us);
     }
 }

@@ -104,6 +104,86 @@ impl SpectralDriver {
         (MAX_FFT_LANES / self.lanes.max(1)).max(1)
     }
 
+    /// Multi-request variant of [`Self::accumulate_spectra`]: one flat pass
+    /// over the concatenated `(job, group)` pairs of several independent
+    /// jobs (`job_groups[jb]` groups for job `jb`, e.g. one CP rank per
+    /// group), so a chunk's batched forward transform may span job
+    /// boundaries — N small same-shape jobs cost `⌈Σ groups·lanes / 16⌉`
+    /// dispatches instead of `Σ ⌈groups·lanes / 16⌉`. Each group's fold is
+    /// seeded from its first lane and lands in its *own* job's accumulator:
+    /// `accs[jb][k] += weight(jb, g) · fold_{jb,g}[k]`.
+    ///
+    /// Restricted to one job, the `(group, k)` visit order — and therefore
+    /// the IEEE summation order into `accs[jb]` — is identical to a serial
+    /// [`Self::accumulate_spectra`] call, and the batched kernels keep every
+    /// lane's flop sequence independent of batch width, so each job's
+    /// accumulated spectrum is **bit-identical** to its serial run. That is
+    /// the invariant the coordinator's cross-request fused flights rely on.
+    pub fn accumulate_spectra_multi(
+        &self,
+        job_groups: &[usize],
+        ws: &mut FftWorkspace,
+        mut pack: impl FnMut(usize, usize, usize, &mut [f64]),
+        mut weight: impl FnMut(usize, usize) -> f64,
+        accs: &mut [Vec<C64>],
+    ) {
+        debug_assert_eq!(job_groups.len(), accs.len());
+        debug_assert!(accs.iter().all(|a| a.len() == self.n));
+        let total: usize = job_groups.iter().sum();
+        if self.lanes == 0 || total == 0 {
+            return;
+        }
+        let (n, nm, stride) = (self.n, self.lanes, self.stride);
+        let per = self.groups_per_chunk().min(total);
+        let mut xs = ws.take_f64(per * nm * stride);
+        let mut sre = ws.take_f64(0);
+        let mut sim = ws.take_f64(0);
+        // Flat cursor over (job, group) pairs in job-major order; each chunk
+        // records its slots' owners so the fold can scatter per job.
+        let (mut job, mut grp) = (0usize, 0usize);
+        while job < job_groups.len() && job_groups[job] == 0 {
+            job += 1;
+        }
+        let mut slot_job = [0usize; MAX_FFT_LANES];
+        let mut slot_grp = [0usize; MAX_FFT_LANES];
+        let mut done = 0usize;
+        while done < total {
+            let gc = per.min(total - done);
+            for gi in 0..gc {
+                slot_job[gi] = job;
+                slot_grp[gi] = grp;
+                for l in 0..nm {
+                    let slot = (gi * nm + l) * stride;
+                    pack(job, grp, l, &mut xs[slot..slot + stride]);
+                }
+                grp += 1;
+                while job < job_groups.len() && grp >= job_groups[job] {
+                    job += 1;
+                    grp = 0;
+                }
+            }
+            let lanes = gc * nm;
+            fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            for k in 0..n {
+                let row = k * lanes;
+                for gi in 0..gc {
+                    let s = row + gi * nm;
+                    let mut pr = sre[s];
+                    let mut pi = sim[s];
+                    mul_lane_run(&sre, &sim, s + 1, nm - 1, self.conj, &mut pr, &mut pi);
+                    let w = weight(slot_job[gi], slot_grp[gi]);
+                    let a = &mut accs[slot_job[gi]][k];
+                    a.re += w * pr;
+                    a.im += w * pi;
+                }
+            }
+            done += gc;
+        }
+        ws.give_f64(sim);
+        ws.give_f64(sre);
+        ws.give_f64(xs);
+    }
+
     /// Pack → forward → fold into a complex accumulator: for every group
     /// `g ∈ groups`, `acc[k] += weight(g) · fold_g[k]` (fold seeded from the
     /// group's first lane). The caller inverts `acc` once at the end —
@@ -256,6 +336,122 @@ impl SpectralDriver {
         }
         ws.give_f64(fim);
         ws.give_f64(fre);
+    }
+}
+
+/// Pack one mode sketch into its stride-length driver slot: the `CS_d(v)`
+/// scatter every spectral pack closure performs. Single home of the
+/// slot-prefix rule — exactly `slot[..range]` is written, the tail beyond
+/// the mode's range stays zero from the rental.
+#[inline]
+pub(crate) fn pack_mode_lane(cs: &CountSketch, v: &[f64], slot: &mut [f64]) {
+    cs.apply_into(v, &mut slot[..cs.range()]);
+}
+
+/// Batched inverse over independent per-job product spectra: chunks of up to
+/// [`MAX_FFT_LANES`] jobs share one [`inverse_real_many_into`] dispatch, and
+/// each job's length-`n` real signal is handed to `emit(job, signal)`
+/// (mutable, so emitters may truncate in place). The batched recombination
+/// is expression-for-expression the scalar one [`fft::inverse_real_into`]
+/// runs, and the underlying complex kernel keeps lanes independent of batch
+/// width, so each job's signal is bit-identical to a serial inverse of its
+/// spectrum — for even `n` (every linear/FCS core: `fft_len` is a power of
+/// two), which is the only parameterization the fused flights dispatch.
+pub(crate) fn inverse_spectra_fused(
+    specs: &[Vec<C64>],
+    n: usize,
+    ws: &mut FftWorkspace,
+    mut emit: impl FnMut(usize, &mut [f64]),
+) {
+    let jobs = specs.len();
+    if jobs == 0 || n == 0 {
+        return;
+    }
+    let per = jobs.min(MAX_FFT_LANES);
+    let mut pre = ws.take_f64(n * per);
+    let mut pim = ws.take_f64(n * per);
+    let mut z = ws.take_f64(0);
+    let mut j0 = 0usize;
+    while j0 < jobs {
+        let jc = (jobs - j0).min(per);
+        for (b, spec) in specs[j0..j0 + jc].iter().enumerate() {
+            debug_assert_eq!(spec.len(), n);
+            for (k, v) in spec.iter().enumerate() {
+                pre[k * jc + b] = v.re;
+                pim[k * jc + b] = v.im;
+            }
+        }
+        inverse_real_many_into(&mut pre[..n * jc], &mut pim[..n * jc], jc, ws, &mut z);
+        for gi in 0..jc {
+            emit(j0 + gi, &mut z[gi * n..(gi + 1) * n]);
+        }
+        j0 += jc;
+    }
+    ws.give_f64(z);
+    ws.give_f64(pim);
+    ws.give_f64(pre);
+}
+
+/// One job of a cross-request fused CP flight: the per-job spectral core
+/// (over that request's *own* hash draw) plus the CP payload it sketches.
+pub(crate) struct FusedCpJob<'a> {
+    /// Spectral pipeline over this job's per-mode count sketches.
+    pub core: SpectralSketchCore<'a>,
+    /// CP factor matrices `U_1..U_N` (one column per rank).
+    pub factors: &'a [Matrix],
+    /// Per-rank weights `λ_r`.
+    pub lambda: &'a [f64],
+    /// Rank count — this job's group count in the shared lane flight.
+    pub rank: usize,
+}
+
+/// Cross-request fused CP sketching: all jobs' rank groups share
+/// [`SpectralDriver`] lane chunks (one pack → one batched rfft → per-job
+/// [`mul_lane_run`] fold via [`SpectralDriver::accumulate_spectra_multi`])
+/// and the per-job product spectra return through shared batched inverses
+/// ([`inverse_spectra_fused`]). `emit(job, signal)` receives each job's
+/// full length-`fft_len` signal; callers truncate to `sketch_len`.
+///
+/// Every job keeps its own hash draw and its own accumulator, so each
+/// output is **bit-identical** to a serial [`SpectralSketchCore::apply_cp_into`]
+/// over the same core — the property the coordinator's determinism tests
+/// enforce. All jobs in a flight must share spectral geometry (same order
+/// and the same per-mode ranges, hence the same `fft_len`); ranks may
+/// differ. The coordinator's exact fusion key guarantees this; it is
+/// debug-asserted here.
+pub(crate) fn apply_cp_fused(
+    jobs: &[FusedCpJob<'_>],
+    ws: &mut FftWorkspace,
+    emit: impl FnMut(usize, &mut [f64]),
+) {
+    let Some(first) = jobs.first() else { return };
+    let order = first.core.modes.len();
+    let n = first.core.fft_len;
+    debug_assert!(
+        jobs.iter().all(|jb| {
+            jb.core.modes.len() == order
+                && jb.core.fft_len == n
+                && jb
+                    .core
+                    .modes
+                    .iter()
+                    .map(|m| m.range())
+                    .eq(first.core.modes.iter().map(|m| m.range()))
+        }),
+        "apply_cp_fused: flight mixes spectral geometries"
+    );
+    let job_groups: Vec<usize> = jobs.iter().map(|jb| jb.rank).collect();
+    let mut accs: Vec<Vec<C64>> = jobs.iter().map(|_| ws.take_c64(n)).collect();
+    first.core.driver(order, false).accumulate_spectra_multi(
+        &job_groups,
+        ws,
+        |jb, r, d, slot| pack_mode_lane(&jobs[jb].core.modes[d], jobs[jb].factors[d].col(r), slot),
+        |jb, r| jobs[jb].lambda[r],
+        &mut accs,
+    );
+    inverse_spectra_fused(&accs, n, ws, emit);
+    for acc in accs.into_iter().rev() {
+        ws.give_c64(acc);
     }
 }
 
@@ -432,10 +628,7 @@ impl<'a> SpectralSketchCore<'a> {
         self.driver(self.modes.len(), false).accumulate_spectra(
             0..1,
             ws,
-            |_, d, slot| {
-                let cs = &self.modes[d];
-                cs.apply_into(vs[d], &mut slot[..cs.range()]);
-            },
+            |_, d, slot| pack_mode_lane(&self.modes[d], vs[d], slot),
             |_| 1.0,
             out,
         );
@@ -466,10 +659,7 @@ impl<'a> SpectralSketchCore<'a> {
         self.driver(self.modes.len(), false).accumulate_spectra(
             ranks,
             ws,
-            |r, d, slot| {
-                let cs = &self.modes[d];
-                cs.apply_into(factors[d].col(r), &mut slot[..cs.range()]);
-            },
+            |r, d, slot| pack_mode_lane(&self.modes[d], factors[d].col(r), slot),
             |r| lambda[r],
             acc,
         );
@@ -582,8 +772,7 @@ impl<'a> SpectralSketchCore<'a> {
             ws,
             |_, l, slot| {
                 let d = if l < mode { l } else { l + 1 };
-                let cs = &self.modes[d];
-                cs.apply_into(vs[d], &mut slot[..cs.range()]);
+                pack_mode_lane(&self.modes[d], vs[d], slot);
             },
             FoldSeed::External(|_, k: usize| (st_fft[k].re, st_fft[k].im)),
             |_, z| {
@@ -745,6 +934,55 @@ mod tests {
         assert_eq!(out.len(), mh.composite_range());
         for (a, b) in out.iter().zip(&dense_fcs) {
             assert!((a - b).abs() < 1e-9, "linear {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_cp_flight_is_bit_identical_to_serial() {
+        // apply_cp_fused over W independent jobs — each with its own hash
+        // draw, payload, and rank — must reproduce every job's serial
+        // apply_cp_into EXACTLY (`==`, not approximately): the batched
+        // kernels keep each lane's flop sequence independent of batch width
+        // and the per-job accumulation order is preserved across chunk
+        // boundaries. This is the kernel-level half of the coordinator's
+        // fused-flight determinism contract.
+        let mut rng = Rng::seed_from_u64(6);
+        let shape = [5usize, 4, 6];
+        let j = 8usize;
+        let width = 5usize;
+        let mut tables: Vec<Vec<CountSketch>> = Vec::new();
+        let mut cps = Vec::new();
+        for w in 0..width {
+            let mh = ModeHashes::draw_uniform(&mut rng, &shape, j);
+            tables.push(mh.modes.iter().map(|t| CountSketch::new(t.clone())).collect());
+            // Mixed ranks: rank is a group count, not flight geometry.
+            cps.push(CpTensor::randn(&mut rng, &shape, 1 + w % 3));
+        }
+        let mut ws = FftWorkspace::new();
+        let mut serial = Vec::new();
+        for (modes, cp) in tables.iter().zip(&cps) {
+            let core = SpectralSketchCore::linear_from_modes(modes);
+            let mut out = Vec::new();
+            core.apply_cp_into(cp, &mut ws, &mut out);
+            serial.push(out);
+        }
+        let flight: Vec<FusedCpJob<'_>> = tables
+            .iter()
+            .zip(&cps)
+            .map(|(modes, cp)| FusedCpJob {
+                core: SpectralSketchCore::linear_from_modes(modes),
+                factors: &cp.factors,
+                lambda: &cp.lambda,
+                rank: cp.rank(),
+            })
+            .collect();
+        let sketch_len = flight[0].core.sketch_len;
+        let mut fused: Vec<Vec<f64>> = vec![Vec::new(); width];
+        apply_cp_fused(&flight, &mut ws, |jb, z| {
+            fused[jb].extend_from_slice(&z[..sketch_len]);
+        });
+        for (w, (a, b)) in fused.iter().zip(&serial).enumerate() {
+            assert_eq!(a, b, "job {w}: fused sketch differs from serial");
         }
     }
 

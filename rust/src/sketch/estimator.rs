@@ -16,7 +16,7 @@
 //! `t_uuu`, the Eq. 17 correlate-and-gather behind `t_mode`, and the
 //! sketch-domain `deflate` — is written exactly once.
 
-use super::common::{seed_first_lane, FoldSeed, SpectralDriver, SpectralSketchOp};
+use super::common::{pack_mode_lane, seed_first_lane, FoldSeed, SpectralDriver, SpectralSketchOp};
 use super::cs::CountSketch;
 use super::fcs::FastCountSketch;
 use super::hcs::HigherOrderCountSketch;
@@ -550,8 +550,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
                 |g, l, slot| {
                     let core = reps[g].op.core();
                     let d = if l < mode { l } else { l + 1 };
-                    let cs = &core.modes[d];
-                    cs.apply_into(vs[d], &mut slot[..cs.range()]);
+                    pack_mode_lane(&core.modes[d], vs[d], slot);
                 },
                 FoldSeed::External(|g: usize, k: usize| {
                     let f = reps[g].st_fft[k];
@@ -601,10 +600,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
                 driver.fold_inverse(
                     d_reps,
                     ws,
-                    |g, d, slot| {
-                        let cs = &reps[g].op.core().modes[d];
-                        cs.apply_into(vs[d], &mut slot[..cs.range()]);
-                    },
+                    |g, d, slot| pack_mode_lane(&reps[g].op.core().modes[d], vs[d], slot),
                     seed_first_lane(),
                     |g, z| {
                         for v in z[sketch_len..].iter_mut() {

@@ -7,13 +7,23 @@
 //! client either receives exactly one response, or observes a clean
 //! disconnect for jobs that were still queued behind the stop sentinels.
 //! `answered == total_completed` ties the two books together.
+//!
+//! The fused-flight tests additionally pin the cross-request micro-batching
+//! contract: fused execution is **bit-identical** to serial (asserted as a
+//! permutation match against per-`req_id` serial references, because the
+//! job → `req_id` pairing is timing-dependent), flights wider than one job
+//! actually occur under a single-worker flood, and a poisoned job inside a
+//! fused flight costs exactly its own reply.
 
 use fcs::coordinator::{
-    Request, Response, Service, ServiceConfig, ServiceError, SketchMethod,
+    job_rng, Request, Response, Service, ServiceConfig, ServiceError, SketchMethod, WorkerState,
 };
 use fcs::tensor::{CpTensor, Tensor};
 use fcs::util::prng::Rng;
 use std::time::Duration;
+
+/// Service seed shared by [`start`] and the reference-table constructions.
+const SEED: u64 = 9;
 
 fn start(workers: usize, cap: usize) -> Service {
     Service::start(
@@ -21,11 +31,17 @@ fn start(workers: usize, cap: usize) -> Service {
             workers,
             queue_capacity: cap,
             batch_deadline: Duration::from_micros(200),
-            seed: 9,
+            seed: SEED,
         },
         None,
     )
     .unwrap()
+}
+
+/// Bitwise slice equality — the fused-path contract is bit-identity, not
+/// approximate agreement, so compare `f64::to_bits`, not `==`.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// Expected sketch length for a `SketchDense` request.
@@ -256,6 +272,183 @@ fn poison_jobs_never_lose_responses_and_workers_survive() {
     let report = svc.stats();
     assert_eq!(report.total_completed as usize, total + 1, "stats lost a job");
     assert_eq!(report.rejected_busy, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn worker_state_fused_path_matches_serial_bitwise() {
+    // Mixed-rank, same-geometry flight straight through WorkerState: the
+    // fused entry point must reproduce each job's serial sketch bit for bit
+    // when driven with the same per-job RNGs.
+    let mut rng = Rng::seed_from_u64(7);
+    let j = 16usize;
+    let cps: Vec<CpTensor> =
+        (0..5).map(|w| CpTensor::randn(&mut rng, &[6, 5, 4], 1 + w % 3)).collect();
+    let mut serial = Vec::new();
+    for (id, cp) in cps.iter().enumerate() {
+        // Fresh state per job: the serial reference must not depend on
+        // arena warmth from earlier jobs (and provably does not — but the
+        // reference should not assume that).
+        let mut st = WorkerState::new();
+        let mut out = Vec::new();
+        st.sketch_cp_into(cp, j, &mut job_rng(SEED, id as u64), &mut out);
+        serial.push(out);
+    }
+    let mut st = WorkerState::new();
+    let refs: Vec<&CpTensor> = cps.iter().collect();
+    let mut rngs: Vec<Rng> = (0..cps.len()).map(|id| job_rng(SEED, id as u64)).collect();
+    let mut outs = Vec::new();
+    st.sketch_cp_fused(&refs, j, &mut rngs, &mut outs);
+    assert_eq!(outs.len(), serial.len());
+    for (w, (f, s)) in outs.iter().zip(&serial).enumerate() {
+        assert!(bits_eq(f, s), "job {w}: fused sketch is not bit-identical to serial");
+    }
+}
+
+#[test]
+fn fused_flights_are_bit_identical_to_serial() {
+    // One worker ⇒ the pool is always "saturated", so the drain-and-fuse
+    // path engages; a moderately expensive class lets the queue build while
+    // the first flight executes, so flights wider than one job actually
+    // occur. Two fusion classes with *identical payloads within each class*:
+    // the job → req_id pairing is nondeterministic (unstable sort + timing-
+    // dependent drain boundaries), so correctness is asserted as a
+    // permutation match — every response must equal the serial output of its
+    // payload under exactly one unused req_id, and all req_ids must be used.
+    let svc = start(1, 512);
+    let h = svc.handle();
+    let k = 24usize;
+    let total = 2 * k;
+    let mut rng = Rng::seed_from_u64(42);
+    let cp_a = CpTensor::randn(&mut rng, &[30, 30, 30], 4);
+    let cp_b = CpTensor::randn(&mut rng, &[9, 7, 11], 2);
+    let (ja, jb) = (64usize, 16usize);
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        let req = if i % 2 == 0 {
+            Request::SketchCp { cp: cp_a.clone(), j: ja }
+        } else {
+            Request::SketchCp { cp: cp_b.clone(), j: jb }
+        };
+        rxs.push(h.submit(req).expect("queue sized for the flood"));
+    }
+    // Per-req_id serial references: what a pre-fusion worker would have
+    // produced for either payload under each possible req_id (the service's
+    // counter starts at 0 and draws exactly one id per accepted job).
+    let mut st = WorkerState::new();
+    let (mut ref_a, mut ref_b) = (Vec::with_capacity(total), Vec::with_capacity(total));
+    for id in 0..total as u64 {
+        let mut out = Vec::new();
+        st.sketch_cp_into(&cp_a, ja, &mut job_rng(SEED, id), &mut out);
+        ref_a.push(out);
+        let mut out = Vec::new();
+        st.sketch_cp_into(&cp_b, jb, &mut job_rng(SEED, id), &mut out);
+        ref_b.push(out);
+    }
+    let mut used = vec![false; total];
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let Response::Sketch(v) = rx.recv().unwrap().unwrap() else {
+            panic!("job {i}: wrong response kind")
+        };
+        let refs = if i % 2 == 0 { &ref_a } else { &ref_b };
+        let id = (0..total)
+            .find(|&id| !used[id] && bits_eq(&v, &refs[id]))
+            .unwrap_or_else(|| {
+                panic!("job {i}: fused output matches no unused serial reference")
+            });
+        used[id] = true;
+    }
+    assert!(used.iter().all(|&u| u), "req_ids not covered exactly once");
+    let report = svc.stats();
+    assert_eq!(report.total_completed as usize, total);
+    // The tentpole's observable: flights wider than one job occurred, and
+    // the per-width books account for every worker-pool job exactly once.
+    assert!(
+        report.flights.iter().any(|f| f.width > 1),
+        "no fused flight wider than 1 under a single-worker flood: {:?}",
+        report.flights
+    );
+    assert_eq!(report.flights.iter().map(|f| f.jobs).sum::<u64>() as usize, total);
+    let op = report.per_op.iter().find(|o| o.op == "sketch_cp").unwrap();
+    assert_eq!(op.completed as usize, total);
+    assert!(op.exec_p50_us > 0.0, "queue/exec split must be recorded for pool ops");
+    svc.shutdown();
+}
+
+#[test]
+fn poisoned_job_inside_fused_flight_costs_only_its_own_reply() {
+    // Identical-class CP flood with NaN-factor jobs interleaved: every job
+    // fuses into the same class, so the poison rides *inside* shared
+    // flights. Contract: healthy jobs stay bit-identical to their serial
+    // references (the post-panic retry re-derives each RNG from its stored
+    // req_id), the poison costs exactly its own reply, and the pool
+    // survives.
+    let svc = start(1, 512);
+    let h = svc.handle();
+    let k = 40usize;
+    let mut rng = Rng::seed_from_u64(0xF00D);
+    let cp_h = CpTensor::randn(&mut rng, &[5, 4, 6], 2);
+    let mut cp_p = CpTensor::randn(&mut rng, &[5, 4, 6], 2);
+    cp_p.factors[1].data[3] = f64::NAN;
+    let j = 12usize;
+    let mut rxs = Vec::new();
+    for i in 0..k {
+        let cp = if i % 5 == 0 { cp_p.clone() } else { cp_h.clone() };
+        rxs.push(h.submit(Request::SketchCp { cp, j }).unwrap());
+    }
+    let mut st = WorkerState::new();
+    let refs: Vec<Vec<f64>> = (0..k as u64)
+        .map(|id| {
+            let mut out = Vec::new();
+            st.sketch_cp_into(&cp_h, j, &mut job_rng(SEED, id), &mut out);
+            out
+        })
+        .collect();
+    let mut used = vec![false; k];
+    let mut poison_execs = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("job {i}: reply sender dropped — response lost"));
+        if i % 5 == 0 {
+            match resp {
+                // Release builds: the fused flight succeeds and the NaN
+                // stays confined to its own job's lanes.
+                Ok(Response::Sketch(_)) => {}
+                // Debug builds: the Hermitian-residue assert unwinds the
+                // whole fused attempt; the serial retry's own catch_unwind
+                // converts this job (and only this job) into an Exec.
+                Err(ServiceError::Exec(msg)) => {
+                    assert!(msg.contains("panicked"), "job {i}: unexpected Exec: {msg}");
+                    poison_execs += 1;
+                }
+                other => panic!("job {i}: unexpected poison outcome: {other:?}"),
+            }
+        } else {
+            let Ok(Response::Sketch(v)) = resp else {
+                panic!("job {i}: healthy job failed inside a poisoned flight")
+            };
+            assert!(v.iter().all(|x| x.is_finite()), "job {i}: NaN leaked across fused lanes");
+            let id = (0..k)
+                .find(|&id| !used[id] && bits_eq(&v, &refs[id]))
+                .unwrap_or_else(|| {
+                    panic!("job {i}: healthy output not bit-identical to any serial reference")
+                });
+            used[id] = true;
+        }
+    }
+    if cfg!(debug_assertions) {
+        assert_eq!(poison_execs, k / 5, "every poison job must surface as Exec in debug");
+    }
+    // The pool must still be fully alive after repeated poisoned flights.
+    let tail = h
+        .call(Request::SketchCp { cp: cp_h.clone(), j })
+        .expect("worker pool dead after poisoned flights");
+    let Response::Sketch(v) = tail else { panic!("wrong response kind") };
+    assert!(v.iter().all(|x| x.is_finite()));
+    let report = svc.stats();
+    assert_eq!(report.total_completed as usize, k + 1, "a reply went missing from the books");
+    assert_eq!(report.flights.iter().map(|f| f.jobs).sum::<u64>() as usize, k + 1);
     svc.shutdown();
 }
 

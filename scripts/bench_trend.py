@@ -12,10 +12,12 @@ Metric extraction is generic so new bench rows join the trajectory for free:
 * every numeric field named `secs*`/`*_secs` is a lower-is-better timing;
 * every numeric field named `speedup*` is a higher-is-better ratio;
 * rows are identified by their source file, `path` field, and any of the
-  qualifier fields (rank, n, lanes, batch, d_reps, j) present.
+  qualifier fields (rank, n, lanes, batch, d_reps, j, width) present —
+  `width` qualifies the coordinator fused-flight flood rows (`coord_flood`),
+  whose `secs` timing is gated per burst width.
 
 Usage:
-    scripts/bench_trend.py [--results DIR ...] [--out BENCH_pr5.json]
+    scripts/bench_trend.py [--results DIR ...] [--out BENCH_pr6.json]
                            [--threshold 0.20] [--soft]
 """
 
@@ -28,7 +30,7 @@ import os
 import re
 import sys
 
-QUALIFIERS = ("rank", "n", "lanes", "batch", "d_reps", "j")
+QUALIFIERS = ("rank", "n", "lanes", "batch", "d_reps", "j", "width")
 TIMING_RE = re.compile(r"(^secs|_secs$)")
 SPEEDUP_RE = re.compile(r"^speedup")
 
@@ -96,7 +98,7 @@ def main() -> int:
         default=["results", "rust/results"],
         help="directories holding the bench JSON (default: results rust/results)",
     )
-    ap.add_argument("--out", default="BENCH_pr5.json", help="snapshot file at the repo root")
+    ap.add_argument("--out", default="BENCH_pr6.json", help="snapshot file at the repo root")
     ap.add_argument("--threshold", type=float, default=0.20, help="regression gate (fraction)")
     ap.add_argument("--soft", action="store_true", help="report regressions but exit 0")
     args = ap.parse_args()
