@@ -14,6 +14,16 @@ use fcs::tensor::{CpTensor, Tensor};
 use fcs::util::prng::Rng;
 
 fn main() {
+    // Scrape hook (used by scripts/metrics_smoke.py): serve GET /metrics +
+    // /healthz for the duration of the run when FCS_METRICS_ADDR is set,
+    // then hold the process open FCS_METRICS_HOLD_SECS seconds so a scraper
+    // can read the final counters.
+    let exporter = std::env::var("FCS_METRICS_ADDR").ok().map(|addr| {
+        let exp = fcs::obs::exporter::Exporter::bind(&addr).expect("bind FCS_METRICS_ADDR");
+        eprintln!("[perf] serving /metrics on {}", exp.local_addr());
+        exp
+    });
+
     let reps = if quick_mode() { 5 } else { 20 };
     let mut table = Table::new("§Perf — hot paths", &["path", "metric", "value"]);
     let mut sink = ResultSink::new("perf_hotpath");
@@ -441,4 +451,16 @@ fn main() {
 
     table.print();
     sink.flush();
+
+    if let Some(mut exp) = exporter {
+        let hold: u64 = std::env::var("FCS_METRICS_HOLD_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        if hold > 0 {
+            eprintln!("[perf] holding /metrics open for {hold}s");
+            std::thread::sleep(std::time::Duration::from_secs(hold));
+        }
+        exp.shutdown();
+    }
 }

@@ -7,8 +7,17 @@
 //!                                  └─ fused flights: same-class sketch runs
 //!                                     share spectral transform dispatches
 //!          Stats: p50/p95/p99 per op (queue-wait vs exec split), per-width
-//!                 fused-flight summaries, batch fill, rejections, throughput
+//!                 fused-flight summaries, plan-cache hit rates, batch fill,
+//!                 rejections, throughput
 //! ```
+//!
+//! Observability: every `Stats::record*` call site also feeds the crate-wide
+//! registry (`crate::obs`), so the in-process [`StatsReport`] and a
+//! Prometheus scrape of `GET /metrics` (serve one with
+//! `crate::obs::exporter::Exporter::bind`) can never disagree; workers
+//! additionally leave per-request trace spans
+//! (submit → queue → flight-start → reply, keyed by [`service::job_rng`]
+//! req ids) in `crate::obs::trace`, dumpable via `GET /traces`.
 //!
 //! Invariants (property-tested in `rust/tests/coordinator_service.rs` and
 //! `rust/tests/coordinator_stress.rs`): every accepted request is answered
@@ -23,4 +32,4 @@ pub mod stats;
 
 pub use msg::{Request, Response, ServiceError, SketchMethod};
 pub use service::{job_rng, Service, ServiceConfig, ServiceHandle, WorkerState};
-pub use stats::{FlightReport, Stats, StatsReport};
+pub use stats::{FlightReport, PlanCacheReport, Stats, StatsReport};

@@ -42,6 +42,7 @@ use super::msg::{Request, Response, ServiceError, SketchMethod};
 use super::stats::{Stats, StatsReport};
 use crate::fft::FftWorkspace;
 use crate::hash::{HashPair, HashTable, ModeHashes};
+use crate::obs::trace;
 use crate::runtime::{RuntimeHandle, TensorArg};
 use crate::sketch::common::{apply_cp_fused, sketch_dense_into, FusedCpJob};
 use crate::sketch::{CountSketch, SpectralSketchCore};
@@ -109,12 +110,19 @@ impl ServiceHandle {
         self.validate(&req)?;
         let (reply, rx) = std::sync::mpsc::channel();
         let job = Box::new(Job { req, reply, enqueued: Instant::now() });
-        let target = match &job.req {
-            Request::CsVec { .. } => &self.batch_tx,
-            _ => &self.work_tx,
+        // Queue-depth gauges: incremented on a successful enqueue here,
+        // decremented at the single dequeue point of each consumer loop.
+        let (target, depth) = match &job.req {
+            Request::CsVec { .. } => {
+                (&self.batch_tx, &crate::obs::metrics().queue_depth_batcher)
+            }
+            _ => (&self.work_tx, &crate::obs::metrics().queue_depth_worker),
         };
         match target.try_send(QueueMsg::Work(job)) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                depth.inc();
+                Ok(rx)
+            }
             Err(TrySendError::Full(_)) => {
                 self.stats.record_rejection();
                 Err(ServiceError::Busy)
@@ -214,6 +222,10 @@ impl Service {
     /// (used when artifacts are absent); with a runtime, `cs_vec` batches on
     /// the XLA executable and `sketch_cp` uses `fcs_rank1` when shapes match.
     pub fn start(cfg: ServiceConfig, runtime: Option<RuntimeHandle>) -> anyhow::Result<Service> {
+        // Pin the trace epoch and force metric registration before any job
+        // is stamped or any hot path records — steady-state `metrics()`
+        // lookups must never hit the registration slow path.
+        crate::obs::init();
         let stats = Arc::new(Stats::new());
         stats.mark_started();
 
@@ -278,7 +290,7 @@ impl Service {
                 std::thread::Builder::new()
                     .name(format!("fcs-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(rx, runtime, seed, counter, busy, pool_size, stats);
+                        worker_loop(w, rx, runtime, seed, counter, busy, pool_size, stats);
                     })
                     .expect("spawn worker"),
             );
@@ -336,10 +348,14 @@ fn batcher_loop(
     let cs = crate::sketch::CountSketch::new(table.clone());
     let mut stopping = false;
 
+    let depth = &crate::obs::metrics().queue_depth_batcher;
     while !stopping {
         // Block for the first job of the batch.
         let first = match rx.recv() {
-            Ok(QueueMsg::Work(j)) => j,
+            Ok(QueueMsg::Work(j)) => {
+                depth.dec();
+                j
+            }
             Ok(QueueMsg::Stop) | Err(_) => return,
         };
         let mut batch = vec![first];
@@ -350,7 +366,10 @@ fn batcher_loop(
                 break;
             }
             match rx.recv_timeout(flush_at - now) {
-                Ok(QueueMsg::Work(j)) => batch.push(j),
+                Ok(QueueMsg::Work(j)) => {
+                    depth.dec();
+                    batch.push(j);
+                }
                 Ok(QueueMsg::Stop) => {
                     stopping = true; // flush this batch, then exit
                     break;
@@ -684,6 +703,7 @@ impl WorkerState {
 }
 
 fn worker_loop(
+    worker: usize,
     rx: Arc<Mutex<Receiver<QueueMsg>>>,
     runtime: Option<RuntimeHandle>,
     seed: u64,
@@ -692,6 +712,7 @@ fn worker_loop(
     pool_size: usize,
     stats: Arc<Stats>,
 ) {
+    let depth = &crate::obs::metrics().queue_depth_worker;
     let mut state = WorkerState::new();
     let mut batch: Vec<Box<Job>> = Vec::with_capacity(WORKER_DRAIN);
     loop {
@@ -699,7 +720,10 @@ fn worker_loop(
         {
             let guard = rx.lock().unwrap();
             match guard.recv() {
-                Ok(QueueMsg::Work(j)) => batch.push(j),
+                Ok(QueueMsg::Work(j)) => {
+                    depth.dec();
+                    batch.push(j);
+                }
                 Ok(QueueMsg::Stop) | Err(_) => return,
             }
             // Opportunistic drain — but only while every *other* worker is
@@ -721,7 +745,10 @@ fn worker_loop(
                 && !stopping
             {
                 match guard.try_recv() {
-                    Ok(QueueMsg::Work(j)) => batch.push(j),
+                    Ok(QueueMsg::Work(j)) => {
+                        depth.dec();
+                        batch.push(j);
+                    }
                     Ok(QueueMsg::Stop) => stopping = true,
                     Err(_) => {
                         let now = Instant::now();
@@ -729,7 +756,10 @@ fn worker_loop(
                             break;
                         }
                         match guard.recv_timeout(flush_at - now) {
-                            Ok(QueueMsg::Work(j)) => batch.push(j),
+                            Ok(QueueMsg::Work(j)) => {
+                                depth.dec();
+                                batch.push(j);
+                            }
                             Ok(QueueMsg::Stop) => stopping = true,
                             Err(_) => break,
                         }
@@ -737,6 +767,9 @@ fn worker_loop(
                 }
             }
         }
+        // Dequeue timestamp for this drained batch — the trace spans' "queue"
+        // event (the moment the jobs left the queue for this worker).
+        let drained = Instant::now();
         // Same-shape grouping: stable order within a key does not matter for
         // correctness (every job gets its own hash draw), so use the
         // in-place unstable sort — no allocation in the drain loop.
@@ -756,7 +789,7 @@ fn worker_loop(
             while end < batch.len() && batch[end].req.fuses_with(&batch[i].req) {
                 end += 1;
             }
-            execute_flight(&mut state, &batch[i..end], &runtime, seed, &counter, &stats);
+            execute_flight(&mut state, worker, &batch[i..end], drained, &runtime, seed, &counter, &stats);
             i = end;
         }
         batch.clear();
@@ -780,9 +813,12 @@ fn worker_loop(
 /// the worker state and retries each job serially with the *same* RNG,
 /// keeping healthy outputs bit-identical while the poisoned job alone pays
 /// with an [`ServiceError::Exec`] reply.
+#[allow(clippy::too_many_arguments)]
 fn execute_flight(
     state: &mut WorkerState,
+    worker: usize,
     jobs: &[Box<Job>],
+    drained: Instant,
     runtime: &Option<RuntimeHandle>,
     seed: u64,
     counter: &AtomicU64,
@@ -798,12 +834,34 @@ fn execute_flight(
     let op = jobs[0].req.op_name();
     // Queue-wait is submit → flight start; exec is flight start → reply.
     // saturating: Instant math must not panic on cross-thread clock skew.
-    let finish = |job: &Job, result: Result<Response, ServiceError>| {
+    // Besides the reservoir/registry recording, every finished job leaves a
+    // trace span (submit → queue → flight-start → reply, keyed by its
+    // `job_rng` req_id) in this worker's ring; each edge is clamped to its
+    // predecessor so the recorded ordering is structural, not clock-trusting.
+    let finish = |job: &Job, req_id: u64, result: Result<Response, ServiceError>| {
         let total_us = job.enqueued.elapsed().as_secs_f64() * 1e6;
         let queue_us = exec_start.saturating_duration_since(job.enqueued).as_secs_f64() * 1e6;
         let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
         stats.record_job(op, total_us, queue_us, exec_us);
+        let ok = result.is_ok();
         let _ = job.reply.send(result);
+        let submit_us = trace::epoch_us(job.enqueued);
+        let queue_evt_us = trace::epoch_us(drained).max(submit_us);
+        let flight_start_us = trace::epoch_us(exec_start).max(queue_evt_us);
+        let reply_us = trace::epoch_us(Instant::now()).max(flight_start_us);
+        trace::global().record(
+            worker,
+            trace::TraceSpan {
+                req_id,
+                op,
+                submit_us,
+                queue_us: queue_evt_us,
+                flight_start_us,
+                reply_us,
+                width: width as u16,
+                ok,
+            },
+        );
     };
     let fused_cp = width > 1
         && matches!(jobs[0].req, Request::SketchCp { .. })
@@ -832,8 +890,8 @@ fn execute_flight(
         }));
         match caught {
             Ok(outs) => {
-                for (job, out) in jobs.iter().zip(outs) {
-                    finish(job, Ok(Response::Sketch(out)));
+                for ((k, job), out) in jobs.iter().enumerate().zip(outs) {
+                    finish(job, req_ids[k], Ok(Response::Sketch(out)));
                 }
                 serial_from = width;
             }
@@ -841,6 +899,7 @@ fn execute_flight(
                 // The arenas may have been mid-rewrite when the unwind tore
                 // through them — rebuild rather than trust a torn workspace,
                 // then retry serially (fresh RNGs re-derived per req_id).
+                crate::obs::metrics().fused_flight_aborts.inc();
                 *state = WorkerState::new();
             }
         }
@@ -857,6 +916,7 @@ fn execute_flight(
         let result = match caught {
             Ok(r) => r,
             Err(payload) => {
+                crate::obs::metrics().poisoned_jobs.inc();
                 *state = WorkerState::new();
                 Err(ServiceError::Exec(format!(
                     "worker panicked: {}",
@@ -864,7 +924,7 @@ fn execute_flight(
                 )))
             }
         };
-        finish(job, result);
+        finish(job, req_ids[k], result);
     }
     stats.record_flight(width, exec_start.elapsed().as_secs_f64() * 1e6);
 }

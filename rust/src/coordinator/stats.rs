@@ -1,23 +1,57 @@
 //! Service metrics: per-op latency percentiles (total, split into queue-wait
 //! vs execution), per-width fused-flight summaries, throughput, batching
 //! stats, backpressure counters.
+//!
+//! Every `record*` method feeds **two** sinks from the same call site: the
+//! in-process reservoirs this module reports percentiles from, and the
+//! crate-wide registry series behind `GET /metrics`
+//! ([`crate::obs::metrics`]). Single-sourcing the recording points is what
+//! keeps [`StatsReport`] and a scrape from ever disagreeing about counts.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Bounded reservoir size: only the newest samples up to this cap are kept
-/// per series, so a long-running service cannot grow its stats unboundedly.
+/// Bounded reservoir size per series. Retention is a *ring*: once full, the
+/// newest sample overwrites the oldest, so percentiles always describe the
+/// most recent `RESERVOIR_CAP` samples instead of freezing on the first
+/// 100k a long-running service ever saw.
 const RESERVOIR_CAP: usize = 100_000;
+
+/// Fixed-capacity ring of `f64` samples. `push` is O(1) and allocation-free
+/// once the ring has filled; `samples` returns the retained window in
+/// arbitrary order (fine for percentiles, which sort a copy anyway).
+#[derive(Debug, Default)]
+struct Reservoir {
+    buf: Vec<f64>,
+    /// Total samples ever offered; `written % RESERVOIR_CAP` is the next slot.
+    written: u64,
+}
+
+impl Reservoir {
+    fn push(&mut self, v: f64) {
+        let slot = (self.written % RESERVOIR_CAP as u64) as usize;
+        if slot == self.buf.len() {
+            self.buf.push(v);
+        } else {
+            self.buf[slot] = v;
+        }
+        self.written += 1;
+    }
+
+    fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+}
 
 #[derive(Debug, Default)]
 struct OpStats {
-    latencies_us: Vec<f64>,
+    latencies_us: Reservoir,
     /// Submit → flight-start wait, recorded by [`Stats::record_job`]
     /// (worker-pool ops only; the batcher's `record` leaves it empty).
-    queue_us: Vec<f64>,
+    queue_us: Reservoir,
     /// Flight-start → reply execution time, parallel to `queue_us`.
-    exec_us: Vec<f64>,
+    exec_us: Reservoir,
     completed: u64,
 }
 
@@ -28,7 +62,7 @@ struct OpStats {
 struct FlightStats {
     flights: u64,
     jobs: u64,
-    exec_us: Vec<f64>,
+    exec_us: Reservoir,
 }
 
 #[derive(Debug, Default)]
@@ -55,6 +89,10 @@ pub struct StatsReport {
     /// Per-width fused-flight summaries, sorted by width. Widths > 1 here
     /// are the direct evidence that cross-request fusion actually engaged.
     pub flights: Vec<FlightReport>,
+    /// FFT plan-cache accounting, split per cache (forward complex plans vs
+    /// real recombination twiddles), read from the global planner at
+    /// snapshot time.
+    pub plan_cache: PlanCacheReport,
     pub rejected_busy: u64,
     pub batches: u64,
     pub mean_batch_fill: f64,
@@ -89,6 +127,47 @@ pub struct FlightReport {
     pub exec_p95_us: f64,
 }
 
+/// Per-cache FFT plan-cache snapshot: a cold real-twiddle cache is a
+/// different operational signal than a cold complex-plan cache.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanCacheReport {
+    pub forward_hits: u64,
+    pub forward_misses: u64,
+    pub real_hits: u64,
+    pub real_misses: u64,
+}
+
+impl PlanCacheReport {
+    fn snapshot() -> Self {
+        let c = crate::fft::global_planner().cache_counters_by_cache();
+        PlanCacheReport {
+            forward_hits: c.forward.0,
+            forward_misses: c.forward.1,
+            real_hits: c.real.0,
+            real_misses: c.real.1,
+        }
+    }
+
+    fn rate(h: u64, m: u64) -> f64 {
+        if h + m == 0 { f64::NAN } else { h as f64 / (h + m) as f64 }
+    }
+
+    /// Forward-cache hit rate in `[0, 1]` (`NaN` when the cache is untouched).
+    pub fn forward_hit_rate(&self) -> f64 {
+        Self::rate(self.forward_hits, self.forward_misses)
+    }
+
+    /// Real-plan-cache hit rate in `[0, 1]` (`NaN` when untouched).
+    pub fn real_hit_rate(&self) -> f64 {
+        Self::rate(self.real_hits, self.real_misses)
+    }
+}
+
+/// Clamp a (nonnegative) microsecond / count float into histogram domain.
+fn as_u64(v: f64) -> u64 {
+    if v >= 0.0 { v as u64 } else { 0 }
+}
+
 impl Stats {
     pub fn new() -> Self {
         Self::default()
@@ -102,54 +181,62 @@ impl Stats {
     }
 
     pub fn record(&self, op: &'static str, latency_us: f64) {
+        let m = crate::obs::metrics().op(op);
+        m.completed.inc();
+        m.latency_us.observe(as_u64(latency_us));
         let mut g = self.inner.lock().unwrap();
         let e = g.per_op.entry(op).or_default();
         e.completed += 1;
-        // Bounded reservoir: keep the newest samples up to the cap.
-        if e.latencies_us.len() < RESERVOIR_CAP {
-            e.latencies_us.push(latency_us);
-        }
+        e.latencies_us.push(latency_us);
     }
 
     /// Worker-pool job completion with its queue-wait/execution split:
     /// `total_us` is submit → reply, `queue_us` is submit → flight start,
     /// `exec_us` is flight start → reply (`queue + exec ≈ total`).
     pub fn record_job(&self, op: &'static str, total_us: f64, queue_us: f64, exec_us: f64) {
+        let m = crate::obs::metrics().op(op);
+        m.completed.inc();
+        m.latency_us.observe(as_u64(total_us));
+        m.queue_wait_us.observe(as_u64(queue_us));
+        m.exec_us.observe(as_u64(exec_us));
         let mut g = self.inner.lock().unwrap();
         let e = g.per_op.entry(op).or_default();
         e.completed += 1;
-        if e.latencies_us.len() < RESERVOIR_CAP {
-            e.latencies_us.push(total_us);
-            e.queue_us.push(queue_us);
-            e.exec_us.push(exec_us);
-        }
+        e.latencies_us.push(total_us);
+        e.queue_us.push(queue_us);
+        e.exec_us.push(exec_us);
     }
 
     /// One worker flight finished: `width` jobs executed as a unit taking
     /// `exec_us` end to end.
     pub fn record_flight(&self, width: usize, exec_us: f64) {
+        let m = crate::obs::metrics();
+        m.flight_width.observe(width as u64);
+        m.flight_exec_us.observe(as_u64(exec_us));
         let mut g = self.inner.lock().unwrap();
         let f = g.flights.entry(width).or_default();
         f.flights += 1;
         f.jobs += width as u64;
-        if f.exec_us.len() < RESERVOIR_CAP {
-            f.exec_us.push(exec_us);
-        }
+        f.exec_us.push(exec_us);
     }
 
     pub fn record_rejection(&self) {
+        crate::obs::metrics().rejected_busy.inc();
         self.inner.lock().unwrap().rejected_busy += 1;
     }
 
     pub fn record_batch(&self, fill: usize) {
+        let m = crate::obs::metrics();
+        m.batches.inc();
+        m.batched_jobs.add(fill as u64);
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batched_items += fill as u64;
     }
 
     pub fn report(&self) -> StatsReport {
-        // Sort-and-read a percentile from an unsorted reservoir (0 when
-        // the series recorded nothing, e.g. queue/exec for batcher ops).
+        // Sort-and-read a percentile from an unsorted reservoir window (0
+        // when the series recorded nothing, e.g. queue/exec for batcher ops).
         fn pct_of(samples: &[f64], p: f64) -> f64 {
             if samples.is_empty() {
                 return 0.0;
@@ -166,11 +253,11 @@ impl Stats {
             per_op.push(OpReport {
                 op,
                 completed: s.completed,
-                p50_us: pct_of(&s.latencies_us, 50.0),
-                p95_us: pct_of(&s.latencies_us, 95.0),
-                p99_us: pct_of(&s.latencies_us, 99.0),
-                queue_p50_us: pct_of(&s.queue_us, 50.0),
-                exec_p50_us: pct_of(&s.exec_us, 50.0),
+                p50_us: pct_of(s.latencies_us.samples(), 50.0),
+                p95_us: pct_of(s.latencies_us.samples(), 95.0),
+                p99_us: pct_of(s.latencies_us.samples(), 99.0),
+                queue_p50_us: pct_of(s.queue_us.samples(), 50.0),
+                exec_p50_us: pct_of(s.exec_us.samples(), 50.0),
             });
         }
         per_op.sort_by_key(|r| r.op);
@@ -181,14 +268,15 @@ impl Stats {
                 width,
                 flights: f.flights,
                 jobs: f.jobs,
-                exec_p50_us: pct_of(&f.exec_us, 50.0),
-                exec_p95_us: pct_of(&f.exec_us, 95.0),
+                exec_p50_us: pct_of(f.exec_us.samples(), 50.0),
+                exec_p95_us: pct_of(f.exec_us.samples(), 95.0),
             })
             .collect();
         let elapsed = g.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         StatsReport {
             per_op,
             flights,
+            plan_cache: PlanCacheReport::snapshot(),
             rejected_busy: g.rejected_busy,
             batches: g.batches,
             mean_batch_fill: if g.batches > 0 {
@@ -252,5 +340,45 @@ mod tests {
         assert_eq!((r.flights[1].width, r.flights[1].flights, r.flights[1].jobs), (8, 1, 8));
         assert!(r.flights[1].exec_p50_us > 0.0);
         assert!(r.flights[1].exec_p95_us >= r.flights[1].exec_p50_us);
+    }
+
+    /// Regression for the pre-PR 7 retention bug: the reservoir used to
+    /// *stop accepting* samples at the cap, freezing percentiles on the
+    /// first 100k observations forever. The ring must instead report the
+    /// newest `RESERVOIR_CAP` window.
+    #[test]
+    fn reservoir_overfill_reports_recent_window() {
+        let s = Stats::new();
+        s.mark_started();
+        // 110k monotonically increasing latencies: the retained window is
+        // 10_000..110_000, so the median must sit near 60_000 — under the
+        // old freeze-at-cap behavior it would sit near 50_000.
+        let n = RESERVOIR_CAP + 10_000;
+        for i in 0..n {
+            s.record("sketch_dense", i as f64);
+        }
+        let r = s.report();
+        let op = r.per_op.iter().find(|o| o.op == "sketch_dense").unwrap();
+        assert_eq!(op.completed, n as u64);
+        assert!(
+            (op.p50_us - 60_000.0).abs() < 500.0,
+            "p50 {} should reflect the recent window (~60k), not the frozen prefix (~50k)",
+            op.p50_us
+        );
+        assert!(op.p99_us > 108_000.0, "p99 {} must see the newest samples", op.p99_us);
+    }
+
+    #[test]
+    fn plan_cache_report_reads_global_planner() {
+        // Touch the global planner so the snapshot has definite structure.
+        let before = crate::fft::global_planner().cache_counters_by_cache();
+        let _ = crate::fft::global_planner().plan(64);
+        let _ = crate::fft::global_planner().plan(64);
+        let s = Stats::new();
+        let r = s.report();
+        let pc = r.plan_cache;
+        assert!(pc.forward_hits + pc.forward_misses >= before.forward.0 + before.forward.1 + 2);
+        let rate = pc.forward_hit_rate();
+        assert!(rate.is_nan() || (0.0..=1.0).contains(&rate));
     }
 }

@@ -19,7 +19,7 @@ pub use convolve::{
 };
 pub use plan::{
     dft_naive, fft_inplace, fft_real, global_planner, ifft_inplace, ifft_to_real, Dir, FftScratch,
-    Plan, Planner, RealPlan, ScalarRadix2Plan,
+    Plan, PlanCacheCounters, Planner, RealPlan, ScalarRadix2Plan,
 };
 pub use workspace::{
     fft_real_into, fft_real_many_into, inverse_real_into, inverse_real_many_into,

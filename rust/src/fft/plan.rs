@@ -591,14 +591,54 @@ impl RealPlan {
 // Planner (process-wide plan cache)
 // ---------------------------------------------------------------------------
 
+/// Per-cache `(hits, misses)` split of the planner's accounting: the
+/// forward complex-plan cache vs the real-recombination-twiddle cache. A
+/// cold real cache is *not* the same operational signal as a cold complex
+/// cache (the latter implies full twiddle/bit-reversal rebuilds), so the
+/// split is surfaced both here and as the `cache="forward"|"real"` label on
+/// `fcs_plan_cache_{hits,misses}_total`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheCounters {
+    /// `(hits, misses)` of the complex forward/inverse [`Plan`] cache.
+    pub forward: (u64, u64),
+    /// `(hits, misses)` of the packed-real [`RealPlan`] cache.
+    pub real: (u64, u64),
+}
+
+impl PlanCacheCounters {
+    fn rate(h: u64, m: u64) -> f64 {
+        if h + m == 0 { f64::NAN } else { h as f64 / (h + m) as f64 }
+    }
+
+    /// Hit rate of the forward cache in `[0, 1]` (`NaN` when untouched).
+    pub fn forward_hit_rate(&self) -> f64 {
+        Self::rate(self.forward.0, self.forward.1)
+    }
+
+    /// Hit rate of the real-plan cache in `[0, 1]` (`NaN` when untouched).
+    pub fn real_hit_rate(&self) -> f64 {
+        Self::rate(self.real.0, self.real.1)
+    }
+}
+
+/// Which plan map a [`Planner::cached`] lookup is serving — selects both
+/// the per-instance counters and the registry series to feed.
+#[derive(Clone, Copy)]
+enum PlanCache {
+    Forward,
+    Real,
+}
+
 /// Process-wide plan cache. The FCS hot loop transforms many vectors of the
 /// same length; building twiddles once matters (§Perf).
 #[derive(Default)]
 pub struct Planner {
     plans: Mutex<HashMap<usize, Arc<Plan>>>,
     real_plans: Mutex<HashMap<usize, Arc<RealPlan>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    fwd_hits: AtomicU64,
+    fwd_misses: AtomicU64,
+    real_hits: AtomicU64,
+    real_misses: AtomicU64,
 }
 
 impl Planner {
@@ -610,19 +650,40 @@ impl Planner {
     /// expensive — Bluestein builds a 2×-padded kernel FFT) construction
     /// happens **outside** the mutex, so a large build never blocks
     /// concurrent sketching threads that want already-cached lengths. Also
-    /// the single home of the hit/miss accounting the alloc-discipline test
-    /// asserts on.
+    /// the single home of the hit/miss accounting: per-instance atomics
+    /// (what [`Self::cache_counters`] reads) and the crate-wide
+    /// `fcs_plan_cache_*` registry series advance from the same branch, so
+    /// they can never disagree. Every `Planner` instance feeds the global
+    /// series; in production only [`global_planner`] exists.
     fn cached<P>(
         &self,
         map: &Mutex<HashMap<usize, Arc<P>>>,
+        which: PlanCache,
         n: usize,
         build: impl FnOnce(usize) -> P,
     ) -> Arc<P> {
+        let obs = crate::obs::metrics();
+        let (hits, misses, obs_hits, obs_misses) = match which {
+            PlanCache::Forward => (
+                &self.fwd_hits,
+                &self.fwd_misses,
+                &*obs.plan_cache_hits_forward,
+                &*obs.plan_cache_misses_forward,
+            ),
+            PlanCache::Real => (
+                &self.real_hits,
+                &self.real_misses,
+                &*obs.plan_cache_hits_real,
+                &*obs.plan_cache_misses_real,
+            ),
+        };
         if let Some(p) = map.lock().unwrap().get(&n) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            hits.fetch_add(1, Ordering::Relaxed);
+            obs_hits.inc();
             return p.clone();
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        misses.fetch_add(1, Ordering::Relaxed);
+        obs_misses.inc();
         let built = Arc::new(build(n));
         let mut guard = map.lock().unwrap();
         guard.entry(n).or_insert(built).clone()
@@ -630,20 +691,36 @@ impl Planner {
 
     /// Plan lookup (see [`Self::cached`] for the insert discipline).
     pub fn plan(&self, n: usize) -> Arc<Plan> {
-        self.cached(&self.plans, n, Plan::new)
+        self.cached(&self.plans, PlanCache::Forward, n, Plan::new)
     }
 
     /// Cached recombination twiddles for the even-length packed real
     /// transform (same discipline as [`Self::plan`]).
     pub fn real_plan(&self, n: usize) -> Arc<RealPlan> {
-        self.cached(&self.real_plans, n, RealPlan::new)
+        self.cached(&self.real_plans, PlanCache::Real, n, RealPlan::new)
     }
 
-    /// `(hits, misses)` across both plan caches — lets tests assert that
-    /// steady-state transforms are served from cache (hits grow, misses
-    /// stay flat).
+    /// `(hits, misses)` summed across both plan caches — lets tests assert
+    /// that steady-state transforms are served from cache (hits grow,
+    /// misses stay flat). See [`Self::cache_counters_by_cache`] for the
+    /// per-cache split.
     pub fn cache_counters(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        let c = self.cache_counters_by_cache();
+        (c.forward.0 + c.real.0, c.forward.1 + c.real.1)
+    }
+
+    /// Per-cache `(hits, misses)`, forward vs real.
+    pub fn cache_counters_by_cache(&self) -> PlanCacheCounters {
+        PlanCacheCounters {
+            forward: (
+                self.fwd_hits.load(Ordering::Relaxed),
+                self.fwd_misses.load(Ordering::Relaxed),
+            ),
+            real: (
+                self.real_hits.load(Ordering::Relaxed),
+                self.real_misses.load(Ordering::Relaxed),
+            ),
+        }
     }
 }
 
@@ -821,6 +898,26 @@ mod tests {
             let expect = C64::cis(-std::f64::consts::PI * k as f64 / 8.0);
             assert!((*w - expect).abs() < 1e-15, "k={k}");
         }
+    }
+
+    #[test]
+    fn planner_splits_counters_per_cache() {
+        let p = Planner::new();
+        assert_eq!(p.cache_counters_by_cache(), PlanCacheCounters::default());
+        let _ = p.plan(16); // forward miss
+        let _ = p.plan(16); // forward hit
+        let _ = p.plan(32); // forward miss
+        let _ = p.real_plan(16); // real miss
+        let _ = p.real_plan(16); // real hit
+        let _ = p.real_plan(16); // real hit
+        let c = p.cache_counters_by_cache();
+        assert_eq!(c.forward, (1, 2));
+        assert_eq!(c.real, (2, 1));
+        // Summed view stays consistent for back-compat callers.
+        assert_eq!(p.cache_counters(), (3, 3));
+        assert!((c.forward_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((c.real_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(PlanCacheCounters::default().forward_hit_rate().is_nan());
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod hash;
 pub mod linalg;
 pub mod tensor;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sketch;
 pub mod trn;

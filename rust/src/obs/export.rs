@@ -1,0 +1,179 @@
+//! Prometheus text exposition (format 0.0.4) over a [`Registry`].
+//!
+//! Metric names and label sets are a **stable API** once scraped — see
+//! EXPERIMENTS.md §Observability for the naming protocol. The exact output
+//! shape (HELP/TYPE once per family, cumulative `_bucket` lines with
+//! power-of-two `le` bounds, `_sum`/`_count` per histogram series) is
+//! pinned by the golden test below; renaming a series is a breaking change
+//! to every dashboard scraping it.
+
+use super::registry::{bucket_bound, Entry, Metric, Registry, HIST_BUCKETS};
+use std::fmt::Write as _;
+
+fn kind(metric: &Metric) -> &'static str {
+    match metric {
+        Metric::Counter(_) => "counter",
+        Metric::Gauge(_) => "gauge",
+        Metric::Histogram(_) => "histogram",
+    }
+}
+
+fn write_header(out: &mut String, e: &Entry) {
+    let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+    let _ = writeln!(out, "# TYPE {} {}", e.name, kind(&e.metric));
+}
+
+fn write_series(out: &mut String, e: &Entry) {
+    match &e.metric {
+        Metric::Counter(c) => {
+            if e.labels.is_empty() {
+                let _ = writeln!(out, "{} {}", e.name, c.get());
+            } else {
+                let _ = writeln!(out, "{}{{{}}} {}", e.name, e.labels, c.get());
+            }
+        }
+        Metric::Gauge(g) => {
+            if e.labels.is_empty() {
+                let _ = writeln!(out, "{} {}", e.name, g.get());
+            } else {
+                let _ = writeln!(out, "{}{{{}}} {}", e.name, e.labels, g.get());
+            }
+        }
+        Metric::Histogram(h) => {
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, c) in counts.iter().enumerate() {
+                cum += c;
+                let le = if i == HIST_BUCKETS - 1 {
+                    "+Inf".to_string()
+                } else {
+                    bucket_bound(i).to_string()
+                };
+                if e.labels.is_empty() {
+                    let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", e.name, le, cum);
+                } else {
+                    let _ = writeln!(out, "{}_bucket{{{},le=\"{}\"}} {}", e.name, e.labels, le, cum);
+                }
+            }
+            if e.labels.is_empty() {
+                let _ = writeln!(out, "{}_sum {}", e.name, h.sum());
+                let _ = writeln!(out, "{}_count {}", e.name, cum);
+            } else {
+                let _ = writeln!(out, "{}_sum{{{}}} {}", e.name, e.labels, h.sum());
+                let _ = writeln!(out, "{}_count{{{}}} {}", e.name, e.labels, cum);
+            }
+        }
+    }
+}
+
+/// Render a registry as Prometheus text. `# HELP`/`# TYPE` are emitted once
+/// per family, on the first entry bearing that family name (entries of one
+/// family are registered adjacently, so registration order groups them).
+pub fn render(reg: &Registry) -> String {
+    reg.with_entries(|entries| {
+        let mut out = String::with_capacity(4096);
+        let mut last_family: Option<&'static str> = None;
+        for e in entries {
+            if last_family != Some(e.name) {
+                write_header(&mut out, e);
+                last_family = Some(e.name);
+            }
+            write_series(&mut out, e);
+        }
+        out
+    })
+}
+
+/// Render the process-wide registry (forces [`crate::obs::metrics`] so the
+/// crate families exist even if nothing has recorded yet).
+pub fn render_global() -> String {
+    let _ = crate::obs::metrics();
+    render(super::registry::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden test: the exposition format is pinned byte-for-byte on a
+    /// small local registry. If this test changes, every scraper breaks.
+    #[test]
+    fn prometheus_format_golden() {
+        let reg = Registry::new();
+        let hits = reg.counter("t_hits_total", "Cache hits.", "cache=\"forward\"");
+        let miss = reg.counter("t_hits_total", "Cache hits.", "cache=\"real\"");
+        let depth = reg.gauge("t_queue_depth", "Jobs queued.", "");
+        let lat = reg.histogram("t_latency_us", "Latency.", "op=\"cs_vec\"");
+
+        hits.add(3);
+        miss.inc();
+        depth.set(2);
+        lat.observe(1); // bucket le=1
+        lat.observe(5); // bucket le=8
+        lat.observe(1 << 30); // +Inf
+
+        let text = render(&reg);
+        let expected = "\
+# HELP t_hits_total Cache hits.
+# TYPE t_hits_total counter
+t_hits_total{cache=\"forward\"} 3
+t_hits_total{cache=\"real\"} 1
+# HELP t_queue_depth Jobs queued.
+# TYPE t_queue_depth gauge
+t_queue_depth 2
+# HELP t_latency_us Latency.
+# TYPE t_latency_us histogram
+t_latency_us_bucket{op=\"cs_vec\",le=\"1\"} 1
+t_latency_us_bucket{op=\"cs_vec\",le=\"2\"} 1
+t_latency_us_bucket{op=\"cs_vec\",le=\"4\"} 1
+t_latency_us_bucket{op=\"cs_vec\",le=\"8\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"16\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"32\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"64\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"128\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"256\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"512\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"1024\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"2048\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"4096\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"8192\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"16384\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"32768\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"65536\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"131072\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"262144\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"524288\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"1048576\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"2097152\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"4194304\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"8388608\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"16777216\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"33554432\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"67108864\"} 2
+t_latency_us_bucket{op=\"cs_vec\",le=\"+Inf\"} 3
+t_latency_us_sum{op=\"cs_vec\"} 1073741830
+t_latency_us_count{op=\"cs_vec\"} 3
+";
+        assert_eq!(text, expected);
+    }
+
+    /// The global render always carries the crate's core families, even on
+    /// a process that has served no traffic.
+    #[test]
+    fn global_render_has_core_families() {
+        let text = render_global();
+        for family in [
+            "# TYPE fcs_plan_cache_hits_total counter",
+            "# TYPE fcs_plan_cache_misses_total counter",
+            "# TYPE fcs_requests_completed_total counter",
+            "# TYPE fcs_request_latency_us histogram",
+            "# TYPE fcs_flight_width histogram",
+            "# TYPE fcs_stage_ns histogram",
+            "# TYPE fcs_queue_depth gauge",
+            "# TYPE fcs_rejected_busy_total counter",
+            "# TYPE fcs_poisoned_jobs_total counter",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal HTTP exporter thread: `GET /metrics`, `GET /healthz`, and
+//! `GET /traces` over a blocking `std::net::TcpListener`.
+//!
+//! This is deliberately not a web server — one accept loop, one request
+//! per connection, `Connection: close`. It is the seed of the ROADMAP's
+//! async gateway front-end: the scrape path a Prometheus agent needs today,
+//! with the real gateway free to absorb it later.
+
+use super::export::render_global;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Spans returned by `GET /traces`.
+const TRACE_DUMP_N: usize = 64;
+
+/// Handle to a running exporter thread. Dropping it (or calling
+/// [`Exporter::shutdown`]) stops the accept loop and joins the thread.
+pub struct Exporter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Exporter {
+    /// Bind `addr` (e.g. `"127.0.0.1:9898"`, or port `0` for an ephemeral
+    /// port) and start serving on a background thread named `fcs-metrics`.
+    pub fn bind(addr: &str) -> std::io::Result<Exporter> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fcs-metrics".into())
+            .spawn(move || accept_loop(listener, stop2))
+            .expect("spawn fcs-metrics thread");
+        Ok(Exporter { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the serving thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the (blocking) accept with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(stream) = conn {
+            // Serve inline: scrapes are rare and cheap, and a single-threaded
+            // loop cannot be wedged open by a slow peer thanks to the timeouts.
+            let _ = serve_one(stream);
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let head = String::from_utf8_lossy(&buf[..n]);
+    // "GET /path HTTP/1.1" — the path is the second whitespace token.
+    let path = head.split_whitespace().nth(1).unwrap_or("/");
+
+    let (status, content_type, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            render_global(),
+        ),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        "/traces" => (
+            "200 OK",
+            "application/json; charset=utf-8",
+            super::trace::global().dump_json(TRACE_DUMP_N),
+        ),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found\n".to_string(),
+        ),
+    };
+
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let req = format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n");
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_healthz_traces_and_404() {
+        let mut exporter = Exporter::bind("127.0.0.1:0").unwrap();
+        let addr = exporter.local_addr();
+
+        let health = get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let metrics = get(addr, "/metrics");
+        assert!(metrics.contains("text/plain; version=0.0.4"), "{metrics}");
+        assert!(metrics.contains("# TYPE fcs_plan_cache_hits_total counter"));
+        assert!(metrics.contains("# TYPE fcs_flight_width histogram"));
+
+        let traces = get(addr, "/traces");
+        assert!(traces.contains("application/json"), "{traces}");
+        assert!(traces.contains("\"spans\":["), "{traces}");
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404 Not Found\r\n"), "{missing}");
+
+        exporter.shutdown();
+        // Shut down: new connections must not be served.
+        assert!(
+            TcpStream::connect(addr).map(|mut s| {
+                let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+                let mut out = String::new();
+                s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+                s.read_to_string(&mut out).unwrap_or(0) == 0
+            }).unwrap_or(true),
+            "exporter served a request after shutdown"
+        );
+    }
+}

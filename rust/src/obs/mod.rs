@@ -1,0 +1,429 @@
+//! Crate-wide observability: zero-alloc metrics registry, Prometheus
+//! text exporter, and per-request flight tracing.
+//!
+//! Layout:
+//! * [`registry`] — atomic counters / gauges / log₂ histograms behind a
+//!   registration-order registry; recording is a relaxed `fetch_add`.
+//! * [`export`] — Prometheus text exposition (format 0.0.4), golden-tested.
+//! * [`exporter`] — `std::net::TcpListener` thread serving `GET /metrics`,
+//!   `GET /healthz`, and `GET /traces`.
+//! * [`trace`] — bounded per-worker ring buffers of
+//!   `(req_id, submit → queue → flight-start → reply)` spans.
+//!
+//! All crate instruments live in one [`CrateMetrics`] struct built lazily
+//! against the global registry; call [`metrics`] for the `&'static`
+//! handles. Metric names are a **stable API** once scraped — the protocol
+//! is recorded in EXPERIMENTS.md §Observability.
+
+pub mod export;
+pub mod exporter;
+pub mod registry;
+pub mod trace;
+
+use registry::{Counter, Gauge, Histogram};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Known coordinator operations, in registration order. `"other"` is the
+/// catch-all for names outside the coordinator's `Request::op_name` set.
+pub const OPS: [&str; 5] = ["cs_vec", "sketch_dense", "sketch_cp", "inner_estimate", "other"];
+
+const OP_LABELS: [&str; 5] = [
+    "op=\"cs_vec\"",
+    "op=\"sketch_dense\"",
+    "op=\"sketch_cp\"",
+    "op=\"inner_estimate\"",
+    "op=\"other\"",
+];
+
+/// SpectralDriver stages, in `fcs_stage_ns` label order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Pack = 0,
+    Fft = 1,
+    Fold = 2,
+    Inverse = 3,
+}
+
+pub const STAGES: [&str; 4] = ["pack", "fft", "fold", "inverse"];
+
+const STAGE_LABELS: [&str; 4] = [
+    "stage=\"pack\"",
+    "stage=\"fft\"",
+    "stage=\"fold\"",
+    "stage=\"inverse\"",
+];
+
+/// Per-operation instruments (one set per entry of [`OPS`]).
+pub struct OpMetrics {
+    /// `fcs_requests_completed_total{op=...}`
+    pub completed: Arc<Counter>,
+    /// `fcs_request_latency_us{op=...}` — submit → reply.
+    pub latency_us: Arc<Histogram>,
+    /// `fcs_queue_wait_us{op=...}` — submit → flight start.
+    pub queue_wait_us: Arc<Histogram>,
+    /// `fcs_exec_us{op=...}` — flight start → reply.
+    pub exec_us: Arc<Histogram>,
+}
+
+/// Every instrument the crate records into, registered once against the
+/// global registry. Obtain via [`metrics`]; handles are `&'static`.
+pub struct CrateMetrics {
+    /// `fcs_plan_cache_hits_total{cache="forward"|"real"}`
+    pub plan_cache_hits_forward: Arc<Counter>,
+    pub plan_cache_hits_real: Arc<Counter>,
+    /// `fcs_plan_cache_misses_total{cache="forward"|"real"}`
+    pub plan_cache_misses_forward: Arc<Counter>,
+    pub plan_cache_misses_real: Arc<Counter>,
+
+    ops: [OpMetrics; 5],
+
+    /// `fcs_flight_width` — jobs per executed flight (1 = serial).
+    pub flight_width: Arc<Histogram>,
+    /// `fcs_flight_exec_us` — wall time per flight.
+    pub flight_exec_us: Arc<Histogram>,
+
+    /// `fcs_queue_depth{queue="worker"|"batcher"}`
+    pub queue_depth_worker: Arc<Gauge>,
+    pub queue_depth_batcher: Arc<Gauge>,
+
+    /// `fcs_rejected_busy_total` — submits refused on a full queue.
+    pub rejected_busy: Arc<Counter>,
+    /// `fcs_poisoned_jobs_total` — jobs that panicked under `catch_unwind`.
+    pub poisoned_jobs: Arc<Counter>,
+    /// `fcs_fused_flight_aborts_total` — fused flights that fell back to
+    /// the per-job serial retry after an unwind.
+    pub fused_flight_aborts: Arc<Counter>,
+    /// `fcs_batches_total` / `fcs_batched_jobs_total` — cs_vec batcher.
+    pub batches: Arc<Counter>,
+    pub batched_jobs: Arc<Counter>,
+
+    /// `fcs_stage_ns{stage=...}` — sampled SpectralDriver stage timings.
+    pub stage_ns: [Arc<Histogram>; 4],
+
+    /// `fcs_estimator_queries_total{kind="t_mode"|"deflate"}`
+    pub estimator_t_mode: Arc<Counter>,
+    pub estimator_deflate: Arc<Counter>,
+
+    /// `fcs_traces_recorded_total`
+    pub traces_recorded: Arc<Counter>,
+}
+
+impl CrateMetrics {
+    fn register(reg: &registry::Registry) -> CrateMetrics {
+        // Entries of one family must be registered adjacently (the renderer
+        // emits HELP/TYPE on family-name change), so build family by family.
+        let plan_cache_hits_forward = reg.counter(
+            "fcs_plan_cache_hits_total",
+            "FFT plan cache hits, by cache.",
+            "cache=\"forward\"",
+        );
+        let plan_cache_hits_real = reg.counter(
+            "fcs_plan_cache_hits_total",
+            "FFT plan cache hits, by cache.",
+            "cache=\"real\"",
+        );
+        let plan_cache_misses_forward = reg.counter(
+            "fcs_plan_cache_misses_total",
+            "FFT plan cache misses (plan builds), by cache.",
+            "cache=\"forward\"",
+        );
+        let plan_cache_misses_real = reg.counter(
+            "fcs_plan_cache_misses_total",
+            "FFT plan cache misses (plan builds), by cache.",
+            "cache=\"real\"",
+        );
+
+        let completed: [Arc<Counter>; 5] = std::array::from_fn(|i| {
+            reg.counter(
+                "fcs_requests_completed_total",
+                "Coordinator requests answered, by operation.",
+                OP_LABELS[i],
+            )
+        });
+        let latency: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+            reg.histogram(
+                "fcs_request_latency_us",
+                "Submit-to-reply latency in microseconds, by operation.",
+                OP_LABELS[i],
+            )
+        });
+        let queue_wait: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+            reg.histogram(
+                "fcs_queue_wait_us",
+                "Submit-to-flight-start wait in microseconds, by operation.",
+                OP_LABELS[i],
+            )
+        });
+        let exec: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+            reg.histogram(
+                "fcs_exec_us",
+                "Flight-start-to-reply execution time in microseconds, by operation.",
+                OP_LABELS[i],
+            )
+        });
+        let ops: [OpMetrics; 5] = std::array::from_fn(|i| OpMetrics {
+            completed: completed[i].clone(),
+            latency_us: latency[i].clone(),
+            queue_wait_us: queue_wait[i].clone(),
+            exec_us: exec[i].clone(),
+        });
+
+        let flight_width = reg.histogram(
+            "fcs_flight_width",
+            "Jobs per executed worker flight (1 = serial).",
+            "",
+        );
+        let flight_exec_us = reg.histogram(
+            "fcs_flight_exec_us",
+            "Wall time per worker flight in microseconds.",
+            "",
+        );
+
+        let queue_depth_worker = reg.gauge(
+            "fcs_queue_depth",
+            "Jobs currently enqueued, by queue.",
+            "queue=\"worker\"",
+        );
+        let queue_depth_batcher = reg.gauge(
+            "fcs_queue_depth",
+            "Jobs currently enqueued, by queue.",
+            "queue=\"batcher\"",
+        );
+
+        let rejected_busy = reg.counter(
+            "fcs_rejected_busy_total",
+            "Submissions rejected because a bounded queue was full.",
+            "",
+        );
+        let poisoned_jobs = reg.counter(
+            "fcs_poisoned_jobs_total",
+            "Jobs that panicked inside a worker (caught; reply was an error).",
+            "",
+        );
+        let fused_flight_aborts = reg.counter(
+            "fcs_fused_flight_aborts_total",
+            "Fused flights that unwound and fell back to per-job serial retry.",
+            "",
+        );
+        let batches = reg.counter(
+            "fcs_batches_total",
+            "cs_vec batches flushed by the batcher.",
+            "",
+        );
+        let batched_jobs = reg.counter(
+            "fcs_batched_jobs_total",
+            "cs_vec jobs flushed inside batches.",
+            "",
+        );
+
+        let stage_ns: [Arc<Histogram>; 4] = std::array::from_fn(|i| {
+            reg.histogram(
+                "fcs_stage_ns",
+                "Sampled SpectralDriver stage time in nanoseconds, by stage.",
+                STAGE_LABELS[i],
+            )
+        });
+
+        let estimator_t_mode = reg.counter(
+            "fcs_estimator_queries_total",
+            "Estimator spectral queries, by kind.",
+            "kind=\"t_mode\"",
+        );
+        let estimator_deflate = reg.counter(
+            "fcs_estimator_queries_total",
+            "Estimator spectral queries, by kind.",
+            "kind=\"deflate\"",
+        );
+
+        let traces_recorded = reg.counter(
+            "fcs_traces_recorded_total",
+            "Request trace spans recorded into the ring buffers.",
+            "",
+        );
+
+        CrateMetrics {
+            plan_cache_hits_forward,
+            plan_cache_hits_real,
+            plan_cache_misses_forward,
+            plan_cache_misses_real,
+            ops,
+            flight_width,
+            flight_exec_us,
+            queue_depth_worker,
+            queue_depth_batcher,
+            rejected_busy,
+            poisoned_jobs,
+            fused_flight_aborts,
+            batches,
+            batched_jobs,
+            stage_ns,
+            estimator_t_mode,
+            estimator_deflate,
+            traces_recorded,
+        }
+    }
+
+    /// Per-op instruments for `name` (`Request::op_name`); unknown names
+    /// fall into the `"other"` series rather than allocating a new one.
+    #[inline]
+    pub fn op(&self, name: &str) -> &OpMetrics {
+        let i = OPS.iter().position(|&o| o == name).unwrap_or(OPS.len() - 1);
+        &self.ops[i]
+    }
+}
+
+/// The crate's instruments, registered once against the global registry.
+pub fn metrics() -> &'static CrateMetrics {
+    static METRICS: OnceLock<CrateMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| CrateMetrics::register(registry::global()))
+}
+
+/// Eagerly build the instrument set and pin the trace epoch. Call at
+/// service startup so (a) hot-path `metrics()` lookups never hit the
+/// registration slow path, and (b) trace timestamps share one epoch that
+/// precedes every job's `enqueued` instant.
+pub fn init() {
+    let _ = metrics();
+    let _ = trace::epoch();
+}
+
+/// Record a stage timing on one in every `STAGE_SAMPLE_EVERY` driver
+/// dispatches (see EXPERIMENTS.md §Observability for the overhead budget).
+pub const STAGE_SAMPLE_EVERY: u64 = 32;
+
+static STAGE_TICK: AtomicU64 = AtomicU64::new(0);
+static STAGE_FORCE: AtomicBool = AtomicBool::new(false);
+
+/// Force the next [`StageTimer::sample`] to be live regardless of the
+/// sampling tick — test hook for deterministic coverage.
+pub fn force_next_stage_sample() {
+    STAGE_FORCE.store(true, Ordering::Relaxed);
+}
+
+/// Sampled per-stage accumulator for one driver dispatch.
+///
+/// A live timer (one per [`STAGE_SAMPLE_EVERY`] dispatches) accumulates
+/// nanoseconds per [`Stage`] and observes them into `fcs_stage_ns` on
+/// `Drop` (so timings land even if the dispatch unwinds). A dead timer is
+/// a `None` and every call on it is a branch on a register — no clock
+/// reads, no atomics, no allocation either way.
+pub struct StageTimer {
+    acc: Option<[u64; 4]>,
+}
+
+impl StageTimer {
+    /// Tick the global sample counter; live on every k-th call (or when
+    /// forced by [`force_next_stage_sample`]).
+    #[inline]
+    pub fn sample() -> StageTimer {
+        let forced = STAGE_FORCE.swap(false, Ordering::Relaxed);
+        let tick = STAGE_TICK.fetch_add(1, Ordering::Relaxed);
+        if forced || tick % STAGE_SAMPLE_EVERY == 0 {
+            StageTimer { acc: Some([0; 4]) }
+        } else {
+            StageTimer { acc: None }
+        }
+    }
+
+    /// A timer that never records (for paths that opt out).
+    #[inline]
+    pub fn off() -> StageTimer {
+        StageTimer { acc: None }
+    }
+
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        self.acc.is_some()
+    }
+
+    /// Start of a stage: a clock read only when live.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.acc.is_some() { Some(Instant::now()) } else { None }
+    }
+
+    /// End of a stage: accumulate elapsed nanos since the matching
+    /// [`StageTimer::start`].
+    #[inline]
+    pub fn lap(&mut self, stage: Stage, from: Option<Instant>) {
+        if let (Some(acc), Some(t0)) = (self.acc.as_mut(), from) {
+            acc[stage as usize] += t0.elapsed().as_nanos() as u64;
+        }
+    }
+}
+
+impl Drop for StageTimer {
+    fn drop(&mut self) {
+        if let Some(acc) = self.acc {
+            let m = metrics();
+            for (i, ns) in acc.iter().enumerate() {
+                if *ns > 0 {
+                    m.stage_ns[i].observe(*ns);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_lookup_maps_known_and_unknown() {
+        let m = metrics();
+        assert!(std::ptr::eq(m.op("sketch_cp"), &m.ops[2]));
+        assert!(std::ptr::eq(m.op("no_such_op"), &m.ops[4]));
+    }
+
+    /// Obtain a live timer even if a concurrent test steals the force flag
+    /// (the tick counter and force flag are process-global).
+    fn live_timer() -> StageTimer {
+        loop {
+            force_next_stage_sample();
+            let t = StageTimer::sample();
+            if t.is_live() {
+                return t;
+            }
+        }
+    }
+
+    #[test]
+    fn forced_stage_timer_records_on_drop() {
+        let m = metrics();
+        let before = m.stage_ns[Stage::Fold as usize].count();
+        let mut t = live_timer();
+        let s = t.start();
+        std::thread::sleep(std::time::Duration::from_micros(50));
+        t.lap(Stage::Fold, s);
+        drop(t);
+        assert!(m.stage_ns[Stage::Fold as usize].count() > before);
+    }
+
+    #[test]
+    fn dead_timer_reads_no_clock() {
+        let mut t = StageTimer::off();
+        assert!(!t.is_live());
+        let s = t.start();
+        assert!(s.is_none());
+        t.lap(Stage::Pack, s); // no-op on a dead timer
+    }
+
+    #[test]
+    fn sampling_is_sparse_but_nonempty() {
+        // Exact 1-in-k counts are racy under the parallel test harness
+        // (every driver dispatch in the binary shares the tick), so pin the
+        // two properties that matter: some samples fire, most do not.
+        let total = 10 * STAGE_SAMPLE_EVERY;
+        let mut live = 0;
+        drop(live_timer()); // guarantees >= 1 live sample was reachable
+        for _ in 0..total {
+            if StageTimer::sample().is_live() {
+                live += 1;
+            }
+        }
+        assert!(live < total / 2, "sampling not sparse: {live}/{total}");
+    }
+}

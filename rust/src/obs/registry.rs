@@ -1,0 +1,271 @@
+//! Lock-free metric primitives and the process-wide registry.
+//!
+//! Counters, gauges, and log₂-bucket histograms are plain atomics behind
+//! `Arc`s. Instruments are registered once (at startup, or lazily on first
+//! use of [`crate::obs::metrics`]) and recorded through shared handles, so
+//! a hot-path update is a single relaxed `fetch_add` — no locks, no
+//! allocation. The registry's internal `Mutex<Vec<Entry>>` is touched only
+//! at registration and render time, never while recording.
+//!
+//! Histogram buckets are powers of two: finite upper bounds `2^0 .. 2^26`
+//! plus `+Inf`. That covers one nanosecond-to-67ms span for stage timers
+//! and one microsecond-to-67s span for latencies with a fixed 28-slot
+//! array, which keeps `observe` branch-free apart from the leading-zeros
+//! bucket index.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of histogram buckets: 27 finite power-of-two bounds plus `+Inf`.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Upper bound (`le`) of finite bucket `i`, i.e. `2^i` for `i < 27`.
+#[inline]
+pub fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Index of the first bucket whose upper bound is `>= v`.
+///
+/// `v = 0` and `v = 1` land in bucket 0 (`le = 1`); values above `2^26`
+/// land in the `+Inf` bucket (index 27).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    // ceil(log2(v)) via leading zeros of v-1; saturating_sub keeps v=0 sane.
+    ((64 - v.saturating_sub(1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depths, in-flight counts).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self { value: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.value.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log₂ histogram over `u64` observations.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Non-cumulative per-bucket counts (index 27 is `+Inf`).
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.bucket_counts().iter().sum()
+    }
+}
+
+/// A registered instrument, tagged with its exposition metadata.
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// One registry row: family name, help text, optional label set, instrument.
+///
+/// `labels` is the rendered label body without braces (e.g.
+/// `op="sketch_cp"`), or `""` for an unlabeled series. Entries sharing a
+/// family `name` must be registered adjacently and with the same metric
+/// kind — the renderer emits `# HELP`/`# TYPE` once per family in
+/// registration order.
+pub struct Entry {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub labels: &'static str,
+    pub metric: Metric,
+}
+
+/// Metric registry: registration + render-time enumeration.
+///
+/// Independent instances can be created for tests; production code uses
+/// [`global`].
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { entries: Mutex::new(Vec::new()) }
+    }
+
+    pub fn counter(&self, name: &'static str, help: &'static str, labels: &'static str) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.entries.lock().unwrap().push(Entry {
+            name,
+            help,
+            labels,
+            metric: Metric::Counter(c.clone()),
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &'static str, help: &'static str, labels: &'static str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.entries.lock().unwrap().push(Entry {
+            name,
+            help,
+            labels,
+            metric: Metric::Gauge(g.clone()),
+        });
+        g
+    }
+
+    pub fn histogram(&self, name: &'static str, help: &'static str, labels: &'static str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.entries.lock().unwrap().push(Entry {
+            name,
+            help,
+            labels,
+            metric: Metric::Histogram(h.clone()),
+        });
+        h
+    }
+
+    /// Run `f` over the registered entries (render-time only).
+    pub fn with_entries<R>(&self, f: impl FnOnce(&[Entry]) -> R) -> R {
+        let g = self.entries.lock().unwrap();
+        f(&g)
+    }
+}
+
+/// The process-wide registry backing [`crate::obs::metrics`].
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 26), 26);
+        assert_eq!(bucket_index((1 << 26) + 1), 27);
+        assert_eq!(bucket_index(u64::MAX), 27);
+        // Every finite bound lands in its own bucket, one past it spills over.
+        for i in 0..27 {
+            assert_eq!(bucket_index(bucket_bound(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_sum() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 1000, 1 << 30] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1 + 2 + 3 + 1000 + (1 << 30));
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 2); // 0, 1
+        assert_eq!(b[1], 1); // 2
+        assert_eq!(b[2], 1); // 3
+        assert_eq!(b[10], 1); // 1000 <= 1024
+        assert_eq!(b[27], 1); // 2^30 -> +Inf
+    }
+
+    #[test]
+    fn gauge_tracks_depth() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+}

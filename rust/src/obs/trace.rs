@@ -1,0 +1,210 @@
+//! Per-request flight tracing: bounded per-worker ring buffers of
+//! `(req_id, submit → queue → flight-start → reply)` spans.
+//!
+//! Req ids are the coordinator's pre-drawn [`crate::coordinator::job_rng`]
+//! ids, so a span can be joined offline against the exact RNG stream that
+//! produced its sketch. Timestamps are microseconds since a process-local
+//! epoch pinned by [`crate::obs::init`]; they are derived from monotone
+//! `Instant`s with saturating subtraction, so ordering within a span
+//! (`submit_us <= queue_us <= flight_start_us <= reply_us`) always holds
+//! even for jobs enqueued before the epoch was pinned.
+//!
+//! Recording takes one shard mutex (shard = worker index mod
+//! [`TRACE_SHARDS`]) and writes into a preallocated ring — no allocation
+//! after the ring's first fill, and contention only between workers that
+//! share a shard.
+
+use crate::util::json::Json;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Number of ring shards; workers map onto shards by `worker % TRACE_SHARDS`.
+pub const TRACE_SHARDS: usize = 8;
+
+/// Spans retained per shard (newest overwrite oldest).
+pub const TRACE_RING_CAP: usize = 512;
+
+/// One completed request, as seen from the worker that replied to it.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpan {
+    /// Pre-drawn req id (the `job_rng` key).
+    pub req_id: u64,
+    /// Operation name (`Request::op_name`).
+    pub op: &'static str,
+    /// Client-side submit time (job creation), µs since process epoch.
+    pub submit_us: u64,
+    /// When the worker pulled the job off its queue, µs since epoch.
+    pub queue_us: u64,
+    /// When the job's flight began executing, µs since epoch.
+    pub flight_start_us: u64,
+    /// When the reply was sent, µs since epoch.
+    pub reply_us: u64,
+    /// Width of the flight this job executed in (1 = serial).
+    pub width: u16,
+    /// Whether the reply was `Ok`.
+    pub ok: bool,
+}
+
+struct Ring {
+    buf: Vec<TraceSpan>,
+    /// Total spans ever written; `written % TRACE_RING_CAP` is the next slot.
+    written: u64,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Self { buf: Vec::with_capacity(TRACE_RING_CAP), written: 0 }
+    }
+
+    fn push(&mut self, span: TraceSpan) {
+        let slot = (self.written % TRACE_RING_CAP as u64) as usize;
+        if slot == self.buf.len() {
+            self.buf.push(span); // filling phase: capacity preallocated
+        } else {
+            self.buf[slot] = span; // steady state: overwrite oldest
+        }
+        self.written += 1;
+    }
+}
+
+/// Sharded trace store.
+pub struct TraceBook {
+    shards: [Mutex<Ring>; TRACE_SHARDS],
+}
+
+impl Default for TraceBook {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceBook {
+    pub fn new() -> Self {
+        Self { shards: std::array::from_fn(|_| Mutex::new(Ring::new())) }
+    }
+
+    /// Record a completed span from worker `worker`.
+    pub fn record(&self, worker: usize, span: TraceSpan) {
+        self.shards[worker % TRACE_SHARDS].lock().unwrap().push(span);
+        crate::obs::metrics().traces_recorded.inc();
+    }
+
+    /// The most recent `n` spans across all shards, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceSpan> {
+        let mut all: Vec<TraceSpan> = Vec::new();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            all.extend_from_slice(&g.buf);
+        }
+        all.sort_by_key(|s| s.reply_us);
+        let keep = all.len().saturating_sub(n);
+        all.split_off(keep)
+    }
+
+    /// JSON dump of the most recent `n` spans (the `/traces` payload).
+    pub fn dump_json(&self, n: usize) -> String {
+        let spans: Vec<Json> = self
+            .recent(n)
+            .into_iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("req_id", (s.req_id as f64).into())
+                    .set("op", s.op.into())
+                    .set("submit_us", (s.submit_us as f64).into())
+                    .set("queue_us", (s.queue_us as f64).into())
+                    .set("flight_start_us", (s.flight_start_us as f64).into())
+                    .set("reply_us", (s.reply_us as f64).into())
+                    .set("width", (s.width as usize).into())
+                    .set("ok", s.ok.into());
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("spans", Json::Arr(spans));
+        root.to_string()
+    }
+}
+
+/// The process-wide trace book fed by coordinator workers.
+pub fn global() -> &'static TraceBook {
+    static GLOBAL: OnceLock<TraceBook> = OnceLock::new();
+    GLOBAL.get_or_init(TraceBook::new)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process trace epoch; pinned on first call (see [`crate::obs::init`]).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process epoch. Saturates at 0 for instants taken
+/// before the epoch was pinned, which preserves within-span ordering.
+pub fn epoch_us(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req_id: u64, reply_us: u64) -> TraceSpan {
+        TraceSpan {
+            req_id,
+            op: "sketch_dense",
+            submit_us: reply_us.saturating_sub(30),
+            queue_us: reply_us.saturating_sub(20),
+            flight_start_us: reply_us.saturating_sub(10),
+            reply_us,
+            width: 1,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_recent_sorts() {
+        let book = TraceBook::new();
+        // Overfill one shard: 512-cap ring sees 600 spans, keeps the last 512.
+        for i in 0..600u64 {
+            book.record(0, span(i, i + 100));
+        }
+        let recent = book.recent(10);
+        assert_eq!(recent.len(), 10);
+        // Oldest-first ordering, and only the newest survive the ring.
+        for w in recent.windows(2) {
+            assert!(w[0].reply_us <= w[1].reply_us);
+        }
+        assert_eq!(recent.last().unwrap().req_id, 599);
+        assert_eq!(recent.first().unwrap().req_id, 590);
+    }
+
+    #[test]
+    fn spans_spread_across_shards() {
+        let book = TraceBook::new();
+        for w in 0..TRACE_SHARDS {
+            book.record(w, span(w as u64, 1000 + w as u64));
+        }
+        assert_eq!(book.recent(TRACE_SHARDS).len(), TRACE_SHARDS);
+    }
+
+    #[test]
+    fn dump_json_parses_back() {
+        let book = TraceBook::new();
+        book.record(3, span(42, 500));
+        let text = book.dump_json(8);
+        let j = Json::parse(&text).unwrap();
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("req_id").unwrap().as_f64(), Some(42.0));
+        assert_eq!(spans[0].get("op").unwrap().as_str(), Some("sketch_dense"));
+        assert_eq!(spans[0].get("width").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn epoch_us_is_monotone() {
+        let a = Instant::now();
+        let ua = epoch_us(a);
+        let b = Instant::now();
+        assert!(epoch_us(b) >= ua);
+    }
+}

@@ -21,6 +21,7 @@ use crate::fft::complex::ZERO;
 use crate::fft::{self, fft_real_many_into, inverse_real_many_into, C64, FftWorkspace};
 use crate::hash::ModeHashes;
 use crate::linalg::Matrix;
+use crate::obs::{Stage, StageTimer};
 use crate::tensor::{CpTensor, Tensor};
 
 pub(crate) use crate::fft::workspace::mul_lane_run;
@@ -147,8 +148,12 @@ impl SpectralDriver {
         let mut slot_job = [0usize; MAX_FFT_LANES];
         let mut slot_grp = [0usize; MAX_FFT_LANES];
         let mut done = 0usize;
+        // Sampled per-dispatch stage accounting (records on drop); a dead
+        // timer makes every start/lap a branch — never a clock read.
+        let mut timer = StageTimer::sample();
         while done < total {
             let gc = per.min(total - done);
+            let t = timer.start();
             for gi in 0..gc {
                 slot_job[gi] = job;
                 slot_grp[gi] = grp;
@@ -162,8 +167,12 @@ impl SpectralDriver {
                     grp = 0;
                 }
             }
+            timer.lap(Stage::Pack, t);
             let lanes = gc * nm;
+            let t = timer.start();
             fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            timer.lap(Stage::Fft, t);
+            let t = timer.start();
             for k in 0..n {
                 let row = k * lanes;
                 for gi in 0..gc {
@@ -177,6 +186,7 @@ impl SpectralDriver {
                     a.im += w * pi;
                 }
             }
+            timer.lap(Stage::Fold, t);
             done += gc;
         }
         ws.give_f64(sim);
@@ -208,16 +218,22 @@ impl SpectralDriver {
         let mut sre = ws.take_f64(0);
         let mut sim = ws.take_f64(0);
         let mut g0 = groups.start;
+        let mut timer = StageTimer::sample();
         while g0 < groups.end {
             let gc = (groups.end - g0).min(per);
             let lanes = gc * nm;
+            let t = timer.start();
             for gi in 0..gc {
                 for l in 0..nm {
                     let slot = (gi * nm + l) * stride;
                     pack(g0 + gi, l, &mut xs[slot..slot + stride]);
                 }
             }
+            timer.lap(Stage::Pack, t);
+            let t = timer.start();
             fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            timer.lap(Stage::Fft, t);
+            let t = timer.start();
             for (k, a) in acc.iter_mut().enumerate() {
                 let row = k * lanes;
                 for gi in 0..gc {
@@ -230,6 +246,7 @@ impl SpectralDriver {
                     a.im += w * pi;
                 }
             }
+            timer.lap(Stage::Fold, t);
             g0 += gc;
         }
         ws.give_f64(sim);
@@ -266,16 +283,22 @@ impl SpectralDriver {
         let mut izim = ws.take_f64(n * per);
         let mut z = ws.take_f64(0);
         let mut g0 = 0usize;
+        let mut timer = StageTimer::sample();
         while g0 < groups {
             let gc = (groups - g0).min(per);
             let lanes = gc * nm;
+            let t = timer.start();
             for gi in 0..gc {
                 for l in 0..nm {
                     let slot = (gi * nm + l) * stride;
                     pack(g0 + gi, l, &mut xs[slot..slot + stride]);
                 }
             }
+            timer.lap(Stage::Pack, t);
+            let t = timer.start();
             fft_real_many_into(&xs[..lanes * stride], stride, lanes, n, ws, &mut sre, &mut sim);
+            timer.lap(Stage::Fft, t);
+            let t = timer.start();
             for k in 0..n {
                 let srow = k * lanes;
                 let irow = k * gc;
@@ -293,7 +316,10 @@ impl SpectralDriver {
                     izim[irow + gi] = pi;
                 }
             }
+            timer.lap(Stage::Fold, t);
+            let t = timer.start();
             inverse_real_many_into(&mut izre[..n * gc], &mut izim[..n * gc], gc, ws, &mut z);
+            timer.lap(Stage::Inverse, t);
             for gi in 0..gc {
                 emit(g0 + gi, &mut z[gi * n..(gi + 1) * n]);
             }
@@ -323,9 +349,12 @@ impl SpectralDriver {
         let mut fre = ws.take_f64(0);
         let mut fim = ws.take_f64(0);
         let mut g0 = 0usize;
+        let mut timer = StageTimer::sample();
         while g0 < groups {
             let gc = (groups - g0).min(MAX_FFT_LANES);
+            let t = timer.start();
             fft_real_many_into(&signals[g0 * n..(g0 + gc) * n], n, gc, n, ws, &mut fre, &mut fim);
+            timer.lap(Stage::Fft, t);
             for k in 0..n {
                 let row = k * gc;
                 for gi in 0..gc {
@@ -372,8 +401,10 @@ pub(crate) fn inverse_spectra_fused(
     let mut pim = ws.take_f64(n * per);
     let mut z = ws.take_f64(0);
     let mut j0 = 0usize;
+    let mut timer = StageTimer::sample();
     while j0 < jobs {
         let jc = (jobs - j0).min(per);
+        let t = timer.start();
         for (b, spec) in specs[j0..j0 + jc].iter().enumerate() {
             debug_assert_eq!(spec.len(), n);
             for (k, v) in spec.iter().enumerate() {
@@ -381,7 +412,10 @@ pub(crate) fn inverse_spectra_fused(
                 pim[k * jc + b] = v.im;
             }
         }
+        timer.lap(Stage::Pack, t);
+        let t = timer.start();
         inverse_real_many_into(&mut pre[..n * jc], &mut pim[..n * jc], jc, ws, &mut z);
+        timer.lap(Stage::Inverse, t);
         for gi in 0..jc {
             emit(j0 + gi, &mut z[gi * n..(gi + 1) * n]);
         }
@@ -712,7 +746,10 @@ impl<'a> SpectralSketchCore<'a> {
         debug_assert_eq!(self.modes.len(), cp.order());
         let mut acc = ws.take_c64(self.fft_len);
         self.accumulate_cp_spectra(&cp.factors, &cp.lambda, 0..cp.rank(), ws, &mut acc);
+        let mut timer = StageTimer::sample();
+        let t = timer.start();
         fft::inverse_real_into(&mut acc, ws, out);
+        timer.lap(Stage::Inverse, t);
         out.truncate(self.sketch_len);
         ws.give_c64(acc);
     }

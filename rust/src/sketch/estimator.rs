@@ -518,6 +518,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
     }
 
     fn t_mode_into(&self, mode: usize, vs: &[&[f64]], out: &mut Vec<f64>) {
+        crate::obs::metrics().estimator_t_mode.inc();
         let d_reps = self.reps.len();
         let im = self.reps[0].op.core().modes[mode].domain();
         let nm = self.reps[0].op.core().modes.len();
@@ -585,6 +586,7 @@ impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
         // sketches), then one batched forward sweep of the truncated
         // signals to keep every F(st) cache coherent (F is linear) —
         // instead of D·(N+1) plan dispatches.
+        crate::obs::metrics().estimator_deflate.inc();
         let (sketch_len, n) = (self.sketch_len, self.fft_len);
         let d_reps = self.reps.len();
         let nm = self.reps[0].op.core().modes.len();

@@ -245,6 +245,53 @@ fn hot_paths_are_allocation_free_in_steady_state() {
         assert_eq!(n, 0, "WorkerState service paths allocated {n} times in steady state");
     }
 
+    // --- observability: steady-state metric recording is zero-alloc --------
+    // The registry hands out `Arc`s to fixed-shape atomics at registration
+    // time; after that, every counter inc / gauge move / histogram observe is
+    // a relaxed atomic RMW. Warm the global registry (first call registers
+    // every family), then prove the recording paths — including a LIVE
+    // per-stage timer on the sketch_cp hot path — never touch the heap.
+    {
+        fcs::obs::init();
+        let m = fcs::obs::metrics();
+        m.rejected_busy.inc();
+        m.queue_depth_worker.inc();
+        m.queue_depth_worker.dec();
+        m.flight_width.observe(4);
+        m.op("sketch_cp").latency_us.observe(10);
+        let n = allocs_of(|| {
+            for i in 0..100u64 {
+                m.rejected_busy.inc();
+                m.queue_depth_worker.inc();
+                m.queue_depth_worker.dec();
+                m.flight_width.observe(1 + (i % 16));
+                m.op("sketch_cp").latency_us.observe(10 + i);
+                m.op("cs_vec").queue_wait_us.observe(i);
+            }
+        });
+        assert_eq!(n, 0, "registry recording allocated {n} times in steady state");
+
+        // Force the stage sampler so the very next `StageTimer::sample()`
+        // inside the driver goes live: it reads the clock around each
+        // pack/fft/fold/inverse stage and observes `fcs_stage_ns` on drop.
+        // None of that may allocate on the warmed sketch_cp path.
+        let mut state = WorkerState::new();
+        let cp = CpTensor::randn(&mut rng, &[6, 7, 5], 3);
+        let mut out = Vec::new();
+        for i in 0..3u64 {
+            let mut r = Rng::seed_from_u64(300 + i);
+            state.sketch_cp_into(&cp, 16, &mut r, &mut out);
+        }
+        let n = allocs_of(|| {
+            for i in 0..5u64 {
+                fcs::obs::force_next_stage_sample();
+                let mut r = Rng::seed_from_u64(400 + i);
+                state.sketch_cp_into(&cp, 16, &mut r, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "sketch_cp with live stage timer allocated {n} times");
+    }
+
     // --- FFT plan caches: steady state must be all hits, no rebuilds --------
     {
         let planner = fcs::fft::global_planner();

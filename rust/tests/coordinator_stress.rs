@@ -453,6 +453,60 @@ fn poisoned_job_inside_fused_flight_costs_only_its_own_reply() {
 }
 
 #[test]
+fn trace_spans_stay_ordered_under_mixed_shape_flood() {
+    // Every reply leaves a span in the process-global trace book; its edges
+    // are clamped at record time, so `submit ≤ queue ≤ flight-start ≤ reply`
+    // is a structural invariant — asserted here with zero timing tolerance.
+    // The book is shared with the other tests in this binary (they run in
+    // parallel and also record spans), so the assertions quantify over every
+    // span present, not just this flood's.
+    let svc = start(3, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(0x7ACE);
+    let mut rxs = Vec::new();
+    let flood = 300usize;
+    for i in 0..flood {
+        let (shape, j, method): (Vec<usize>, usize, SketchMethod) = match i % 4 {
+            0 | 1 => (vec![6, 6, 6], 32, SketchMethod::Fcs),
+            2 => (vec![3, 8, 4], 16, SketchMethod::Ts),
+            _ => (
+                vec![rng.below(5) as usize + 2, 4, rng.below(4) as usize + 2],
+                8,
+                SketchMethod::Fcs,
+            ),
+        };
+        let t = Tensor::randn(&mut rng, &shape);
+        rxs.push(h.submit(Request::SketchDense { tensor: t, method, j }).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    svc.shutdown();
+
+    let spans = fcs::obs::trace::global().recent(usize::MAX);
+    // Each shard retains 512 spans and this flood spreads over at most 3
+    // shards with ≤ 300 spans each, so even with every other test's traffic
+    // accounted the book must still hold at least this flood's worth.
+    assert!(spans.len() >= flood, "trace book lost spans: {} < {flood}", spans.len());
+    let known_ops = ["cs_vec", "sketch_dense", "sketch_cp", "inner_estimate"];
+    for s in &spans {
+        assert!(
+            s.submit_us <= s.queue_us
+                && s.queue_us <= s.flight_start_us
+                && s.flight_start_us <= s.reply_us,
+            "span req_id={} violates submit ≤ queue ≤ flight-start ≤ reply: {s:?}",
+            s.req_id
+        );
+        assert!(s.width >= 1, "span req_id={} has zero flight width", s.req_id);
+        assert!(known_ops.contains(&s.op), "span req_id={} has unknown op {}", s.req_id, s.op);
+    }
+    // Oldest-first contract of `recent`.
+    for w in spans.windows(2) {
+        assert!(w[0].reply_us <= w[1].reply_us, "recent() not sorted by reply time");
+    }
+}
+
+#[test]
 fn repeated_start_shutdown_cycles_are_clean() {
     // Shutdown determinism: cycles must neither deadlock nor leak panics,
     // with and without in-flight work.

@@ -1,0 +1,187 @@
+//! Observability integration: concurrent recording reconciles exactly, and
+//! the `/metrics` endpoint serves live crate metrics end to end.
+//!
+//! The reconcile test uses a **local** `Registry` instance so its totals are
+//! exact (the global registry is shared with every other test in the
+//! process); the exporter test drives the real coordinator → global
+//! registry → TCP exporter path and asserts on the scraped text.
+
+use fcs::coordinator::{Request, Response, Service, ServiceConfig, SketchMethod};
+use fcs::obs::exporter::Exporter;
+use fcs::obs::registry::Registry;
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn concurrent_writers_reconcile_exactly() {
+    // 8 threads × 10k increments and observations on one instrument set:
+    // relaxed RMWs must lose nothing, and histogram count/sum/buckets must
+    // agree with the arithmetic total.
+    let reg = Arc::new(Registry::new());
+    let hits = reg.counter("t_hits_total", "test counter", "");
+    let depth = reg.gauge("t_depth", "test gauge", "");
+    let lat = reg.histogram("t_latency_us", "test histogram", "");
+    const THREADS: u64 = 8;
+    const PER: u64 = 10_000;
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let (hits, depth, lat) = (hits.clone(), depth.clone(), lat.clone());
+            std::thread::spawn(move || {
+                for i in 0..PER {
+                    hits.inc();
+                    depth.inc();
+                    lat.observe(i);
+                    depth.dec();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(hits.get(), THREADS * PER);
+    assert_eq!(depth.get(), 0, "paired inc/dec must cancel exactly");
+    assert_eq!(lat.count(), THREADS * PER);
+    // Σ_{i<10k} i = 49 995 000, once per thread.
+    assert_eq!(lat.sum(), THREADS * (PER * (PER - 1) / 2));
+    // Bucket 0 (le=1) holds exactly the i ∈ {0, 1} observations per thread.
+    assert_eq!(lat.bucket_counts()[0], THREADS * 2);
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+/// Value of the exposition line starting with `series` (exact name + label
+/// set), if present.
+fn series_value(body: &str, series: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        let rest = l.strip_prefix(series)?;
+        rest.strip_prefix(' ')?.trim().parse().ok()
+    })
+}
+
+#[test]
+fn exporter_serves_live_global_metrics() {
+    // Drive real traffic through the coordinator so the global registry has
+    // nonzero series, then scrape it over TCP exactly as Prometheus would.
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            batch_deadline: Duration::from_micros(200),
+            seed: 17,
+        },
+        None,
+    )
+    .unwrap();
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(5);
+    let mut rxs = Vec::new();
+    for _ in 0..30 {
+        let t = Tensor::randn(&mut rng, &[6, 6, 6]);
+        rxs.push(h.submit(Request::SketchDense { tensor: t, method: SketchMethod::Fcs, j: 24 }));
+    }
+    for _ in 0..10 {
+        let cp = CpTensor::randn(&mut rng, &[5, 4, 6], 2);
+        rxs.push(h.submit(Request::SketchCp { cp, j: 12 }));
+    }
+    for rx in rxs {
+        let Response::Sketch(v) = rx.unwrap().recv().unwrap().unwrap() else {
+            panic!("wrong response kind")
+        };
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+    svc.shutdown();
+
+    // Guarantee at least one live stage sample before the scrape: force the
+    // sampler and run a driver dispatch directly.
+    fcs::obs::force_next_stage_sample();
+    let mut st = fcs::coordinator::WorkerState::new();
+    let cp = CpTensor::randn(&mut rng, &[5, 4, 6], 2);
+    let mut out = Vec::new();
+    st.sketch_cp_into(&cp, 12, &mut Rng::seed_from_u64(1), &mut out);
+
+    let mut exp = Exporter::bind("127.0.0.1:0").unwrap();
+    let addr = exp.local_addr();
+
+    let health = http_get(addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 200"), "healthz: {health}");
+    assert!(health.ends_with("ok\n"), "healthz body: {health}");
+
+    let resp = http_get(addr, "/metrics");
+    assert!(resp.starts_with("HTTP/1.1 200"), "metrics status: {resp}");
+    assert!(resp.contains("text/plain; version=0.0.4"), "missing exposition content type");
+    let body = resp.split_once("\r\n\r\n").expect("no header/body split").1;
+
+    // Families the scrape contract promises (type lines prove the renderer
+    // saw the family, independent of sample counts).
+    for ty in [
+        "# TYPE fcs_plan_cache_hits_total counter",
+        "# TYPE fcs_plan_cache_misses_total counter",
+        "# TYPE fcs_requests_completed_total counter",
+        "# TYPE fcs_request_latency_us histogram",
+        "# TYPE fcs_queue_wait_us histogram",
+        "# TYPE fcs_exec_us histogram",
+        "# TYPE fcs_flight_width histogram",
+        "# TYPE fcs_stage_ns histogram",
+        "# TYPE fcs_queue_depth gauge",
+        "# TYPE fcs_rejected_busy_total counter",
+        "# TYPE fcs_poisoned_jobs_total counter",
+    ] {
+        assert!(body.contains(ty), "missing {ty:?} in:\n{body}");
+    }
+
+    // Live values recorded by the flood above.
+    let dense = series_value(body, "fcs_requests_completed_total{op=\"sketch_dense\"}").unwrap();
+    assert!(dense >= 30.0, "sketch_dense completions not exported: {dense}");
+    let cp_done = series_value(body, "fcs_requests_completed_total{op=\"sketch_cp\"}").unwrap();
+    assert!(cp_done >= 10.0, "sketch_cp completions not exported: {cp_done}");
+    let lat_count = series_value(body, "fcs_request_latency_us_count{op=\"sketch_dense\"}").unwrap();
+    assert!(lat_count >= 30.0, "latency histogram not fed: {lat_count}");
+    let widths = series_value(body, "fcs_flight_width_count").unwrap();
+    assert!(widths >= 1.0, "flight widths not recorded: {widths}");
+    assert!(
+        series_value(body, "fcs_flight_width_bucket{le=\"+Inf\"}").unwrap() >= widths,
+        "+Inf bucket must dominate the count"
+    );
+    // The transforms above resolve cached plans on both caches after warmup.
+    let hits = series_value(body, "fcs_plan_cache_hits_total{cache=\"forward\"}").unwrap()
+        + series_value(body, "fcs_plan_cache_hits_total{cache=\"real\"}").unwrap();
+    let misses = series_value(body, "fcs_plan_cache_misses_total{cache=\"forward\"}").unwrap()
+        + series_value(body, "fcs_plan_cache_misses_total{cache=\"real\"}").unwrap();
+    assert!(hits > 0.0, "plan-cache hits not exported");
+    assert!(misses > 0.0, "plan builds not exported");
+    // Forced sample above: at least one stage series has observations.
+    let stage_total: f64 = ["pack", "fft", "fold", "inverse"]
+        .iter()
+        .map(|s| series_value(body, &format!("fcs_stage_ns_count{{stage=\"{s}\"}}")).unwrap())
+        .sum();
+    assert!(stage_total >= 1.0, "no stage timings recorded despite forced sample");
+    // All accepted jobs were drained before shutdown, so depths are flat.
+    assert_eq!(
+        series_value(body, "fcs_queue_depth{queue=\"worker\"}").unwrap(),
+        0.0,
+        "worker queue depth must return to zero after the flood drains"
+    );
+
+    let traces = http_get(addr, "/traces");
+    assert!(traces.starts_with("HTTP/1.1 200"), "traces: {traces}");
+    let tbody = traces.split_once("\r\n\r\n").unwrap().1;
+    let j = fcs::util::json::Json::parse(tbody).expect("traces must be valid JSON");
+    let spans = j.get("spans").unwrap().as_arr().unwrap();
+    assert!(!spans.is_empty(), "flood must leave trace spans");
+
+    let missing = http_get(addr, "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "404: {missing}");
+
+    exp.shutdown();
+}

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Smoke-test the /metrics exporter against a live quick-mode bench run.
+
+Launches `cargo bench --bench perf_hotpath` with `FCS_METRICS_ADDR` pointed
+at a free localhost port (the bench binds the exporter at startup and holds
+the process open `FCS_METRICS_HOLD_SECS` after the run), waits for
+`GET /healthz`, then polls `GET /metrics` until every required series is
+present and nonzero:
+
+* `fcs_plan_cache_hits_total{cache=...}` — plan-cache instrumentation;
+* `fcs_flight_width_bucket{le="+Inf"}`  — coordinator flight histogram;
+* `fcs_stage_ns_count{stage=...}`       — sampled SpectralDriver stage timers;
+* `fcs_requests_completed_total{op="sketch_cp"}` — per-op request counters.
+
+Exit 0 when all series go live before the bench exits; exit 1 otherwise.
+The bench is its own process group so cleanup kills the whole cargo tree.
+
+Usage:
+    scripts/metrics_smoke.py [--timeout 900] [--hold 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def http_get(url: str, timeout: float = 2.0) -> str | None:
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as r:
+            return r.read().decode("utf-8", "replace")
+    except (urllib.error.URLError, OSError):
+        return None
+
+
+def parse_series(body: str) -> dict[str, float]:
+    """Exposition text -> {series-with-labels: value}."""
+    out: dict[str, float] = {}
+    for line in body.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name, _, val = line.rpartition(" ")
+        try:
+            out[name] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def check(vals: dict[str, float]) -> dict[str, bool]:
+    def any_nonzero(prefix: str) -> bool:
+        return any(v > 0 for k, v in vals.items() if k.startswith(prefix))
+
+    return {
+        "plan-cache hits": any_nonzero("fcs_plan_cache_hits_total"),
+        "flight-width histogram": vals.get('fcs_flight_width_bucket{le="+Inf"}', 0) > 0,
+        "stage timers": any_nonzero("fcs_stage_ns_count"),
+        "sketch_cp completions": vals.get('fcs_requests_completed_total{op="sketch_cp"}', 0) > 0,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--timeout", type=float, default=900.0,
+                    help="overall budget in seconds (includes cargo compile)")
+    ap.add_argument("--hold", type=int, default=20,
+                    help="FCS_METRICS_HOLD_SECS passed to the bench")
+    args = ap.parse_args()
+
+    port = free_port()
+    base = f"http://127.0.0.1:{port}"
+    env = dict(os.environ)
+    env.update({
+        "FCS_BENCH_QUICK": "1",
+        "FCS_METRICS_ADDR": f"127.0.0.1:{port}",
+        "FCS_METRICS_HOLD_SECS": str(args.hold),
+    })
+
+    print(f"[metrics-smoke] launching quick bench, exporter on {base}")
+    proc = subprocess.Popen(
+        ["cargo", "bench", "--bench", "perf_hotpath"],
+        cwd=REPO_ROOT,
+        env=env,
+        start_new_session=True,  # own process group: killpg reaps cargo + bench
+    )
+
+    deadline = time.monotonic() + args.timeout
+    status: dict[str, bool] = {}
+    ok = False
+    try:
+        while time.monotonic() < deadline:
+            if http_get(f"{base}/healthz") is not None:
+                break
+            if proc.poll() is not None:
+                print(f"[metrics-smoke] bench exited (rc={proc.returncode}) "
+                      "before the exporter came up", file=sys.stderr)
+                return 1
+            time.sleep(1.0)
+        else:
+            print("[metrics-smoke] timed out waiting for /healthz", file=sys.stderr)
+            return 1
+        print("[metrics-smoke] /healthz is up; polling /metrics")
+
+        while time.monotonic() < deadline:
+            body = http_get(f"{base}/metrics")
+            if body is not None:
+                status = check(parse_series(body))
+                if all(status.values()):
+                    ok = True
+                    break
+            if proc.poll() is not None:
+                # Process gone (hold window elapsed): last scrape decides.
+                break
+            time.sleep(2.0)
+    finally:
+        try:
+            os.killpg(proc.pid, signal.SIGTERM)
+        except (ProcessLookupError, PermissionError):
+            pass
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            try:
+                os.killpg(proc.pid, signal.SIGKILL)
+            except (ProcessLookupError, PermissionError):
+                pass
+
+    for name, good in status.items():
+        print(f"[metrics-smoke]   {'ok  ' if good else 'MISS'} {name}")
+    if ok:
+        print("[metrics-smoke] OK: all required series are live")
+        return 0
+    print("[metrics-smoke] FAILED: required series missing or zero", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
