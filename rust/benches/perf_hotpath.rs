@@ -449,6 +449,82 @@ fn main() {
         }
     }
 
+    // (v) sharded merge: per-slab scatter + pairwise tree reduce vs one
+    // whole-tensor sketch, at several shard counts. The scatter work is
+    // identical either way (O(nnz) total across slabs); the merge adds
+    // (k−1)·J̃ flops over ⌈log₂ k⌉ levels — the flop model EXPERIMENTS.md
+    // §Sharded merge records. §Perf "shard_merge" rows: `shards` is the
+    // trend qualifier, `secs_merge_only` isolates the reduce cost.
+    {
+        use fcs::sketch::ShardSketch;
+        let dim = 64usize;
+        let j = 4000usize;
+        let shape = [dim, dim, dim];
+        let mut rng = Rng::seed_from_u64(8);
+        let t = Tensor::randn(&mut rng, &shape);
+        let s_whole = measure(2, reps, || {
+            let mut sh = ShardSketch::for_group(9, 0, &shape, j, false);
+            sh.absorb_slab(&t.data, 0);
+            sh
+        });
+        table.row(vec![
+            format!("shard whole-tensor sketch (64³, J̃≈{})", 3 * j - 2),
+            "time".into(),
+            fmt_secs(s_whole.median),
+        ]);
+        for shards in [2usize, 4, 8, 16] {
+            let chunk = t.data.len().div_ceil(shards);
+            let cuts: Vec<usize> =
+                (0..=shards).map(|i| (i * chunk).min(t.data.len())).collect();
+            let s_sharded = measure(2, reps, || {
+                let parts: Vec<ShardSketch> = cuts
+                    .windows(2)
+                    .map(|w| {
+                        let mut sh = ShardSketch::for_group(9, 0, &shape, j, false);
+                        sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                        sh
+                    })
+                    .collect();
+                ShardSketch::tree_merge(parts)
+            });
+            // Merge-only: pre-sketched parts, reduce over raw vectors (the
+            // coordinator's MergeShards body).
+            let parts: Vec<Vec<f64>> = cuts
+                .windows(2)
+                .map(|w| {
+                    let mut sh = ShardSketch::for_group(9, 0, &shape, j, false);
+                    sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                    sh.into_sketch()
+                })
+                .collect();
+            let s_merge = measure(2, reps, || fcs::sketch::tree_reduce_parts(&parts));
+            table.row(vec![
+                format!("shard sketch+merge (k={shards})"),
+                "time".into(),
+                fmt_secs(s_sharded.median),
+            ]);
+            table.row(vec![
+                format!("shard merge only (k={shards})"),
+                "time".into(),
+                fmt_secs(s_merge.median),
+            ]);
+            table.row(vec![
+                format!("shard overhead vs whole (k={shards})"),
+                "ratio".into(),
+                format!("{:.2}", s_sharded.median / s_whole.median),
+            ]);
+            sink.record(&[
+                ("path", "shard_merge".into()),
+                ("shards", (shards as f64).into()),
+                ("j", (j as f64).into()),
+                ("secs_whole", s_whole.median.into()),
+                ("secs_sharded", s_sharded.median.into()),
+                ("secs_merge_only", s_merge.median.into()),
+                ("overhead_vs_whole", (s_sharded.median / s_whole.median).into()),
+            ]);
+        }
+    }
+
     table.print();
     sink.flush();
 

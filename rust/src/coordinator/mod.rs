@@ -25,6 +25,12 @@
 //! pure-Rust paths agree numerically; fused flights are bit-identical to
 //! serial execution (per-job RNGs derive from [`service::job_rng`] either
 //! way) and a poisoned job inside a flight costs exactly its own reply.
+//!
+//! Sharded reduce front-end (`rust/tests/merge_conformance.rs`): the
+//! `sketch_shard` op scatters tensor slabs under *group-shared* hash draws
+//! ([`crate::sketch::merge::group_rng`]), `merge_shards` tree-reduces the
+//! replies, and the merged result is bit-identical to a whole-tensor
+//! `sketch_shard` of the same group on exactly representable data.
 
 pub mod msg;
 pub mod service;

@@ -15,6 +15,26 @@ pub enum Request {
     SketchCp { cp: CpTensor, j: usize },
     /// Median-of-D sketched inner-product estimate ⟨A, B⟩.
     InnerEstimate { a: Tensor, b: Tensor, method: SketchMethod, j: usize, d: usize },
+    /// Sketch one contiguous column-major slab of a partitioned tensor
+    /// under its merge group's **shared** hash draws
+    /// ([`crate::sketch::merge::group_rng`]`(seed, group)` — keyed by the
+    /// group, not the request, so every shard of `group` reproduces
+    /// identical tables and the replies are additive).
+    SketchShard {
+        /// `vec(T)[offset .. offset + slab.len()]`.
+        slab: Vec<f64>,
+        /// Column-major linear position of `slab[0]` in the full tensor.
+        offset: usize,
+        /// Full-tensor dims the shared hashes are drawn for.
+        dims: Vec<usize>,
+        method: SketchMethod,
+        j: usize,
+        /// Merge-group id.
+        group: u64,
+    },
+    /// Pairwise tree-reduce previously sketched shard replies (elementwise
+    /// add — CS linearity under shared draws). Pure reduce: no hash draws.
+    MergeShards { parts: Vec<Vec<f64>> },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +83,8 @@ impl Request {
             Request::SketchDense { .. } => "sketch_dense",
             Request::SketchCp { .. } => "sketch_cp",
             Request::InnerEstimate { .. } => "inner_estimate",
+            Request::SketchShard { .. } => "sketch_shard",
+            Request::MergeShards { .. } => "merge_shards",
         }
     }
 
@@ -108,6 +130,21 @@ impl Request {
                     SketchMethod::Fcs => 5,
                 };
                 (m, *j, dims_key(a.shape.iter().copied()))
+            }
+            Request::SketchShard { dims, method, j, .. } => {
+                // Same arena-warmth logic as SketchDense (the shard scatter
+                // reuses the dense hash arena); offset/group stay out of the
+                // key — they change neither table sizes nor plan lengths.
+                let m = match method {
+                    SketchMethod::Ts => 6,
+                    SketchMethod::Fcs => 7,
+                };
+                (m, *j, dims_key(dims.iter().copied()))
+            }
+            Request::MergeShards { parts } => {
+                // The reduce touches no arena; group by fan-in and part
+                // length so equal-size merges at least run consecutively.
+                (8, parts.len(), parts.first().map_or(0, |p| p.len()))
             }
         }
     }

@@ -37,6 +37,15 @@
 //! panic inside a *fused* flight falls back to per-job serial retry (each
 //! job's RNG re-derived from its stored `req_id`), preserving both the
 //! isolation contract and bit-identical healthy outputs.
+//!
+//! **Sharded reduce front-end**: `sketch_shard` scatters one slab of a
+//! partitioned tensor under its merge group's *shared* hash draws
+//! ([`crate::sketch::merge::group_rng`] over `(seed, group)` rather than the
+//! per-request [`job_rng`]), and `merge_shards` pairwise tree-reduces the
+//! replies ([`crate::sketch::merge::tree_reduce_parts`]) — CS linearity
+//! makes the merged sum bit-identical to whole-tensor sketching on exactly
+//! representable data. Shard widths and merge depths land in the `obs`
+//! histograms `fcs_shard_width` / `fcs_merge_depth`.
 
 use super::msg::{Request, Response, ServiceError, SketchMethod};
 use super::stats::{Stats, StatsReport};
@@ -199,6 +208,45 @@ impl ServiceHandle {
                 };
                 if *d == 0 || *j == 0 || na == 0 {
                     return Err(ServiceError::BadRequest("empty tensor, d=0 or j=0".into()));
+                }
+            }
+            Request::SketchShard { slab, offset, dims, j, .. } => {
+                // Same overflow-checked product discipline as the dense arms,
+                // on the *full-tensor* dims (the hash tables are drawn for
+                // them), plus the slab-window bound: the scatter kernel
+                // asserts `offset + slab.len() <= numel` at execution time,
+                // and a hostile request must be a BadRequest, not a worker
+                // panic. Empty slabs are legal (a shard may own zero rows of
+                // an uneven partition) — the scatter is a no-op.
+                if dims.is_empty() || *j == 0 {
+                    return Err(ServiceError::BadRequest("empty dims or j=0".into()));
+                }
+                let Some(numel) = dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                else {
+                    return Err(ServiceError::BadRequest("shard dims overflow".into()));
+                };
+                if numel == 0 {
+                    return Err(ServiceError::BadRequest("empty dims or j=0".into()));
+                }
+                let end = offset.checked_add(slab.len());
+                if end.is_none() || end > Some(numel) {
+                    return Err(ServiceError::BadRequest(format!(
+                        "shard slab [{offset}, {offset}+{}) exceeds tensor numel {numel}",
+                        slab.len()
+                    )));
+                }
+            }
+            Request::MergeShards { parts } => {
+                // Only emptiness is checked here. Part-length agreement is
+                // deliberately left to the execution-time assert in
+                // `tree_reduce_parts`: the merge is the reduce step of a
+                // scatter the *client* orchestrated, so a mismatch means one
+                // of its shard replies was corrupted/mispaired — a per-job
+                // Exec failure (poisoning only its own merge group), not a
+                // submission-shape problem. The stress suite relies on this
+                // split to prove poison isolation.
+                if parts.is_empty() {
+                    return Err(ServiceError::BadRequest("merge_shards with no parts".into()));
                 }
             }
         }
@@ -526,6 +574,29 @@ impl WorkerState {
         sketch_dense_into(tensor, &self.hashes, modulo, out);
     }
 
+    /// The `sketch_shard` op body: redraw the dense hash arena from the
+    /// merge **group's** RNG (so every shard of the group scatters under
+    /// identical tables — the additivity contract), then the `O(slab)`
+    /// windowed scatter. Same arena/steady-state discipline as
+    /// [`Self::sketch_dense_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn sketch_shard_into(
+        &mut self,
+        slab: &[f64],
+        offset: usize,
+        dims: &[usize],
+        method: SketchMethod,
+        j: usize,
+        rng: &mut Rng,
+        out: &mut Vec<f64>,
+    ) {
+        self.hashes.redraw_uniform(rng, dims, j);
+        let (modulo, len) = self.dense_params(method, j);
+        out.clear();
+        out.resize(len, 0.0);
+        crate::sketch::merge::scatter_slab(slab, offset, &self.hashes, modulo, out);
+    }
+
     /// The `sketch_cp` pure-Rust body: per-mode hash redraw into the
     /// count-sketch arena, then the shared spectral core's one-IFFT rank
     /// accumulation — which batches all R·N mode spectra of each rank chunk
@@ -664,6 +735,7 @@ impl WorkerState {
         &mut self,
         req: &Request,
         runtime: &Option<RuntimeHandle>,
+        seed: u64,
         rng: &mut Rng,
     ) -> Result<Response, ServiceError> {
         match req {
@@ -697,6 +769,27 @@ impl WorkerState {
             }
             Request::InnerEstimate { a, b, method, j, d } => {
                 Ok(Response::Scalar(self.inner_estimate(a, b, *method, *j, *d, rng)))
+            }
+            Request::SketchShard { slab, offset, dims, method, j, group } => {
+                // Hash draws come from the merge *group's* RNG, not the
+                // per-request one — every shard of `group` must reproduce
+                // identical tables or the merged sum is garbage. The per-
+                // request rng stays untouched (shard determinism is keyed
+                // `(seed, group)`, independent of req_id arrival order).
+                let mut grng = crate::sketch::merge::group_rng(seed, *group);
+                let mut out = Vec::new();
+                self.sketch_shard_into(slab, *offset, dims, *method, *j, &mut grng, &mut out);
+                crate::obs::metrics().shard_width.observe(slab.len() as u64);
+                Ok(Response::Sketch(out))
+            }
+            Request::MergeShards { parts } => {
+                // Pure reduce — no draws, no arena. The equal-length assert
+                // inside fires as an execution-time panic, which the serial
+                // per-job catch_unwind turns into an Exec error for exactly
+                // this merge group.
+                let (merged, depth) = crate::sketch::merge::tree_reduce_parts(parts);
+                crate::obs::metrics().merge_depth.observe(depth as u64);
+                Ok(Response::Sketch(merged))
             }
         }
     }
@@ -911,7 +1004,7 @@ fn execute_flight(
     for (k, job) in jobs.iter().enumerate().skip(serial_from) {
         let mut rng = job_rng(seed, req_ids[k]);
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            state.execute(&job.req, runtime, &mut rng)
+            state.execute(&job.req, runtime, seed, &mut rng)
         }));
         let result = match caught {
             Ok(r) => r,

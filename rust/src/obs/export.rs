@@ -172,6 +172,8 @@ t_latency_us_count{op=\"cs_vec\"} 3
             "# TYPE fcs_queue_depth gauge",
             "# TYPE fcs_rejected_busy_total counter",
             "# TYPE fcs_poisoned_jobs_total counter",
+            "# TYPE fcs_shard_width histogram",
+            "# TYPE fcs_merge_depth histogram",
         ] {
             assert!(text.contains(family), "missing {family:?} in:\n{text}");
         }

@@ -27,13 +27,23 @@ use std::time::Instant;
 
 /// Known coordinator operations, in registration order. `"other"` is the
 /// catch-all for names outside the coordinator's `Request::op_name` set.
-pub const OPS: [&str; 5] = ["cs_vec", "sketch_dense", "sketch_cp", "inner_estimate", "other"];
+pub const OPS: [&str; 7] = [
+    "cs_vec",
+    "sketch_dense",
+    "sketch_cp",
+    "inner_estimate",
+    "sketch_shard",
+    "merge_shards",
+    "other",
+];
 
-const OP_LABELS: [&str; 5] = [
+const OP_LABELS: [&str; 7] = [
     "op=\"cs_vec\"",
     "op=\"sketch_dense\"",
     "op=\"sketch_cp\"",
     "op=\"inner_estimate\"",
+    "op=\"sketch_shard\"",
+    "op=\"merge_shards\"",
     "op=\"other\"",
 ];
 
@@ -77,7 +87,7 @@ pub struct CrateMetrics {
     pub plan_cache_misses_forward: Arc<Counter>,
     pub plan_cache_misses_real: Arc<Counter>,
 
-    ops: [OpMetrics; 5],
+    ops: [OpMetrics; 7],
 
     /// `fcs_flight_width` — jobs per executed flight (1 = serial).
     pub flight_width: Arc<Histogram>,
@@ -101,6 +111,11 @@ pub struct CrateMetrics {
 
     /// `fcs_stage_ns{stage=...}` — sampled SpectralDriver stage timings.
     pub stage_ns: [Arc<Histogram>; 4],
+
+    /// `fcs_shard_width` — slab elements per `sketch_shard` request.
+    pub shard_width: Arc<Histogram>,
+    /// `fcs_merge_depth` — pairwise tree-reduce levels per `merge_shards`.
+    pub merge_depth: Arc<Histogram>,
 
     /// `fcs_estimator_queries_total{kind="t_mode"|"deflate"}`
     pub estimator_t_mode: Arc<Counter>,
@@ -135,35 +150,35 @@ impl CrateMetrics {
             "cache=\"real\"",
         );
 
-        let completed: [Arc<Counter>; 5] = std::array::from_fn(|i| {
+        let completed: [Arc<Counter>; 7] = std::array::from_fn(|i| {
             reg.counter(
                 "fcs_requests_completed_total",
                 "Coordinator requests answered, by operation.",
                 OP_LABELS[i],
             )
         });
-        let latency: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+        let latency: [Arc<Histogram>; 7] = std::array::from_fn(|i| {
             reg.histogram(
                 "fcs_request_latency_us",
                 "Submit-to-reply latency in microseconds, by operation.",
                 OP_LABELS[i],
             )
         });
-        let queue_wait: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+        let queue_wait: [Arc<Histogram>; 7] = std::array::from_fn(|i| {
             reg.histogram(
                 "fcs_queue_wait_us",
                 "Submit-to-flight-start wait in microseconds, by operation.",
                 OP_LABELS[i],
             )
         });
-        let exec: [Arc<Histogram>; 5] = std::array::from_fn(|i| {
+        let exec: [Arc<Histogram>; 7] = std::array::from_fn(|i| {
             reg.histogram(
                 "fcs_exec_us",
                 "Flight-start-to-reply execution time in microseconds, by operation.",
                 OP_LABELS[i],
             )
         });
-        let ops: [OpMetrics; 5] = std::array::from_fn(|i| OpMetrics {
+        let ops: [OpMetrics; 7] = std::array::from_fn(|i| OpMetrics {
             completed: completed[i].clone(),
             latency_us: latency[i].clone(),
             queue_wait_us: queue_wait[i].clone(),
@@ -226,6 +241,17 @@ impl CrateMetrics {
             )
         });
 
+        let shard_width = reg.histogram(
+            "fcs_shard_width",
+            "Slab elements per sketch_shard request.",
+            "",
+        );
+        let merge_depth = reg.histogram(
+            "fcs_merge_depth",
+            "Pairwise tree-reduce levels per merge_shards request.",
+            "",
+        );
+
         let estimator_t_mode = reg.counter(
             "fcs_estimator_queries_total",
             "Estimator spectral queries, by kind.",
@@ -259,6 +285,8 @@ impl CrateMetrics {
             batches,
             batched_jobs,
             stage_ns,
+            shard_width,
+            merge_depth,
             estimator_t_mode,
             estimator_deflate,
             traces_recorded,
@@ -375,7 +403,9 @@ mod tests {
     fn op_lookup_maps_known_and_unknown() {
         let m = metrics();
         assert!(std::ptr::eq(m.op("sketch_cp"), &m.ops[2]));
-        assert!(std::ptr::eq(m.op("no_such_op"), &m.ops[4]));
+        assert!(std::ptr::eq(m.op("sketch_shard"), &m.ops[4]));
+        assert!(std::ptr::eq(m.op("merge_shards"), &m.ops[5]));
+        assert!(std::ptr::eq(m.op("no_such_op"), &m.ops[6]));
     }
 
     /// Obtain a live timer even if a concurrent test steals the force flag

@@ -486,6 +486,18 @@ impl<S: SpectralSketchOp> SpectralEstimator<S> {
     fn mode_stride(&self) -> usize {
         self.reps.iter().map(|r| r.op.core().mode_stride()).max().unwrap_or(0)
     }
+
+    /// Streaming rank-1 absorb: fold `+λ·(v₁ ∘ … ∘ v_N)` into every
+    /// repetition's sketch (and cached spectrum) **without** touching the
+    /// base tensor — the exact mirror of [`ContractionEstimator::deflate`]
+    /// (which subtracts), so by CS linearity the updated state equals a
+    /// from-scratch re-sketch of `T + λ·(v₁ ∘ … ∘ v_N)` under the same hash
+    /// draws. This is the incremental path for tensors too big to
+    /// re-sketch: build on a partial (or merged shard) sketch, then absorb
+    /// deltas as they arrive.
+    pub fn absorb_rank1(&mut self, lambda: f64, vs: &[&[f64]]) {
+        self.deflate(-lambda, vs);
+    }
 }
 
 impl<S: SpectralSketchOp> ContractionEstimator for SpectralEstimator<S> {
@@ -989,6 +1001,44 @@ mod tests {
                 .sqrt()
                 / crate::linalg::norm2(&truth);
             assert!(err < 0.45, "mode {mode}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn streaming_absorb_matches_rebuild() {
+        // absorb_rank1 is deflate's mirror: absorbing +λ·u∘u∘u into an
+        // estimator built on T must match building on T + λ·u∘u∘u with the
+        // same hash draws — the streaming contract the sharded layer leans
+        // on (sketch once, fold deltas in as they arrive).
+        let mut rng = Rng::seed_from_u64(31);
+        let t = test_tensor(&mut rng, 8);
+        let mut u = rng.normal_vec(8);
+        crate::linalg::normalize(&mut u);
+        let lambda = 0.9;
+        let grown = {
+            let r1 = crate::tensor::outer(&[&u[..], &u[..], &u[..]]);
+            t.add(&r1.scaled(lambda))
+        };
+        let vs: Vec<&[f64]> = vec![&u, &u, &u];
+        let hashes: Vec<ModeHashes> =
+            (0..2).map(|_| ModeHashes::draw_uniform(&mut rng, &t.shape, 50)).collect();
+
+        let mut fcs = FcsEstimator::build_with_hashes(&t, &hashes);
+        fcs.absorb_rank1(lambda, &vs);
+        let fcs2 = FcsEstimator::build_with_hashes(&grown, &hashes);
+        for (a, b) in fcs.reps.iter().zip(&fcs2.reps) {
+            for (x, y) in a.st.iter().zip(&b.st) {
+                assert!((x - y).abs() < 1e-9, "fcs absorb mismatch");
+            }
+        }
+
+        let mut ts = TsEstimator::build_with_hashes(&t, &hashes);
+        ts.absorb_rank1(lambda, &vs);
+        let ts2 = TsEstimator::build_with_hashes(&grown, &hashes);
+        for (a, b) in ts.reps.iter().zip(&ts2.reps) {
+            for (x, y) in a.st.iter().zip(&b.st) {
+                assert!((x - y).abs() < 1e-9, "ts absorb mismatch");
+            }
         }
     }
 

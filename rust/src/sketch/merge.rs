@@ -1,0 +1,600 @@
+//! Sharded, mergeable, streaming sketches — the distributed-scale layer.
+//!
+//! Count sketch is **linear**: `CS(A + B) = CS(A) + CS(B)` whenever both
+//! sides are sketched under the *same* hash draws (Wang et al. 2015, the
+//! setting the ROADMAP's sharded-sketches item names). TS and FCS inherit
+//! that linearity bucket-for-bucket, so a huge tensor can be partitioned
+//! into contiguous `vec(T)` slabs, each slab sketched locally on its own
+//! node, and the partial sketches added — the merged vector *is* the sketch
+//! of the whole tensor. The same identity powers streaming: a rank-1 update
+//! `T ← T + λ·v₁∘…∘v_N` is absorbed by sketching only the update through
+//! the spectral rank-1 pipeline (never re-sketching `T`), which is what
+//! incremental `deflate`/RTPM on tensors too big for one node rides.
+//!
+//! Shared-seed protocol: every shard of a merge group draws its
+//! [`ModeHashes`] from [`group_rng`]`(seed, group)` — a deterministic
+//! stream keyed by the *group*, not the request, so any worker sketching
+//! any shard of the group reproduces identical tables. `group_rng` uses its
+//! own mixing salt, disjoint from the coordinator's per-request
+//! [`job_rng`](crate::coordinator::job_rng) stream: a group id can never
+//! collide with a request id's draws.
+//!
+//! Bit-exactness contract (what `tests/merge_conformance.rs` pins): the
+//! shard scatter [`scatter_slab`] visits entries in the same column-major
+//! order as the whole-tensor walk [`sketch_dense_into`], restricted to the
+//! slab. Merging reassociates IEEE additions, so *arbitrary real* data
+//! agrees only to roundoff — but on integer-valued (exact-dyadic) data
+//! every partial sum is exactly representable and any association yields
+//! identical bits, making `f64::to_bits` equality a genuine test of the
+//! hash draws, bucket indexing, and sign logic.
+
+use super::common::{SpectralSketchCore, MAX_FFT_LANES};
+use super::cs::CountSketch;
+use crate::fft::{self, complex::ZERO, C64, FftWorkspace};
+use crate::hash::{unravel_colmajor, ModeHashes};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// The deterministic per-merge-group RNG: shards of one group must consume
+/// identical hash draws, so their RNG is keyed by `(seed, group)` — never
+/// by the request id. Single home of that rule; the coordinator's
+/// `SketchShard` arm and every conformance test derive through it. The salt
+/// and multiplier differ from `job_rng`'s so the two draw streams are
+/// disjoint even when `group == req_id`.
+pub fn group_rng(seed: u64, group: u64) -> Rng {
+    Rng::seed_from_u64(seed ^ 0xC0FF_EE00_5EED_F00D ^ group.wrapping_mul(0xA24B_AED4_963E_E407))
+}
+
+/// Additive scatter of one contiguous column-major slab of `vec(T)` into a
+/// sketch accumulator. `slab` holds `vec(T)[offset .. offset + slab.len()]`;
+/// `mh` is drawn for the **full** tensor dims (that is the shared-hash
+/// requirement), and `out` is *accumulated into* — unlike
+/// [`sketch_dense_into`](super::common::sketch_dense_into) it is not
+/// zeroed, so successive slabs of one tensor sum to the whole-tensor
+/// sketch. Entry order within the slab matches the whole-tensor walk.
+///
+/// * `modulo = Some(J)` → TS bucket `(Σ h_n) mod J` (`out.len() == J`).
+/// * `modulo = None`   → FCS bucket `Σ h_n` (`out.len() == J̃`).
+pub fn scatter_slab(
+    slab: &[f64],
+    offset: usize,
+    mh: &ModeHashes,
+    modulo: Option<usize>,
+    out: &mut [f64],
+) {
+    let total: usize = mh.dims.iter().product();
+    assert!(
+        offset + slab.len() <= total,
+        "slab [{offset}, {}) exceeds vec(T) of {total} entries",
+        offset + slab.len()
+    );
+    match modulo {
+        Some(j) => {
+            assert_eq!(out.len(), j);
+            assert!(
+                mh.modes.iter().all(|m| m.range == j),
+                "TS requires uniform mode ranges"
+            );
+        }
+        None => assert_eq!(out.len(), mh.composite_range()),
+    }
+    if slab.is_empty() {
+        return;
+    }
+    let n = mh.dims.len();
+    let i0 = mh.dims[0];
+    let h0 = &mh.modes[0].h;
+    let s0 = &mh.modes[0].s;
+    // Multi-index of the slab's first entry; `i` is its position within the
+    // (possibly partial) first mode-0 fiber.
+    let mut idx = vec![0usize; n];
+    unravel_colmajor(offset, &mh.dims, &mut idx);
+    let mut i = idx[0];
+    let idx_hi = &mut idx[1..];
+    let mut l = 0usize;
+    while l < slab.len() {
+        // Contributions of the fixed higher modes (same fiber walk as the
+        // whole-tensor scatter).
+        let mut hbase = 0usize;
+        let mut neg = 0usize;
+        for (d, &ii) in idx_hi.iter().enumerate() {
+            let m = &mh.modes[d + 1];
+            hbase += m.h[ii] as usize;
+            if m.s[ii] < 0 {
+                neg += 1;
+            }
+        }
+        let sbase = if neg & 1 == 0 { 1.0 } else { -1.0 };
+        let run = (i0 - i).min(slab.len() - l);
+        match modulo {
+            Some(j) => {
+                let hb = hbase % j;
+                for ii in i..i + run {
+                    let v = slab[l];
+                    l += 1;
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let mut b = hb + h0[ii] as usize;
+                    if b >= j {
+                        b -= j; // hb, h0 < J ⇒ sum < 2J: one subtract replaces `%`
+                    }
+                    out[b] += sbase * (s0[ii] as f64) * v;
+                }
+            }
+            None => {
+                for ii in i..i + run {
+                    let v = slab[l];
+                    l += 1;
+                    if v == 0.0 {
+                        continue;
+                    }
+                    out[hbase + h0[ii] as usize] += sbase * (s0[ii] as f64) * v;
+                }
+            }
+        }
+        i = 0;
+        for (d, ix) in idx_hi.iter_mut().enumerate() {
+            *ix += 1;
+            if *ix < mh.dims[d + 1] {
+                break;
+            }
+            *ix = 0;
+        }
+    }
+}
+
+/// Pairwise tree reduce over raw shard sketch vectors (the coordinator's
+/// `MergeShards` body). Returns the merged sketch and the tree depth
+/// (`⌈log₂ k⌉`; 0 for a single part). All parts must share one length —
+/// deliberately an **execution-time** assert rather than a submit-time
+/// validation, mirroring the kernel-assert poison contract the stress suite
+/// exercises: a malformed merge group costs exactly its own reply.
+pub fn tree_reduce_parts(parts: &[Vec<f64>]) -> (Vec<f64>, usize) {
+    assert!(!parts.is_empty(), "merge_shards: empty part list");
+    let len = parts[0].len();
+    assert!(
+        parts.iter().all(|p| p.len() == len),
+        "merge_shards: shard sketch lengths differ"
+    );
+    let mut layer = parts.to_vec();
+    let mut depth = 0usize;
+    while layer.len() > 1 {
+        depth += 1;
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+            }
+            next.push(a);
+        }
+        layer = next;
+    }
+    (layer.pop().unwrap(), depth)
+}
+
+/// One shard's mergeable sketch state: the shared-seed hash draw, the
+/// per-mode count sketches (the [`SpectralSketchCore`] view for streaming
+/// rank-1 absorbs), and the additive accumulator. `modulo = Some(J)` is the
+/// TS (circular) parameterization, `None` the FCS (linear) one — the same
+/// switch the dense service path uses.
+#[derive(Debug, Clone)]
+pub struct ShardSketch {
+    hashes: ModeHashes,
+    modes: Vec<CountSketch>,
+    modulo: Option<usize>,
+    sketch_len: usize,
+    acc: Vec<f64>,
+    updates: u64,
+}
+
+impl ShardSketch {
+    pub fn new(hashes: ModeHashes, modulo: Option<usize>) -> Self {
+        if let Some(j) = modulo {
+            assert!(
+                hashes.modes.iter().all(|m| m.range == j),
+                "TS shards need uniform hash ranges"
+            );
+        }
+        let sketch_len = modulo.unwrap_or_else(|| hashes.composite_range());
+        let modes = hashes.modes.iter().map(|t| CountSketch::new(t.clone())).collect();
+        let acc = vec![0.0; sketch_len];
+        Self { hashes, modes, modulo, sketch_len, acc, updates: 0 }
+    }
+
+    /// Build a shard under the group's shared hash draw: any caller with
+    /// the same `(seed, group, dims, j, circular)` gets identical tables,
+    /// which is what makes its sketches mergeable with its siblings'.
+    /// `circular = true` → TS, `false` → FCS.
+    pub fn for_group(seed: u64, group: u64, dims: &[usize], j: usize, circular: bool) -> Self {
+        let hashes = ModeHashes::draw_uniform(&mut group_rng(seed, group), dims, j);
+        Self::new(hashes, circular.then_some(j))
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.hashes.dims
+    }
+
+    pub fn sketch_len(&self) -> usize {
+        self.sketch_len
+    }
+
+    /// `Some(J)` → TS circular buckets; `None` → FCS linear buckets.
+    pub fn modulo(&self) -> Option<usize> {
+        self.modulo
+    }
+
+    /// Absorbed updates (slabs, dense tensors, and rank-1 streams), summed
+    /// across merges.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// The accumulated sketch.
+    pub fn sketch(&self) -> &[f64] {
+        &self.acc
+    }
+
+    pub fn into_sketch(self) -> Vec<f64> {
+        self.acc
+    }
+
+    /// The spectral-pipeline view over this shard's hash draw.
+    pub fn core(&self) -> SpectralSketchCore<'_> {
+        match self.modulo {
+            Some(j) => SpectralSketchCore::circular(&self.modes, j),
+            None => SpectralSketchCore::linear(&self.modes, self.sketch_len),
+        }
+    }
+
+    /// Absorb one contiguous column-major slab of `vec(T)` (additive).
+    pub fn absorb_slab(&mut self, slab: &[f64], offset: usize) {
+        scatter_slab(slab, offset, &self.hashes, self.modulo, &mut self.acc);
+        self.updates += 1;
+    }
+
+    /// Absorb a whole dense tensor (shape must match the hash draw).
+    pub fn absorb_dense(&mut self, t: &Tensor) {
+        assert_eq!(t.shape, self.hashes.dims, "absorb_dense: shape mismatch");
+        self.absorb_slab(&t.data, 0);
+    }
+
+    /// Streaming rank-1 absorb: `sketch ← sketch + λ·sketch(v₁∘…∘v_N)` via
+    /// the core's spectral rank-1 pipeline — `O(Σ J_n + n log n)` per
+    /// update, never touching the (possibly never-materialized) tensor.
+    pub fn absorb_rank1(&mut self, lambda: f64, vs: &[&[f64]]) {
+        let Self { modes, modulo, sketch_len, acc, updates, .. } = self;
+        assert_eq!(vs.len(), modes.len(), "absorb_rank1: arity mismatch");
+        let core = match modulo {
+            Some(j) => SpectralSketchCore::circular(modes, *j),
+            None => SpectralSketchCore::linear(modes, *sketch_len),
+        };
+        fft::with_thread_workspace(|ws| {
+            let mut sk = ws.take_f64(*sketch_len);
+            core.apply_rank1_into(vs, ws, &mut sk);
+            crate::linalg::axpy(lambda, &sk[..*sketch_len], acc);
+            ws.give_f64(sk);
+        });
+        *updates += 1;
+    }
+
+    /// Geometry compatibility for merging; hash-draw equality is a
+    /// debug-only check (O(Σ I_n), and shards built through [`group_rng`]
+    /// share draws by construction).
+    fn assert_mergeable(&self, other: &ShardSketch) {
+        assert_eq!(self.hashes.dims, other.hashes.dims, "merge: dims differ");
+        assert_eq!(self.modulo, other.modulo, "merge: backend differs");
+        assert_eq!(self.sketch_len, other.sketch_len, "merge: sketch lengths differ");
+        debug_assert!(
+            self.hashes
+                .modes
+                .iter()
+                .zip(&other.hashes.modes)
+                .all(|(a, b)| a.h == b.h && a.s == b.s),
+            "merge: shards drawn under different hashes"
+        );
+    }
+
+    /// Additive merge: fold this shard's sketch into `dst` (linearity of CS
+    /// under shared draws). `dst` keeps its own hash tables — they are
+    /// identical by the shared-seed protocol.
+    pub fn merge_into(&self, dst: &mut ShardSketch) {
+        dst.assert_mergeable(self);
+        for (d, s) in dst.acc.iter_mut().zip(&self.acc) {
+            *d += s;
+        }
+        dst.updates += self.updates;
+    }
+
+    /// Pairwise tree reduce over shard states; returns the merged shard and
+    /// the merge depth (`⌈log₂ k⌉`).
+    pub fn tree_merge(shards: Vec<ShardSketch>) -> (ShardSketch, usize) {
+        assert!(!shards.is_empty(), "tree_merge: no shards");
+        let mut layer = shards;
+        let mut depth = 0usize;
+        while layer.len() > 1 {
+            depth += 1;
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            let mut it = layer.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    b.merge_into(&mut a);
+                }
+                next.push(a);
+            }
+            layer = next;
+        }
+        (layer.pop().unwrap(), depth)
+    }
+
+    /// Merge at the **spectrum** level: `F(Σ s_i) = Σ F(s_i)` by linearity
+    /// of the transform, computed with one batched forward dispatch per
+    /// ≤[`MAX_FFT_LANES`]-shard chunk riding the shards' `SpectralDriver`.
+    /// This is the reduce shape a spectral consumer (an estimator's cached
+    /// `F(st)`) wants: the merged spectrum lands directly, without an extra
+    /// time-domain round trip.
+    pub fn merged_spectrum(shards: &[ShardSketch], ws: &mut FftWorkspace) -> Vec<C64> {
+        let first = shards.first().expect("merged_spectrum: no shards");
+        for s in &shards[1..] {
+            first.assert_mergeable(s);
+        }
+        let core = first.core();
+        let n = core.fft_len;
+        let groups = shards.len();
+        let driver = core.driver(MAX_FFT_LANES.min(groups), false);
+        // take_f64 rents zeroed — only each shard's sketch_len prefix needs
+        // writing; the tail up to fft_len stays zero padding.
+        let mut signals = ws.take_f64(groups * n);
+        for (g, s) in shards.iter().enumerate() {
+            signals[g * n..g * n + s.sketch_len].copy_from_slice(&s.acc);
+        }
+        let mut spec = vec![ZERO; n];
+        driver.forward_each(&signals, groups, ws, |_, k, re, im| {
+            let x = &mut spec[k];
+            x.re += re;
+            x.im += im;
+        });
+        ws.give_f64(signals);
+        spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::common::sketch_dense;
+    use crate::util::qcheck::qcheck;
+
+    /// Integer-valued tensor: every bucket partial sum is exactly dyadic,
+    /// so *any* association of the adds yields identical bits.
+    fn integer_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data: Vec<f64> = (0..n).map(|_| rng.below(41) as f64 - 20.0).collect();
+        Tensor::from_data(shape, data)
+    }
+
+    #[test]
+    fn whole_slab_matches_sketch_dense_bitwise() {
+        // One slab covering all of vec(T) replays the exact whole-tensor
+        // walk — bitwise equal even on real-valued data.
+        let mut rng = Rng::seed_from_u64(1);
+        let shape = [5usize, 4, 6];
+        let t = Tensor::randn(&mut rng, &shape);
+        for circular in [true, false] {
+            let mut sh = ShardSketch::for_group(7, 3, &shape, 8, circular);
+            sh.absorb_slab(&t.data, 0);
+            let whole = sketch_dense(&t, &sh.hashes, sh.modulo);
+            assert_eq!(sh.sketch().len(), whole.len());
+            for (a, b) in sh.sketch().iter().zip(&whole) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_slabs_merge_to_whole_bitwise_on_integer_data() {
+        let mut rng = Rng::seed_from_u64(2);
+        let shape = [4usize, 5, 3];
+        let t = integer_tensor(&mut rng, &shape);
+        for circular in [true, false] {
+            // Uneven, fiber-misaligned cuts (7 and 23 are coprime to I₁=4).
+            let cuts = [0usize, 7, 30, 53, t.data.len()];
+            let shards: Vec<ShardSketch> = cuts
+                .windows(2)
+                .map(|w| {
+                    let mut sh = ShardSketch::for_group(9, 1, &shape, 6, circular);
+                    sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                    sh
+                })
+                .collect();
+            let (merged, depth) = ShardSketch::tree_merge(shards);
+            assert_eq!(depth, 2); // 4 shards → ⌈log₂ 4⌉
+            let whole = sketch_dense(&t, &merged.hashes, merged.modulo);
+            for (a, b) in merged.sketch().iter().zip(&whole) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_merge_depth_is_log2() {
+        for (k, want) in [(1usize, 0usize), (2, 1), (3, 2), (5, 3), (8, 3)] {
+            let shards: Vec<ShardSketch> =
+                (0..k).map(|_| ShardSketch::for_group(1, 2, &[3, 3], 4, true)).collect();
+            let (_, depth) = ShardSketch::tree_merge(shards);
+            assert_eq!(depth, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_parts_matches_shard_merge() {
+        let parts = vec![vec![1.0, 2.0], vec![0.5, -1.0], vec![3.0, 0.25]];
+        let (merged, depth) = tree_reduce_parts(&parts);
+        assert_eq!(depth, 2);
+        assert_eq!(merged, vec![4.5, 1.25]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard sketch lengths differ")]
+    fn tree_reduce_rejects_mixed_lengths() {
+        tree_reduce_parts(&[vec![1.0, 2.0], vec![1.0]]);
+    }
+
+    #[test]
+    fn absorb_rank1_matches_core_apply_rank1() {
+        // Absorbing into a zero accumulator == λ · apply_rank1, bitwise
+        // (axpy into zeros performs the same multiply the scaled reference
+        // does, and the spectral pipeline is shared).
+        let mut rng = Rng::seed_from_u64(3);
+        let shape = [5usize, 6, 4];
+        let vs: Vec<Vec<f64>> = shape.iter().map(|&d| rng.normal_vec(d)).collect();
+        let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+        for circular in [true, false] {
+            let mut sh = ShardSketch::for_group(11, 4, &shape, 9, circular);
+            sh.absorb_rank1(0.75, &refs);
+            let mut reference = Vec::new();
+            fft::with_thread_workspace(|ws| {
+                sh.core().apply_rank1_into(&refs, ws, &mut reference);
+            });
+            assert_eq!(sh.sketch().len(), reference.len());
+            for (a, &b) in sh.sketch().iter().zip(&reference) {
+                assert_eq!(a.to_bits(), (0.75 * b).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_rank1_matches_from_scratch_resketch() {
+        // A stream of rank-1 absorbs lands within roundoff of sketching the
+        // materialized updated tensor from scratch (linearity).
+        let mut rng = Rng::seed_from_u64(4);
+        let shape = [4usize, 5, 3];
+        let base = Tensor::randn(&mut rng, &shape);
+        let mut dense = base.clone();
+        for circular in [true, false] {
+            let mut sh = ShardSketch::for_group(13, 5, &shape, 7, circular);
+            sh.absorb_dense(&base);
+            for step in 0..3 {
+                let vs: Vec<Vec<f64>> = shape.iter().map(|&d| rng.normal_vec(d)).collect();
+                let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+                let lambda = 0.5 + 0.25 * step as f64;
+                sh.absorb_rank1(lambda, &refs);
+                dense = dense.add(&crate::tensor::outer(&refs).scaled(lambda));
+            }
+            let scratch = sketch_dense(&dense, &sh.hashes, sh.modulo);
+            let scale = scratch.iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for (a, b) in sh.sketch().iter().zip(&scratch) {
+                assert!((a - b).abs() < 1e-9 * scale, "{a} vs {b}");
+            }
+            dense = base.clone();
+        }
+    }
+
+    #[test]
+    fn merged_spectrum_matches_spectrum_of_merge() {
+        let mut rng = Rng::seed_from_u64(5);
+        let shape = [4usize, 4, 4];
+        let t = Tensor::randn(&mut rng, &shape);
+        for circular in [true, false] {
+            let cuts = [0usize, 20, 45, t.data.len()];
+            let shards: Vec<ShardSketch> = cuts
+                .windows(2)
+                .map(|w| {
+                    let mut sh = ShardSketch::for_group(17, 6, &shape, 8, circular);
+                    sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                    sh
+                })
+                .collect();
+            let spec = fft::with_thread_workspace(|ws| ShardSketch::merged_spectrum(&shards, ws));
+            let (merged, _) = ShardSketch::tree_merge(shards);
+            let direct = merged.core().sketch_spectrum(merged.sketch());
+            assert_eq!(spec.len(), direct.len());
+            let scale = direct.iter().map(|c| c.re.abs().max(c.im.abs())).fold(1.0, f64::max);
+            for (a, b) in spec.iter().zip(&direct) {
+                assert!((a.re - b.re).abs() < 1e-9 * scale, "{} vs {}", a.re, b.re);
+                assert!((a.im - b.im).abs() < 1e-9 * scale, "{} vs {}", a.im, b.im);
+            }
+        }
+    }
+
+    #[test]
+    fn group_rng_is_deterministic_and_disjoint_from_job_rng() {
+        assert_eq!(group_rng(7, 42).next_u64(), group_rng(7, 42).next_u64());
+        assert_ne!(group_rng(7, 42).next_u64(), group_rng(7, 43).next_u64());
+        assert_ne!(
+            group_rng(7, 42).next_u64(),
+            crate::coordinator::job_rng(7, 42).next_u64()
+        );
+    }
+
+    #[test]
+    fn qcheck_linearity_of_scaled_sums() {
+        // CS(αA + βB) = α·CS(A) + β·CS(B) under shared draws — tolerance-
+        // based: the two sides associate their IEEE adds differently.
+        qcheck(12, |g| {
+            let order = g.usize_in(2, 3);
+            let shape = g.shape(order, 2, 5);
+            let j = g.usize_in(2, 9);
+            let circular = g.bool();
+            let (alpha, beta) = (g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0));
+            let a = Tensor::randn(g.rng(), &shape);
+            let b = Tensor::randn(g.rng(), &shape);
+            let combined = a.scaled(alpha).add(&b.scaled(beta));
+            let mut lhs = ShardSketch::for_group(23, g.case as u64, &shape, j, circular);
+            lhs.absorb_dense(&combined);
+            let mut sa = ShardSketch::for_group(23, g.case as u64, &shape, j, circular);
+            sa.absorb_dense(&a);
+            let mut sb = ShardSketch::for_group(23, g.case as u64, &shape, j, circular);
+            sb.absorb_dense(&b);
+            let scale = lhs.sketch().iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for (k, l) in lhs.sketch().iter().enumerate() {
+                let r = alpha * sa.sketch()[k] + beta * sb.sketch()[k];
+                assert!((l - r).abs() < 1e-9 * scale, "case {}: k={k} {l} vs {r}", g.case);
+            }
+        });
+    }
+
+    #[test]
+    fn qcheck_merge_is_associative_and_commutative() {
+        // Merge order must not matter beyond IEEE reassociation: any
+        // shuffle/tree of the same shard set lands within roundoff.
+        qcheck(10, |g| {
+            let order = g.usize_in(2, 3);
+            let shape = g.shape(order, 2, 5);
+            let j = g.usize_in(2, 9);
+            let circular = g.bool();
+            let t = Tensor::randn(g.rng(), &shape);
+            let total: usize = shape.iter().product();
+            let k = g.usize_in(2, 5).min(total);
+            // Random uneven cut points.
+            let mut cuts: Vec<usize> = (0..k - 1).map(|_| g.usize_in(0, total)).collect();
+            cuts.push(0);
+            cuts.push(total);
+            cuts.sort_unstable();
+            let build = |w: &[usize]| {
+                let mut sh = ShardSketch::for_group(29, g.case as u64, &shape, j, circular);
+                sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                sh
+            };
+            let shards: Vec<ShardSketch> = cuts.windows(2).map(build).collect();
+            let mut reversed: Vec<ShardSketch> = cuts.windows(2).map(build).collect();
+            reversed.reverse();
+            let (fwd, _) = ShardSketch::tree_merge(shards);
+            let (rev, _) = ShardSketch::tree_merge(reversed);
+            // Left fold as a third association.
+            let mut fold = ShardSketch::for_group(29, g.case as u64, &shape, j, circular);
+            for w in cuts.windows(2) {
+                build(w).merge_into(&mut fold);
+            }
+            let scale = fwd.sketch().iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for i in 0..fwd.sketch().len() {
+                let (a, b, c) = (fwd.sketch()[i], rev.sketch()[i], fold.sketch()[i]);
+                assert!((a - b).abs() < 1e-12 * scale, "case {}: comm {a} vs {b}", g.case);
+                assert!((a - c).abs() < 1e-12 * scale, "case {}: assoc {a} vs {c}", g.case);
+            }
+        });
+    }
+}

@@ -11,16 +11,23 @@
 //! TS and FCS share one frequency-domain pipeline,
 //! [`common::SpectralSketchCore`] (circular vs linear parameterization), and
 //! one estimator implementation, [`estimator::SpectralEstimator`].
+//!
+//! [`merge`] adds the distributed-scale layer on top: sharded, mergeable,
+//! streaming sketches under a shared-seed hash protocol (CS linearity makes
+//! per-shard sketches additive), which the coordinator exposes as a
+//! `SketchShard`/`MergeShards` reduce front-end.
 
 pub mod common;
 pub mod cs;
 pub mod estimator;
 pub mod fcs;
 pub mod hcs;
+pub mod merge;
 pub mod ts;
 
 pub use common::{SpectralSketchCore, SpectralSketchOp};
 pub use cs::CountSketch;
+pub use merge::{group_rng, scatter_slab, tree_reduce_parts, ShardSketch};
 pub use estimator::{
     build_equalized, elementwise_median, elementwise_median_flat, ContractionEstimator,
     CsEstimator, FcsEstimator, HcsEstimator, Method, PlainEstimator, SpectralEstimator,

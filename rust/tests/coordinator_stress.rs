@@ -453,6 +453,159 @@ fn poisoned_job_inside_fused_flight_costs_only_its_own_reply() {
 }
 
 #[test]
+fn shard_merge_flood_reconciles_with_poison_isolation() {
+    // Mixed shard/merge flood across many merge groups, interleaved with
+    // unrelated dense traffic so shard jobs share drained batches with
+    // other ops. Contracts: no lost replies; each healthy group's service
+    // merge is bit-identical to its library-side ShardSketch reference
+    // (the shared-seed protocol end to end, under concurrency); a poisoned
+    // merge group — one shard reply truncated before the MergeShards
+    // submission, tripping the execution-time equal-length assert — fails
+    // only its own merge, never a sibling group or the worker; and the
+    // stats books account for every request exactly once.
+    let svc = start(3, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(0x5A4D);
+    let groups = 12usize;
+    let shards_per_group = 4usize;
+    let poisoned: usize = 5; // group index whose merge gets a truncated part
+    let shape = vec![4usize, 5, 3];
+    let j = 6usize;
+    let total: usize = shape.iter().product();
+
+    // Integer-valued data so merge ≡ whole is exact (any IEEE association
+    // of exactly dyadic partial sums yields identical bits).
+    let tensors: Vec<Tensor> = (0..groups)
+        .map(|_| {
+            let data: Vec<f64> = (0..total).map(|_| rng.below(41) as f64 - 20.0).collect();
+            Tensor::from_data(&shape, data)
+        })
+        .collect();
+    let method = |g: usize| if g % 2 == 0 { SketchMethod::Fcs } else { SketchMethod::Ts };
+
+    // Submit every group's shards interleaved (group-major round-robin)
+    // with dense noise traffic, so batches mix ops and groups.
+    let mut shard_rxs: Vec<Vec<_>> = (0..groups).map(|_| Vec::new()).collect();
+    let mut noise_rxs = Vec::new();
+    for s in 0..shards_per_group {
+        for g in 0..groups {
+            // Uneven fixed cuts: 4 shards with fiber-misaligned boundaries.
+            let cuts = [0usize, 7, 30, 53, total];
+            let (lo, hi) = (cuts[s], cuts[s + 1]);
+            shard_rxs[g].push(
+                h.submit(Request::SketchShard {
+                    slab: tensors[g].data[lo..hi].to_vec(),
+                    offset: lo,
+                    dims: shape.clone(),
+                    method: method(g),
+                    j,
+                    group: g as u64,
+                })
+                .unwrap(),
+            );
+            if (g + s) % 3 == 0 {
+                noise_rxs.push(
+                    h.submit(Request::SketchDense {
+                        tensor: Tensor::randn(&mut rng, &[3, 4, 3]),
+                        method: SketchMethod::Fcs,
+                        j: 8,
+                    })
+                    .unwrap(),
+                );
+            }
+        }
+    }
+    let shard_count = groups * shards_per_group;
+
+    // Collect shard replies per group, then submit the merges — with one
+    // group's parts deliberately corrupted (truncated last part).
+    let mut merge_rxs = Vec::new();
+    for (g, rxs) in shard_rxs.into_iter().enumerate() {
+        let mut parts: Vec<Vec<f64>> = rxs
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap().unwrap() {
+                Response::Sketch(v) => v,
+                other => panic!("group {g}: wrong shard response kind: {other:?}"),
+            })
+            .collect();
+        if g == poisoned {
+            let last = parts.last_mut().unwrap();
+            last.truncate(last.len() - 1);
+        }
+        merge_rxs.push(h.submit(Request::MergeShards { parts }).unwrap());
+    }
+    for rx in noise_rxs {
+        rx.recv().unwrap().unwrap();
+    }
+
+    for (g, rx) in merge_rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("group {g}: merge reply sender dropped — response lost"));
+        if g == poisoned {
+            match resp {
+                Err(ServiceError::Exec(msg)) => {
+                    assert!(
+                        msg.contains("shard sketch lengths differ"),
+                        "group {g}: unexpected Exec: {msg}"
+                    );
+                }
+                other => panic!("group {g}: poisoned merge did not fail as Exec: {other:?}"),
+            }
+            continue;
+        }
+        let Ok(Response::Sketch(merged)) = resp else {
+            panic!("group {g}: healthy merge failed next to a poisoned sibling")
+        };
+        // Library-side whole-tensor reference under the same (seed, group).
+        let mut lib = fcs::sketch::ShardSketch::for_group(
+            SEED,
+            g as u64,
+            &shape,
+            j,
+            method(g) == SketchMethod::Ts,
+        );
+        lib.absorb_slab(&tensors[g].data, 0);
+        assert!(
+            bits_eq(&merged, lib.sketch()),
+            "group {g}: concurrent service merge ≠ library whole-tensor reference"
+        );
+    }
+
+    // The pool survives the poisoned merge.
+    let tail = h
+        .call(Request::SketchShard {
+            slab: tensors[0].data.clone(),
+            offset: 0,
+            dims: shape.clone(),
+            method: SketchMethod::Fcs,
+            j,
+            group: 0,
+        })
+        .expect("worker pool dead after poisoned merge");
+    let Response::Sketch(v) = tail else { panic!("wrong response kind") };
+    assert!(v.iter().all(|x| x.is_finite()));
+
+    // Books reconcile: per-op completions match the submission counts
+    // exactly (the poisoned merge still completes — with an error).
+    let report = svc.stats();
+    let completed = |op: &str| {
+        report.per_op.iter().filter(|o| o.op == op).map(|o| o.completed).sum::<u64>()
+    };
+    assert_eq!(completed("sketch_shard") as usize, shard_count + 1, "shard books off");
+    assert_eq!(completed("merge_shards") as usize, groups, "merge books off");
+    assert_eq!(report.rejected_busy, 0);
+    svc.shutdown();
+
+    // Obs agrees with stats on the new instruments: at least this test's
+    // shard widths and merge depths were observed (the registry is
+    // process-global and shared with parallel tests, hence >=).
+    let m = fcs::obs::metrics();
+    assert!(m.shard_width.count() >= shard_count as u64 + 1, "shard_width not recorded");
+    assert!(m.merge_depth.count() >= (groups - 1) as u64, "merge_depth not recorded");
+}
+
+#[test]
 fn trace_spans_stay_ordered_under_mixed_shape_flood() {
     // Every reply leaves a span in the process-global trace book; its edges
     // are clamped at record time, so `submit ≤ queue ≤ flight-start ≤ reply`
@@ -488,7 +641,8 @@ fn trace_spans_stay_ordered_under_mixed_shape_flood() {
     // shards with ≤ 300 spans each, so even with every other test's traffic
     // accounted the book must still hold at least this flood's worth.
     assert!(spans.len() >= flood, "trace book lost spans: {} < {flood}", spans.len());
-    let known_ops = ["cs_vec", "sketch_dense", "sketch_cp", "inner_estimate"];
+    let known_ops =
+        ["cs_vec", "sketch_dense", "sketch_cp", "inner_estimate", "sketch_shard", "merge_shards"];
     for s in &spans {
         assert!(
             s.submit_us <= s.queue_us

@@ -1,0 +1,328 @@
+//! Merge ≡ whole conformance: sharded sketching under the shared-seed
+//! protocol must be **bit-identical** to whole-tensor sketching.
+//!
+//! Count sketch is linear, so under shared hash draws the sum of per-slab
+//! sketches *is* the whole-tensor sketch — up to IEEE reassociation. The
+//! bitwise tests therefore run on integer-valued tensors (every bucket
+//! partial sum is exactly dyadic, so any association of the adds yields
+//! identical bits), which makes `f64::to_bits` equality a genuine test of
+//! the hash draws, bucket indexing, and sign logic rather than a fragile
+//! float comparison. Real-valued data is covered tolerance-based by the
+//! qcheck suites in `src/sketch/merge.rs`.
+//!
+//! Layers pinned here:
+//! * library: `ShardSketch::tree_merge` over uneven partitions ≡ one shard
+//!   absorbing all of `vec(T)`, for FCS and TS, shard counts 1/2/3/8;
+//! * service: N× `SketchShard` + `MergeShards` ≡ a single whole-tensor
+//!   `SketchShard` of the same merge group (the coordinator draws through
+//!   the same `group_rng(seed, group)` stream the library uses);
+//! * streaming: a rank-1 absorb stream matches a from-scratch re-sketch of
+//!   the materialized tensor (tolerance — the rank-1 path runs through the
+//!   spectral pipeline, which is not an integer-exact scatter).
+
+use fcs::coordinator::{Request, Response, Service, ServiceConfig, SketchMethod};
+use fcs::sketch::ShardSketch;
+use fcs::tensor::Tensor;
+use fcs::util::prng::Rng;
+use std::time::Duration;
+
+/// Service seed shared with every library-side `ShardSketch::for_group`
+/// reference (the shared-seed protocol keys draws on `(seed, group)`).
+const SEED: u64 = 17;
+
+fn start(workers: usize, cap: usize) -> Service {
+    Service::start(
+        ServiceConfig {
+            workers,
+            queue_capacity: cap,
+            batch_deadline: Duration::from_micros(200),
+            seed: SEED,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Integer-valued tensor in [-20, 20] — all partial sums exactly dyadic.
+fn integer_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f64> = (0..n).map(|_| rng.below(41) as f64 - 20.0).collect();
+    Tensor::from_data(shape, data)
+}
+
+/// `k` uneven cut points over `[0, total]`: random interior cuts, sorted.
+/// Duplicates are kept — an empty shard is a legal partition member and the
+/// scatter must treat it as a no-op.
+fn uneven_cuts(rng: &mut Rng, total: usize, k: usize) -> Vec<usize> {
+    let mut cuts: Vec<usize> = (0..k - 1).map(|_| rng.below(total as u64 + 1) as usize).collect();
+    cuts.push(0);
+    cuts.push(total);
+    cuts.sort_unstable();
+    cuts
+}
+
+#[test]
+fn library_tree_merge_is_bit_identical_to_whole_sketch() {
+    // Both backends × shard counts 1/2/3/8 × several random uneven
+    // partitions each: the tree merge must reproduce the whole-tensor
+    // sketch bit for bit.
+    let mut rng = Rng::seed_from_u64(1);
+    let shape = [4usize, 5, 6];
+    let j = 7usize;
+    let t = integer_tensor(&mut rng, &shape);
+    for circular in [true, false] {
+        let mut whole = ShardSketch::for_group(SEED, 0, &shape, j, circular);
+        whole.absorb_slab(&t.data, 0);
+        for k in [1usize, 2, 3, 8] {
+            for trial in 0..3 {
+                let cuts = uneven_cuts(&mut rng, t.data.len(), k);
+                let shards: Vec<ShardSketch> = cuts
+                    .windows(2)
+                    .map(|w| {
+                        let mut sh = ShardSketch::for_group(SEED, 0, &shape, j, circular);
+                        sh.absorb_slab(&t.data[w[0]..w[1]], w[0]);
+                        sh
+                    })
+                    .collect();
+                let (merged, depth) = ShardSketch::tree_merge(shards);
+                assert_eq!(depth, (k as f64).log2().ceil() as usize, "k={k}");
+                assert!(
+                    bits_eq(merged.sketch(), whole.sketch()),
+                    "circular={circular} k={k} trial={trial} cuts={cuts:?}: merge ≠ whole"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn service_shard_merge_is_bit_identical_to_whole_request() {
+    // End-to-end through the coordinator: k SketchShard requests of one
+    // merge group, tree-reduced by a MergeShards request, must equal a
+    // single whole-tensor SketchShard of the same group bit for bit — and
+    // both must equal the library-side ShardSketch reference (same
+    // `group_rng(seed, group)` stream on both sides of the wire).
+    let svc = start(3, 1024);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(2);
+    let shape = vec![4usize, 5, 3];
+    let j = 6usize;
+    for (group, method) in [(10u64, SketchMethod::Fcs), (11, SketchMethod::Ts)] {
+        let t = integer_tensor(&mut rng, &shape);
+        let whole = match h
+            .call(Request::SketchShard {
+                slab: t.data.clone(),
+                offset: 0,
+                dims: shape.clone(),
+                method,
+                j,
+                group,
+            })
+            .unwrap()
+        {
+            Response::Sketch(v) => v,
+            other => panic!("wrong response kind: {other:?}"),
+        };
+        // Library reference under the same (seed, group) draw.
+        let mut lib = ShardSketch::for_group(SEED, group, &shape, j, method == SketchMethod::Ts);
+        lib.absorb_slab(&t.data, 0);
+        assert!(bits_eq(&whole, lib.sketch()), "service whole ≠ library reference");
+
+        for k in [2usize, 3, 8] {
+            let cuts = uneven_cuts(&mut rng, t.data.len(), k);
+            let rxs: Vec<_> = cuts
+                .windows(2)
+                .map(|w| {
+                    h.submit(Request::SketchShard {
+                        slab: t.data[w[0]..w[1]].to_vec(),
+                        offset: w[0],
+                        dims: shape.clone(),
+                        method,
+                        j,
+                        group,
+                    })
+                    .unwrap()
+                })
+                .collect();
+            let parts: Vec<Vec<f64>> = rxs
+                .into_iter()
+                .map(|rx| match rx.recv().unwrap().unwrap() {
+                    Response::Sketch(v) => v,
+                    other => panic!("wrong response kind: {other:?}"),
+                })
+                .collect();
+            let merged = match h.call(Request::MergeShards { parts }).unwrap() {
+                Response::Sketch(v) => v,
+                other => panic!("wrong response kind: {other:?}"),
+            };
+            assert!(
+                bits_eq(&merged, &whole),
+                "method={method:?} k={k} cuts={cuts:?}: service merge ≠ whole"
+            );
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn shard_requests_are_group_deterministic_not_order_dependent() {
+    // Two identical SketchShard submissions of the same group must return
+    // bit-identical sketches regardless of which worker runs them or what
+    // req_id they land on — shard determinism is keyed (seed, group) only.
+    let svc = start(3, 256);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(3);
+    let shape = vec![5usize, 4, 4];
+    let t = integer_tensor(&mut rng, &shape);
+    let req = || Request::SketchShard {
+        slab: t.data.clone(),
+        offset: 0,
+        dims: shape.clone(),
+        method: SketchMethod::Fcs,
+        j: 8,
+        group: 99,
+    };
+    // Interleave with unrelated traffic so the two calls see different
+    // req_ids and (likely) different workers.
+    let rx1 = h.submit(req()).unwrap();
+    let _ = h
+        .call(Request::SketchDense {
+            tensor: integer_tensor(&mut rng, &[3, 3, 3]),
+            method: SketchMethod::Ts,
+            j: 4,
+        })
+        .unwrap();
+    let rx2 = h.submit(req()).unwrap();
+    let (Response::Sketch(a), Response::Sketch(b)) =
+        (rx1.recv().unwrap().unwrap(), rx2.recv().unwrap().unwrap())
+    else {
+        panic!("wrong response kind")
+    };
+    assert!(bits_eq(&a, &b), "same (seed, group) request not deterministic");
+    // A different group must (overwhelmingly) differ: the draw is keyed.
+    let other = match h
+        .call(Request::SketchShard {
+            slab: t.data.clone(),
+            offset: 0,
+            dims: shape.clone(),
+            method: SketchMethod::Fcs,
+            j: 8,
+            group: 100,
+        })
+        .unwrap()
+    {
+        Response::Sketch(v) => v,
+        other => panic!("wrong response kind: {other:?}"),
+    };
+    assert!(!bits_eq(&a, &other), "distinct groups produced identical draws");
+    svc.shutdown();
+}
+
+#[test]
+fn streaming_rank1_matches_from_scratch_resketch() {
+    // The streaming path: base slab absorb + a stream of rank-1 absorbs
+    // must land within roundoff of re-sketching the materialized tensor
+    // from scratch under the same draws (linearity; tolerance-based since
+    // the rank-1 update runs through the spectral pipeline).
+    let mut rng = Rng::seed_from_u64(4);
+    let shape = [4usize, 6, 5];
+    let base = Tensor::randn(&mut rng, &shape);
+    for circular in [true, false] {
+        let mut sh = ShardSketch::for_group(SEED, 7, &shape, 8, circular);
+        sh.absorb_dense(&base);
+        let mut dense = base.clone();
+        for step in 0..4 {
+            let vs: Vec<Vec<f64>> = shape.iter().map(|&d| rng.normal_vec(d)).collect();
+            let refs: Vec<&[f64]> = vs.iter().map(|v| v.as_slice()).collect();
+            let lambda = 1.0 - 0.4 * step as f64;
+            sh.absorb_rank1(lambda, &refs);
+            dense = dense.add(&fcs::tensor::outer(&refs).scaled(lambda));
+        }
+        let mut scratch = ShardSketch::for_group(SEED, 7, &shape, 8, circular);
+        scratch.absorb_dense(&dense);
+        let scale = scratch.sketch().iter().map(|v| v.abs()).fold(1.0, f64::max);
+        for (a, b) in sh.sketch().iter().zip(scratch.sketch()) {
+            assert!(
+                (a - b).abs() < 1e-9 * scale,
+                "circular={circular}: streaming {a} vs scratch {b}"
+            );
+        }
+        assert_eq!(sh.updates(), 5, "base absorb + 4 rank-1 absorbs");
+    }
+}
+
+#[test]
+fn shard_validation_rejects_hostile_requests() {
+    use fcs::coordinator::ServiceError;
+    let svc = start(1, 64);
+    let h = svc.handle();
+    // Slab window past the end of vec(T).
+    let r = h.call(Request::SketchShard {
+        slab: vec![1.0; 10],
+        offset: 20,
+        dims: vec![3, 3, 3],
+        method: SketchMethod::Fcs,
+        j: 4,
+        group: 0,
+    });
+    assert!(matches!(r, Err(ServiceError::BadRequest(_))), "oversized slab accepted: {r:?}");
+    // Overflowing dims product must be a BadRequest, not a panic.
+    let r = h.call(Request::SketchShard {
+        slab: vec![],
+        offset: 0,
+        dims: vec![usize::MAX, 2],
+        method: SketchMethod::Ts,
+        j: 4,
+        group: 0,
+    });
+    assert!(matches!(r, Err(ServiceError::BadRequest(_))), "overflow dims accepted: {r:?}");
+    // Degenerate requests.
+    for req in [
+        Request::SketchShard {
+            slab: vec![],
+            offset: 0,
+            dims: vec![],
+            method: SketchMethod::Fcs,
+            j: 4,
+            group: 0,
+        },
+        Request::SketchShard {
+            slab: vec![],
+            offset: 0,
+            dims: vec![3, 0],
+            method: SketchMethod::Fcs,
+            j: 4,
+            group: 0,
+        },
+        Request::SketchShard {
+            slab: vec![],
+            offset: 0,
+            dims: vec![3, 3],
+            method: SketchMethod::Fcs,
+            j: 0,
+            group: 0,
+        },
+        Request::MergeShards { parts: vec![] },
+    ] {
+        let r = h.call(req);
+        assert!(matches!(r, Err(ServiceError::BadRequest(_))), "degenerate accepted: {r:?}");
+    }
+    // An empty slab with valid dims is legal: it sketches to all zeros.
+    let r = h
+        .call(Request::SketchShard {
+            slab: vec![],
+            offset: 5,
+            dims: vec![3, 3],
+            method: SketchMethod::Ts,
+            j: 4,
+            group: 0,
+        })
+        .unwrap();
+    let Response::Sketch(v) = r else { panic!("wrong response kind") };
+    assert!(v.iter().all(|&x| x == 0.0) && v.len() == 4);
+    svc.shutdown();
+}

@@ -12,12 +12,13 @@ Metric extraction is generic so new bench rows join the trajectory for free:
 * every numeric field named `secs*`/`*_secs` is a lower-is-better timing;
 * every numeric field named `speedup*` is a higher-is-better ratio;
 * rows are identified by their source file, `path` field, and any of the
-  qualifier fields (rank, n, lanes, batch, d_reps, j, width) present —
-  `width` qualifies the coordinator fused-flight flood rows (`coord_flood`),
-  whose `secs` timing is gated per burst width.
+  qualifier fields (rank, n, lanes, batch, d_reps, j, width, shards)
+  present — `width` qualifies the coordinator fused-flight flood rows
+  (`coord_flood`), `shards` the sharded-merge rows (`shard_merge`), each
+  gated per shard count.
 
 Usage:
-    scripts/bench_trend.py [--results DIR ...] [--out BENCH_pr6.json]
+    scripts/bench_trend.py [--results DIR ...] [--out BENCH_pr8.json]
                            [--threshold 0.20] [--soft]
 """
 
@@ -30,7 +31,7 @@ import os
 import re
 import sys
 
-QUALIFIERS = ("rank", "n", "lanes", "batch", "d_reps", "j", "width")
+QUALIFIERS = ("rank", "n", "lanes", "batch", "d_reps", "j", "width", "shards")
 TIMING_RE = re.compile(r"(^secs|_secs$)")
 SPEEDUP_RE = re.compile(r"^speedup")
 
@@ -98,7 +99,7 @@ def main() -> int:
         default=["results", "rust/results"],
         help="directories holding the bench JSON (default: results rust/results)",
     )
-    ap.add_argument("--out", default="BENCH_pr6.json", help="snapshot file at the repo root")
+    ap.add_argument("--out", default="BENCH_pr8.json", help="snapshot file at the repo root")
     ap.add_argument("--threshold", type=float, default=0.20, help="regression gate (fraction)")
     ap.add_argument("--soft", action="store_true", help="report regressions but exit 0")
     args = ap.parse_args()

@@ -26,6 +26,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== merge conformance + linearity suites =="
+# Explicit re-runs of the sharded-merge contract (also covered by the full
+# `cargo test` above): the bit-identity conformance suite and the qcheck
+# linearity/associativity properties in sketch::merge. Named here so a CI
+# log grep shows the merge≡whole gate ran, and so a local
+# `scripts/verify.sh` failure points straight at the suite.
+cargo test -q --test merge_conformance
+cargo test -q --lib sketch::merge::
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== bench smoke (FCS_BENCH_QUICK=1) =="
     for bench in perf_hotpath ablation_hash fig1_rtpm_synthetic fig2_watercolors \
