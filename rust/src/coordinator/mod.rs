@@ -31,11 +31,21 @@
 //! ([`crate::sketch::merge::group_rng`]), `merge_shards` tree-reduces the
 //! replies, and the merged result is bit-identical to a whole-tensor
 //! `sketch_shard` of the same group on exactly representable data.
+//!
+//! Overload resilience (`rust/tests/deadlines.rs`, and under the
+//! `failpoints` feature `rust/tests/chaos.rs`): deadlines with submit-time
+//! admission control and dequeue/mid-flight load shedding
+//! ([`ServiceError::DeadlineExceeded`], booked per [`stats::ShedStage`]),
+//! supervisor-respawned workers, and budgeted client retry
+//! ([`retry::RetryBudget`]) — every accepted request is still answered
+//! exactly once, shed or served.
 
 pub mod msg;
+pub mod retry;
 pub mod service;
 pub mod stats;
 
 pub use msg::{Request, Response, ServiceError, SketchMethod};
+pub use retry::{BudgetConfig, RetryBudget, RetryPolicy};
 pub use service::{job_rng, Service, ServiceConfig, ServiceHandle, WorkerState};
-pub use stats::{FlightReport, PlanCacheReport, Stats, StatsReport};
+pub use stats::{FlightReport, PlanCacheReport, ShedStage, Stats, StatsReport};

@@ -61,6 +61,11 @@ pub enum ServiceError {
     BadRequest(String),
     /// Execution failed.
     Exec(String),
+    /// The request's deadline expired (or provably could not be met) before
+    /// execution: refused at submit by the admission controller, shed at
+    /// dequeue, or shed mid-flight — in every case *without* burning a
+    /// spectral pass on an answer nobody is waiting for.
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -70,6 +75,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Closed => write!(f, "service is shutting down"),
             ServiceError::BadRequest(msg) => write!(f, "bad request: {msg}"),
             ServiceError::Exec(msg) => write!(f, "execution failed: {msg}"),
+            ServiceError::DeadlineExceeded => write!(f, "deadline exceeded"),
         }
     }
 }
@@ -192,6 +198,7 @@ mod tests {
             "bad request: nope"
         );
         assert_eq!(ServiceError::Exec("boom".into()).to_string(), "execution failed: boom");
+        assert_eq!(ServiceError::DeadlineExceeded.to_string(), "deadline exceeded");
     }
 
     #[test]

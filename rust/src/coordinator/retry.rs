@@ -1,0 +1,201 @@
+//! Client-side retry policy and the shared anti-amplification budget.
+//!
+//! Retrying `Busy`/`Exec` failures is how a client rides out a transient
+//! overload spike — and also exactly how a client *creates* a metastable
+//! overload: when every caller retries, offered load multiplies right when
+//! capacity is scarcest. Two mechanisms bound that feedback loop:
+//!
+//! * [`RetryPolicy`] — capped exponential backoff with **full jitter**
+//!   (`uniform(0, base·2^attempt)` clamped to `max_backoff`), so retry
+//!   waves decorrelate instead of re-arriving in synchronized thundering
+//!   herds.
+//! * [`RetryBudget`] — a token bucket in **millitokens**, keyed per op
+//!   class: every first attempt deposits a small amount, every retry
+//!   withdraws a large amount. Steady state therefore admits roughly
+//!   `deposit_m / withdraw_m` retries per request (10% at the defaults);
+//!   under sustained failure the bucket runs dry and retries stop, leaving
+//!   first attempts the whole queue. Refused retries are visible as
+//!   `fcs_retry_budget_exhausted_total`.
+//!
+//! The budget is shared via `Arc` across every handle clone, so the cap is
+//! per *service*, not per caller — see
+//! [`ServiceHandle::call_with_retry`](super::service::ServiceHandle::call_with_retry).
+
+use crate::util::prng::Rng;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::time::Duration;
+
+/// Bounded, jittered exponential backoff schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Max retries after the first attempt (attempts ≤ `max_retries + 1`).
+    pub max_retries: u32,
+    /// Backoff ceiling *before* jitter at attempt 0.
+    pub base_backoff: Duration,
+    /// Absolute backoff ceiling at any attempt.
+    pub max_backoff: Duration,
+    /// Seed of the caller-local jitter RNG (deterministic in tests).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(5),
+            jitter_seed: 0xB0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Full-jitter backoff for the given 0-based retry attempt: uniform in
+    /// `[0, min(base·2^attempt, max_backoff)]`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let ceiling = self
+            .base_backoff
+            .checked_mul(1u32 << attempt.min(20))
+            .unwrap_or(self.max_backoff)
+            .min(self.max_backoff);
+        ceiling.mul_f64(rng.uniform())
+    }
+}
+
+/// Token-bucket parameters, in millitokens (1 token = 1000 m).
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetConfig {
+    /// Opening balance per op class.
+    pub initial_m: i64,
+    /// Credited on every first attempt.
+    pub deposit_m: i64,
+    /// Debited by every retry.
+    pub withdraw_m: i64,
+    /// Advisory balance cap — deposits beyond it are clamped back, so a
+    /// long quiet period cannot bank an unbounded retry storm.
+    pub cap_m: i64,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        // 10 tokens to start, 0.1 per request, 1 per retry, 100 cap:
+        // ≈ 10% steady-state retry ratio with a 10-retry opening burst.
+        BudgetConfig { initial_m: 10_000, deposit_m: 100, withdraw_m: 1000, cap_m: 100_000 }
+    }
+}
+
+/// Shared per-op-class retry budget. Balances are independent per op (a
+/// `merge_shards` failure storm cannot starve `sketch_dense` retries); ops
+/// outside [`crate::obs::OPS`] share the trailing `"other"` slot.
+#[derive(Debug)]
+pub struct RetryBudget {
+    cfg: BudgetConfig,
+    per_op: [AtomicI64; crate::obs::OPS.len()],
+}
+
+impl Default for RetryBudget {
+    fn default() -> Self {
+        RetryBudget::new(BudgetConfig::default())
+    }
+}
+
+impl RetryBudget {
+    pub fn new(cfg: BudgetConfig) -> Self {
+        RetryBudget { cfg, per_op: std::array::from_fn(|_| AtomicI64::new(cfg.initial_m)) }
+    }
+
+    fn slot(&self, op: &str) -> &AtomicI64 {
+        let i = crate::obs::OPS
+            .iter()
+            .position(|&o| o == op)
+            .unwrap_or(crate::obs::OPS.len() - 1);
+        &self.per_op[i]
+    }
+
+    /// Credit a first attempt. The cap clamp is advisory (racing deposits
+    /// may briefly overshoot); it bounds banked burst, not correctness.
+    pub fn deposit(&self, op: &str) {
+        let slot = self.slot(op);
+        let after = slot.fetch_add(self.cfg.deposit_m, Ordering::Relaxed) + self.cfg.deposit_m;
+        if after > self.cfg.cap_m {
+            slot.fetch_sub(after - self.cfg.cap_m, Ordering::Relaxed);
+        }
+    }
+
+    /// Try to pay for one retry; `false` (with the debit refunded) when the
+    /// class is broke — the caller must surface the original error instead
+    /// of amplifying the overload.
+    pub fn try_withdraw(&self, op: &str) -> bool {
+        let slot = self.slot(op);
+        let prev = slot.fetch_sub(self.cfg.withdraw_m, Ordering::Relaxed);
+        if prev < self.cfg.withdraw_m {
+            slot.fetch_add(self.cfg.withdraw_m, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Current balance for an op class, in millitokens.
+    pub fn balance_m(&self, op: &str) -> i64 {
+        self.slot(op).load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_refuses_when_broke() {
+        let b = RetryBudget::new(BudgetConfig {
+            initial_m: 2500,
+            deposit_m: 100,
+            withdraw_m: 1000,
+            cap_m: 100_000,
+        });
+        assert!(b.try_withdraw("sketch_dense"));
+        assert!(b.try_withdraw("sketch_dense"));
+        assert!(!b.try_withdraw("sketch_dense"), "third retry exceeds the 2.5-token balance");
+        assert_eq!(b.balance_m("sketch_dense"), 500, "refused withdraw must refund");
+        // Classes are independent: sketch_cp still has its opening balance.
+        assert!(b.try_withdraw("sketch_cp"));
+        assert_eq!(b.balance_m("sketch_cp"), 1500);
+    }
+
+    #[test]
+    fn deposits_refill_and_clamp_at_cap() {
+        let b = RetryBudget::new(BudgetConfig {
+            initial_m: 0,
+            deposit_m: 100,
+            withdraw_m: 1000,
+            cap_m: 1200,
+        });
+        assert!(!b.try_withdraw("cs_vec"), "broke until deposits accrue");
+        for _ in 0..10 {
+            b.deposit("cs_vec");
+        }
+        assert!(b.try_withdraw("cs_vec"), "10 deposits fund one retry");
+        for _ in 0..1000 {
+            b.deposit("cs_vec");
+        }
+        assert_eq!(b.balance_m("cs_vec"), 1200, "balance clamps at cap_m");
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_grows_with_attempts() {
+        let policy = RetryPolicy::default();
+        let mut rng = Rng::seed_from_u64(11);
+        for attempt in 0..64 {
+            let d = policy.backoff(attempt, &mut rng);
+            assert!(d <= policy.max_backoff, "attempt {attempt} exceeded max_backoff");
+        }
+        // The pre-jitter ceiling doubles until it hits the cap; with full
+        // jitter the *max over many draws* tracks that ceiling.
+        let max_at = |attempt: u32| -> Duration {
+            let mut rng = Rng::seed_from_u64(99);
+            (0..256).map(|_| policy.backoff(attempt, &mut rng)).max().unwrap()
+        };
+        assert!(max_at(3) > max_at(0), "later attempts must back off longer");
+        assert!(max_at(40) <= policy.max_backoff, "shift overflow clamps to max");
+    }
+}

@@ -38,6 +38,19 @@
 //! job's RNG re-derived from its stored `req_id`), preserving both the
 //! isolation contract and bit-identical healthy outputs.
 //!
+//! **Overload resilience**: requests may carry an absolute deadline
+//! ([`ServiceHandle::submit_with_deadline`]). An admission controller
+//! refuses jobs whose deadline the queue-wait EWMA says cannot be met;
+//! expired jobs are shed at dequeue and between flight members —
+//! [`ServiceError::DeadlineExceeded`] in every case, booked per stage in
+//! `fcs_deadline_shed_total{stage=...}` and
+//! [`StatsReport`]`::shed_*`. A supervisor thread replaces workers that die
+//! by panic (`fcs_worker_respawns_total`), and
+//! [`ServiceHandle::call_with_retry`] adds budgeted, full-jitter retry for
+//! `Busy`/`Exec` failures ([`super::retry`]). The `failpoints` feature arms
+//! deterministic fault-injection sites ([`crate::fault`]) on these paths;
+//! the chaos suite (`rust/tests/chaos.rs`) drives them.
+//!
 //! **Sharded reduce front-end**: `sketch_shard` scatters one slab of a
 //! partitioned tensor under its merge group's *shared* hash draws
 //! ([`crate::sketch::merge::group_rng`] over `(seed, group)` rather than the
@@ -48,7 +61,9 @@
 //! histograms `fcs_shard_width` / `fcs_merge_depth`.
 
 use super::msg::{Request, Response, ServiceError, SketchMethod};
-use super::stats::{Stats, StatsReport};
+use super::retry::{RetryBudget, RetryPolicy};
+use super::stats::{ShedStage, Stats, StatsReport};
+use crate::fault::FaultAction;
 use crate::fft::FftWorkspace;
 use crate::hash::{HashPair, HashTable, ModeHashes};
 use crate::obs::trace;
@@ -57,7 +72,7 @@ use crate::sketch::common::{apply_cp_fused, sketch_dense_into, FusedCpJob};
 use crate::sketch::{CountSketch, SpectralSketchCore};
 use crate::tensor::{CpTensor, Tensor};
 use crate::util::prng::Rng;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -89,6 +104,10 @@ struct Job {
     req: Request,
     reply: Sender<Result<Response, ServiceError>>,
     enqueued: Instant,
+    /// Absolute completion deadline. Expired jobs are shed at dequeue (and
+    /// between fused-flight members) with [`ServiceError::DeadlineExceeded`]
+    /// instead of burning a spectral pass on an answer nobody waits for.
+    deadline: Option<Instant>,
 }
 
 /// Queue message: a job or an explicit stop sentinel. The sentinel makes
@@ -106,6 +125,9 @@ pub struct ServiceHandle {
     batch_tx: SyncSender<QueueMsg>,
     work_tx: SyncSender<QueueMsg>,
     stats: Arc<Stats>,
+    /// Shared anti-amplification budget for [`Self::call_with_retry`] —
+    /// per *service* (shared by every handle clone), not per caller.
+    retry_budget: Arc<RetryBudget>,
     pub cs_in_dim: usize,
     pub cs_out_dim: usize,
 }
@@ -116,9 +138,38 @@ impl ServiceHandle {
         &self,
         req: Request,
     ) -> Result<Receiver<Result<Response, ServiceError>>, ServiceError> {
+        self.submit_with_deadline(req, None)
+    }
+
+    /// [`Self::submit`] with an absolute completion deadline. The admission
+    /// controller refuses up front — [`ServiceError::DeadlineExceeded`] —
+    /// when the deadline has already passed, or when the worker pool's
+    /// queue-wait estimate ([`Stats::queue_wait_estimate_us`], an EWMA of
+    /// the same stream behind `queue_p50_us`) says the job would expire in
+    /// the queue anyway; queueing it would only steal capacity from
+    /// requests that can still make their deadlines.
+    pub fn submit_with_deadline(
+        &self,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Response, ServiceError>>, ServiceError> {
         self.validate(&req)?;
+        if let Some(dl) = deadline {
+            let remaining_us = dl.saturating_duration_since(Instant::now()).as_micros() as u64;
+            // cs_vec rides the batcher, whose wait is bounded by the flush
+            // deadline — the worker-pool estimate does not apply to it.
+            let est_us = if matches!(req, Request::CsVec { .. }) {
+                0
+            } else {
+                self.stats.queue_wait_estimate_us()
+            };
+            if remaining_us == 0 || est_us > remaining_us {
+                self.stats.record_deadline_shed(ShedStage::Submit);
+                return Err(ServiceError::DeadlineExceeded);
+            }
+        }
         let (reply, rx) = std::sync::mpsc::channel();
-        let job = Box::new(Job { req, reply, enqueued: Instant::now() });
+        let job = Box::new(Job { req, reply, enqueued: Instant::now(), deadline });
         // Queue-depth gauges: incremented on a successful enqueue here,
         // decremented at the single dequeue point of each consumer loop.
         let (target, depth) = match &job.req {
@@ -144,6 +195,76 @@ impl ServiceHandle {
     pub fn call(&self, req: Request) -> Result<Response, ServiceError> {
         let rx = self.submit(req)?;
         rx.recv().map_err(|_| ServiceError::Closed)?
+    }
+
+    /// Blocking call with an absolute completion deadline.
+    pub fn call_with_deadline(
+        &self,
+        req: Request,
+        deadline: Instant,
+    ) -> Result<Response, ServiceError> {
+        let rx = self.submit_with_deadline(req, Some(deadline))?;
+        rx.recv().map_err(|_| ServiceError::Closed)?
+    }
+
+    /// Blocking call that rides out transient failures: `Busy` (queue full)
+    /// and `Exec` replies are retried up to `policy.max_retries` times with
+    /// full-jitter exponential backoff — but **only** while the service-wide
+    /// [`RetryBudget`] can pay for the retry. A broke budget surfaces the
+    /// original error immediately (and bumps
+    /// `fcs_retry_budget_exhausted_total`), so a retrying client population
+    /// cannot amplify the very overload it is reacting to. `BadRequest`,
+    /// `Closed`, and `DeadlineExceeded` never retry — they are not
+    /// transient. With a deadline, a backoff that would outlive the
+    /// remaining budget short-circuits to `DeadlineExceeded`.
+    pub fn call_with_retry(
+        &self,
+        req: Request,
+        deadline: Option<Instant>,
+        policy: &RetryPolicy,
+    ) -> Result<Response, ServiceError> {
+        let op = req.op_name();
+        self.retry_budget.deposit(op);
+        let mut rng = Rng::seed_from_u64(policy.jitter_seed);
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.submit_with_deadline(req.clone(), deadline) {
+                Ok(rx) => match rx.recv().map_err(|_| ServiceError::Closed)? {
+                    Ok(resp) => return Ok(resp),
+                    Err(e) => e,
+                },
+                Err(e) => e,
+            };
+            let retryable = matches!(err, ServiceError::Busy | ServiceError::Exec(_));
+            if !retryable || attempt >= policy.max_retries {
+                return Err(err);
+            }
+            if !self.retry_budget.try_withdraw(op) {
+                self.stats.record_retry_budget_exhausted();
+                return Err(err);
+            }
+            let pause = policy.backoff(attempt, &mut rng);
+            if let Some(dl) = deadline {
+                if dl.saturating_duration_since(Instant::now()) <= pause {
+                    // The backoff alone would blow the deadline; don't sleep
+                    // into a guaranteed failure. Not a shed — the service
+                    // never saw this attempt.
+                    return Err(ServiceError::DeadlineExceeded);
+                }
+            }
+            self.stats.record_retry();
+            std::thread::sleep(pause);
+            attempt += 1;
+        }
+    }
+
+    /// Replace the shared retry budget (e.g. to tighten the
+    /// anti-amplification cap in tests or overload drills). Affects this
+    /// handle and everything cloned *from it afterwards*.
+    #[must_use]
+    pub fn with_retry_budget(mut self, budget: Arc<RetryBudget>) -> ServiceHandle {
+        self.retry_budget = budget;
+        self
     }
 
     fn validate(&self, req: &Request) -> Result<(), ServiceError> {
@@ -261,8 +382,46 @@ impl ServiceHandle {
 /// The running service (shut down with [`Service::shutdown`]).
 pub struct Service {
     handle: ServiceHandle,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    batcher: std::thread::JoinHandle<()>,
+    /// Owns the worker `JoinHandle`s; respawns crashed workers
+    /// ([`supervisor_loop`]) and joins them all on shutdown.
+    supervisor: std::thread::JoinHandle<()>,
+    /// Shutdown latch read by the supervisor — set *before* the stop
+    /// sentinels go out so a worker observed exiting during shutdown is
+    /// joined, never respawned.
+    stop: Arc<AtomicBool>,
     workers: usize,
+}
+
+/// Everything needed to (re)spawn one worker thread — the supervisor holds
+/// this so a replacement worker is wired to the same queue, runtime, seed,
+/// request counter, and saturation signal as the one it replaces.
+struct WorkerCtx {
+    rx: Arc<Mutex<Receiver<QueueMsg>>>,
+    runtime: Option<RuntimeHandle>,
+    seed: u64,
+    counter: Arc<AtomicU64>,
+    busy: Arc<AtomicUsize>,
+    pool_size: usize,
+    stats: Arc<Stats>,
+}
+
+impl WorkerCtx {
+    fn spawn(&self, w: usize) -> std::thread::JoinHandle<()> {
+        let rx = self.rx.clone();
+        let runtime = self.runtime.clone();
+        let seed = self.seed;
+        let counter = self.counter.clone();
+        let busy = self.busy.clone();
+        let pool_size = self.pool_size;
+        let stats = self.stats.clone();
+        std::thread::Builder::new()
+            .name(format!("fcs-worker-{w}"))
+            .spawn(move || {
+                worker_loop(w, rx, runtime, seed, counter, busy, pool_size, stats);
+            })
+            .expect("spawn worker")
+    }
 }
 
 impl Service {
@@ -305,53 +464,51 @@ impl Service {
         let (work_tx, work_rx) = sync_channel::<QueueMsg>(cfg.queue_capacity);
         let work_rx = Arc::new(Mutex::new(work_rx));
 
-        let mut threads = Vec::new();
-
         // --- batcher thread ------------------------------------------------
-        {
+        let batcher = {
             let stats = stats.clone();
             let runtime = runtime.clone();
             let table = table.clone();
             let deadline = cfg.batch_deadline;
-            threads.push(
-                std::thread::Builder::new()
-                    .name("fcs-batcher".into())
-                    .spawn(move || {
-                        batcher_loop(batch_rx, runtime, table, batch_size, deadline, stats);
-                    })
-                    .expect("spawn batcher"),
-            );
-        }
+            std::thread::Builder::new()
+                .name("fcs-batcher".into())
+                .spawn(move || {
+                    batcher_loop(batch_rx, runtime, table, batch_size, deadline, stats);
+                })
+                .expect("spawn batcher")
+        };
 
-        // --- worker pool -----------------------------------------------------
-        let req_counter = Arc::new(AtomicU64::new(0));
-        let busy_workers = Arc::new(AtomicUsize::new(0));
+        // --- worker pool, under supervision ----------------------------------
         let pool_size = cfg.workers.max(1);
-        for w in 0..pool_size {
-            let rx = work_rx.clone();
-            let stats = stats.clone();
-            let runtime = runtime.clone();
-            let counter = req_counter.clone();
-            let busy = busy_workers.clone();
-            let seed = cfg.seed;
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("fcs-worker-{w}"))
-                    .spawn(move || {
-                        worker_loop(w, rx, runtime, seed, counter, busy, pool_size, stats);
-                    })
-                    .expect("spawn worker"),
-            );
-        }
+        let ctx = WorkerCtx {
+            rx: work_rx,
+            runtime,
+            seed: cfg.seed,
+            counter: Arc::new(AtomicU64::new(0)),
+            busy: Arc::new(AtomicUsize::new(0)),
+            pool_size,
+            stats: stats.clone(),
+        };
+        let slots: Vec<Option<std::thread::JoinHandle<()>>> =
+            (0..pool_size).map(|w| Some(ctx.spawn(w))).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("fcs-supervisor".into())
+                .spawn(move || supervisor_loop(ctx, slots, stop))
+                .expect("spawn supervisor")
+        };
 
         let handle = ServiceHandle {
             batch_tx,
             work_tx,
             stats,
+            retry_budget: Arc::new(RetryBudget::default()),
             cs_in_dim: in_dim,
             cs_out_dim: out_dim,
         };
-        Ok(Service { handle, threads, workers: cfg.workers.max(1) })
+        Ok(Service { handle, batcher, supervisor, stop, workers: pool_size })
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -363,17 +520,71 @@ impl Service {
     }
 
     /// Graceful shutdown: send stop sentinels (one per consumer) and join.
-    /// Deterministic even if clients still hold handle clones.
+    /// Deterministic even if clients still hold handle clones. The stop
+    /// latch is set *before* the sentinels go out, so the supervisor can
+    /// never mistake a sentinel-consuming worker's clean exit for a crash
+    /// and respawn a thread into a draining pool.
     pub fn shutdown(self) {
-        let Service { handle, threads, workers } = self;
+        let Service { handle, batcher, supervisor, stop, workers } = self;
+        stop.store(true, Ordering::SeqCst);
         let _ = handle.batch_tx.send(QueueMsg::Stop);
         for _ in 0..workers {
             let _ = handle.work_tx.send(QueueMsg::Stop);
         }
         drop(handle);
-        for t in threads {
-            let _ = t.join();
+        let _ = supervisor.join();
+        let _ = batcher.join();
+    }
+}
+
+/// How often the supervisor sweeps the pool for dead workers. The sweep is
+/// cheap (`is_finished` per slot), so recovery latency — not overhead — sets
+/// the cadence.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(10);
+
+/// Worker-pool supervision: sweep the slots; a worker that *panicked* out of
+/// its loop (join reports an `Err` payload) is replaced with a fresh thread
+/// on the same queue — the thread is gone, but its `WorkerState` died with
+/// it, so the replacement rebuilds arenas from scratch and the pool heals at
+/// full width (`fcs_worker_respawns_total` counts these). A worker that
+/// exited *cleanly* (stop sentinel, closed queue) is joined and its slot
+/// retired: clean exits are lifecycle, not failures. Returns when the stop
+/// latch is raised (joining every survivor) or when every slot has retired.
+fn supervisor_loop(
+    ctx: WorkerCtx,
+    mut slots: Vec<Option<std::thread::JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            for h in slots.iter_mut().filter_map(Option::take) {
+                let _ = h.join();
+            }
+            return;
         }
+        let mut alive = 0usize;
+        for w in 0..slots.len() {
+            let finished = slots[w].as_ref().is_some_and(|h| h.is_finished());
+            if finished {
+                let crashed =
+                    slots[w].take().expect("slot checked Some above").join().is_err();
+                // Re-check the latch after the join: a crash racing shutdown
+                // must not respawn a worker into a pool being torn down.
+                if crashed && !stop.load(Ordering::SeqCst) {
+                    slots[w] = Some(ctx.spawn(w));
+                    ctx.stats.record_respawn();
+                    alive += 1;
+                }
+            } else if slots[w].is_some() {
+                alive += 1;
+            }
+        }
+        if alive == 0 {
+            // Every worker exited cleanly (service dropped without shutdown,
+            // or all sentinels consumed) — nothing left to supervise.
+            return;
+        }
+        std::thread::park_timeout(SUPERVISE_INTERVAL);
     }
 }
 
@@ -424,6 +635,21 @@ fn batcher_loop(
                 }
                 Err(_) => break,
             }
+        }
+        // Dequeue-time load shedding: a job whose deadline expired while it
+        // sat in the queue gets its DeadlineExceeded reply *now*, before the
+        // batch buys transform work on its behalf — under overload this is
+        // the difference between a queue that drains and one that melts.
+        batch.retain(|job| match job.deadline {
+            Some(dl) if Instant::now() >= dl => {
+                stats.record_deadline_shed(ShedStage::Dequeue);
+                let _ = job.reply.send(Err(ServiceError::DeadlineExceeded));
+                false
+            }
+            _ => true,
+        });
+        if batch.is_empty() {
+            continue;
         }
         stats.record_batch(batch.len());
 
@@ -783,6 +1009,27 @@ impl WorkerState {
                 Ok(Response::Sketch(out))
             }
             Request::MergeShards { parts } => {
+                // Failpoint: Error maps onto the local Exec path;
+                // TruncateSlab tears one element off the first part before
+                // the reduce, arriving exactly the way a corrupted shard
+                // reply would — the equal-length assert inside
+                // `tree_reduce_parts` then panics, and the per-job
+                // catch_unwind confines the damage to this merge group.
+                match crate::fault::check("merge_shards") {
+                    Some(FaultAction::Error) => {
+                        return Err(ServiceError::Exec("merge_shards: injected fault".into()))
+                    }
+                    Some(FaultAction::TruncateSlab) => {
+                        let mut torn = parts.clone();
+                        if let Some(p) = torn.first_mut() {
+                            p.pop();
+                        }
+                        let (merged, depth) = crate::sketch::merge::tree_reduce_parts(&torn);
+                        crate::obs::metrics().merge_depth.observe(depth as u64);
+                        return Ok(Response::Sketch(merged));
+                    }
+                    _ => {}
+                }
                 // Pure reduce — no draws, no arena. The equal-length assert
                 // inside fires as an execution-time panic, which the serial
                 // per-job catch_unwind turns into an Exec error for exactly
@@ -809,6 +1056,11 @@ fn worker_loop(
     let mut state = WorkerState::new();
     let mut batch: Vec<Box<Job>> = Vec::with_capacity(WORKER_DRAIN);
     loop {
+        // Failpoint: a Panic here kills the whole worker thread *outside*
+        // any catch_unwind — the supervisor's respawn path. Deliberately
+        // before the queue lock: dying while holding it would poison the
+        // mutex and wedge every sibling.
+        crate::fault::act("worker_loop");
         let mut stopping = false;
         {
             let guard = rx.lock().unwrap();
@@ -956,15 +1208,60 @@ fn execute_flight(
             },
         );
     };
-    let fused_cp = width > 1
+    // Shed a job whose deadline expired before (or between) executions: the
+    // DeadlineExceeded reply costs no spectral work, the shed is booked at
+    // its stage, and the trace ring gets an `ok: false` span with the same
+    // structurally clamped edges as a finished job.
+    let shed = |job: &Job, req_id: u64, stage: ShedStage| {
+        stats.record_deadline_shed(stage);
+        let _ = job.reply.send(Err(ServiceError::DeadlineExceeded));
+        let submit_us = trace::epoch_us(job.enqueued);
+        let queue_evt_us = trace::epoch_us(drained).max(submit_us);
+        let flight_start_us = trace::epoch_us(exec_start).max(queue_evt_us);
+        let reply_us = trace::epoch_us(Instant::now()).max(flight_start_us);
+        trace::global().record(
+            worker,
+            trace::TraceSpan {
+                req_id,
+                op,
+                submit_us,
+                queue_us: queue_evt_us,
+                flight_start_us,
+                reply_us,
+                width: width as u16,
+                ok: false,
+            },
+        );
+    };
+    // Flight-start shed pass: jobs already expired when the flight begins
+    // are dropped from the live set before any strategy is chosen — a fused
+    // flight packs *survivors only* into the shared transform lanes, and
+    // each survivor keeps the `job_rng` of its up-front req_id, so shedding
+    // a flight-mate never perturbs a survivor's bit-exact output.
+    let mut live = [true; WORKER_DRAIN];
+    let mut live_n = 0usize;
+    for (k, job) in jobs.iter().enumerate() {
+        if job.deadline.is_some_and(|dl| exec_start >= dl) {
+            live[k] = false;
+            shed(job, req_ids[k], ShedStage::Dequeue);
+        } else {
+            live_n += 1;
+        }
+    }
+    if live_n == 0 {
+        return;
+    }
+    let fused_cp = live_n > 1
         && matches!(jobs[0].req, Request::SketchCp { .. })
         && !cp_flight_matches_xla(runtime, &jobs[0].req);
-    let mut serial_from = 0;
+    let mut fused_done = false;
+    let mut executed = 0usize;
     if fused_cp {
         let Request::SketchCp { j, .. } = &jobs[0].req else { unreachable!() };
-        let cps: Vec<&CpTensor> = jobs
+        let live_idx: Vec<usize> = (0..width).filter(|&k| live[k]).collect();
+        let cps: Vec<&CpTensor> = live_idx
             .iter()
-            .map(|job| match &job.req {
+            .map(|&k| match &jobs[k].req {
                 Request::SketchCp { cp, .. } => cp,
                 _ => unreachable!("fused flight mixes ops"),
             })
@@ -976,17 +1273,18 @@ fn execute_flight(
         // its own reply.
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut rngs: Vec<Rng> =
-                req_ids[..width].iter().map(|&id| job_rng(seed, id)).collect();
+                live_idx.iter().map(|&k| job_rng(seed, req_ids[k])).collect();
             let mut outs = Vec::new();
             state.sketch_cp_fused(&cps, *j, &mut rngs, &mut outs);
             outs
         }));
         match caught {
             Ok(outs) => {
-                for ((k, job), out) in jobs.iter().enumerate().zip(outs) {
-                    finish(job, req_ids[k], Ok(Response::Sketch(out)));
+                for (&k, out) in live_idx.iter().zip(outs) {
+                    finish(&jobs[k], req_ids[k], Ok(Response::Sketch(out)));
                 }
-                serial_from = width;
+                executed = live_idx.len();
+                fused_done = true;
             }
             Err(_) => {
                 // The arenas may have been mid-rewrite when the unwind tore
@@ -1001,25 +1299,44 @@ fn execute_flight(
     // retry path after a poisoned fused attempt. Per-job panic isolation: a
     // poisoned request must cost exactly its own reply, not unwind the
     // worker and silently drop every remaining drained job's sender.
-    for (k, job) in jobs.iter().enumerate().skip(serial_from) {
-        let mut rng = job_rng(seed, req_ids[k]);
-        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            state.execute(&job.req, runtime, seed, &mut rng)
-        }));
-        let result = match caught {
-            Ok(r) => r,
-            Err(payload) => {
-                crate::obs::metrics().poisoned_jobs.inc();
-                *state = WorkerState::new();
-                Err(ServiceError::Exec(format!(
-                    "worker panicked: {}",
-                    panic_message(payload.as_ref())
-                )))
+    // Between members, the deadline is re-checked: a job whose budget a
+    // flight-mate's execution just consumed is shed (Flight stage) instead
+    // of executed late. The first live member always runs — its deadline
+    // was checked at flight start moments ago.
+    if !fused_done {
+        for (k, job) in jobs.iter().enumerate() {
+            if !live[k] {
+                continue;
             }
-        };
-        finish(job, req_ids[k], result);
+            if executed > 0 && job.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                shed(job, req_ids[k], ShedStage::Flight);
+                continue;
+            }
+            let mut rng = job_rng(seed, req_ids[k]);
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // Failpoint: Delay manufactures queue backlog/deadline expiry;
+                // Panic exercises exactly the per-job isolation below.
+                crate::fault::act("worker_job");
+                state.execute(&job.req, runtime, seed, &mut rng)
+            }));
+            let result = match caught {
+                Ok(r) => r,
+                Err(payload) => {
+                    crate::obs::metrics().poisoned_jobs.inc();
+                    *state = WorkerState::new();
+                    Err(ServiceError::Exec(format!(
+                        "worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    )))
+                }
+            };
+            executed += 1;
+            finish(job, req_ids[k], result);
+        }
     }
-    stats.record_flight(width, exec_start.elapsed().as_secs_f64() * 1e6);
+    if executed > 0 {
+        stats.record_flight(executed, exec_start.elapsed().as_secs_f64() * 1e6);
+    }
 }
 
 /// Whether a CP request's fusion class would be served by the XLA

@@ -9,8 +9,24 @@
 //! keeps [`StatsReport`] and a scrape from ever disagreeing about counts.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Where a deadline violation was caught — the index into the
+/// `fcs_deadline_shed_total{stage=...}` counter family
+/// ([`crate::obs::SHED_STAGES`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedStage {
+    /// Refused by the admission controller before ever entering the queue
+    /// (already expired, or the queue-wait estimate exceeded the budget).
+    Submit = 0,
+    /// Expired while queued; dropped when the batcher/worker dequeued it.
+    Dequeue = 1,
+    /// Expired mid-flight — a flight-mate's execution outlived the budget,
+    /// so the job is shed between fused-flight members.
+    Flight = 2,
+}
 
 /// Bounded reservoir size per series. Retention is a *ring*: once full, the
 /// newest sample overwrites the oldest, so percentiles always describe the
@@ -68,6 +84,11 @@ struct FlightStats {
 #[derive(Debug, Default)]
 pub struct Stats {
     inner: Mutex<StatsInner>,
+    /// Lock-free EWMA (α = 1/8) of worker-pool queue-wait in µs — the same
+    /// stream that feeds `queue_p50_us`, folded incrementally so the
+    /// admission controller can read it on the submit path without taking
+    /// the reservoir mutex.
+    queue_ewma_us: AtomicU64,
 }
 
 #[derive(Debug, Default)]
@@ -79,6 +100,11 @@ struct StatsInner {
     rejected_busy: u64,
     batches: u64,
     batched_items: u64,
+    /// Deadline sheds indexed by [`ShedStage`].
+    shed: [u64; 3],
+    retries: u64,
+    retry_budget_exhausted: u64,
+    worker_respawns: u64,
     started: Option<Instant>,
 }
 
@@ -98,6 +124,21 @@ pub struct StatsReport {
     pub mean_batch_fill: f64,
     pub total_completed: u64,
     pub throughput_rps: f64,
+    /// Deadline sheds by stage (see [`ShedStage`]). Books invariant: every
+    /// worker-pool submission that was accepted is accounted exactly once
+    /// as a completion, a `shed_dequeue`, or a `shed_flight`; `shed_submit`
+    /// jobs never entered the queue at all.
+    pub shed_submit: u64,
+    pub shed_dequeue: u64,
+    pub shed_flight: u64,
+    /// Client-handle retry attempts actually slept for and re-submitted.
+    pub retries: u64,
+    /// Retries refused because the shared budget was exhausted.
+    pub retry_budget_exhausted: u64,
+    /// Dead worker threads replaced by the supervisor.
+    pub worker_respawns: u64,
+    /// Current queue-wait EWMA in µs (the admission controller's estimate).
+    pub queue_wait_estimate_us: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -205,6 +246,49 @@ impl Stats {
         e.latencies_us.push(total_us);
         e.queue_us.push(queue_us);
         e.exec_us.push(exec_us);
+        drop(g);
+        // Fold the same queue-wait sample into the lock-free EWMA the
+        // admission controller reads. α = 1/8; integer truncation of the
+        // delta stalls for |diff| < 8, so a signum step keeps the estimate
+        // converging all the way instead of plateauing a few µs off.
+        let sample = as_u64(queue_us) as i64;
+        let prev = self.queue_ewma_us.load(Ordering::Relaxed) as i64;
+        let delta = (sample - prev) / 8;
+        let step = if delta != 0 { delta } else { (sample - prev).signum() };
+        self.queue_ewma_us.store((prev + step).max(0) as u64, Ordering::Relaxed);
+    }
+
+    /// Current queue-wait estimate in µs — the EWMA of the same
+    /// submit → flight-start stream behind `queue_p50_us`, readable without
+    /// the reservoir mutex. The estimate is advisory: concurrent
+    /// read-modify-write pairs may drop updates, which only slows
+    /// convergence, never corrupts the value.
+    pub fn queue_wait_estimate_us(&self) -> u64 {
+        self.queue_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// A job's deadline was refused or shed at `stage`.
+    pub fn record_deadline_shed(&self, stage: ShedStage) {
+        crate::obs::metrics().deadline_shed[stage as usize].inc();
+        self.inner.lock().unwrap().shed[stage as usize] += 1;
+    }
+
+    /// The client handle slept out a backoff and re-submitted.
+    pub fn record_retry(&self) {
+        crate::obs::metrics().retries.inc();
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    /// A retry was refused because the shared budget was broke.
+    pub fn record_retry_budget_exhausted(&self) {
+        crate::obs::metrics().retry_budget_exhausted.inc();
+        self.inner.lock().unwrap().retry_budget_exhausted += 1;
+    }
+
+    /// The supervisor replaced a dead worker thread.
+    pub fn record_respawn(&self) {
+        crate::obs::metrics().worker_respawns.inc();
+        self.inner.lock().unwrap().worker_respawns += 1;
     }
 
     /// One worker flight finished: `width` jobs executed as a unit taking
@@ -286,6 +370,13 @@ impl Stats {
             },
             total_completed: total,
             throughput_rps: if elapsed > 0.0 { total as f64 / elapsed } else { 0.0 },
+            shed_submit: g.shed[ShedStage::Submit as usize],
+            shed_dequeue: g.shed[ShedStage::Dequeue as usize],
+            shed_flight: g.shed[ShedStage::Flight as usize],
+            retries: g.retries,
+            retry_budget_exhausted: g.retry_budget_exhausted,
+            worker_respawns: g.worker_respawns,
+            queue_wait_estimate_us: self.queue_wait_estimate_us(),
         }
     }
 }
@@ -366,6 +457,51 @@ mod tests {
             op.p50_us
         );
         assert!(op.p99_us > 108_000.0, "p99 {} must see the newest samples", op.p99_us);
+    }
+
+    #[test]
+    fn shed_retry_and_respawn_books() {
+        let s = Stats::new();
+        s.mark_started();
+        s.record_deadline_shed(ShedStage::Submit);
+        s.record_deadline_shed(ShedStage::Submit);
+        s.record_deadline_shed(ShedStage::Dequeue);
+        s.record_deadline_shed(ShedStage::Flight);
+        s.record_retry();
+        s.record_retry();
+        s.record_retry();
+        s.record_retry_budget_exhausted();
+        s.record_respawn();
+        let r = s.report();
+        assert_eq!((r.shed_submit, r.shed_dequeue, r.shed_flight), (2, 1, 1));
+        assert_eq!(r.retries, 3);
+        assert_eq!(r.retry_budget_exhausted, 1);
+        assert_eq!(r.worker_respawns, 1);
+        // Sheds are not completions: the books stay separate.
+        assert_eq!(r.total_completed, 0);
+    }
+
+    #[test]
+    fn queue_wait_ewma_tracks_samples() {
+        let s = Stats::new();
+        s.mark_started();
+        assert_eq!(s.queue_wait_estimate_us(), 0);
+        for _ in 0..200 {
+            s.record_job("sketch_dense", 1100.0, 1000.0, 100.0);
+        }
+        let est = s.queue_wait_estimate_us();
+        assert!(
+            (900..=1100).contains(&est),
+            "EWMA {est} should converge near the steady 1000µs queue wait"
+        );
+        // A drained queue must pull the estimate back down — including the
+        // last few µs the truncated α=1/8 step alone would never cover.
+        for _ in 0..2000 {
+            s.record_job("sketch_dense", 100.0, 0.0, 100.0);
+        }
+        assert!(s.queue_wait_estimate_us() <= 10, "estimate must decay to ~0 when idle");
+        let r = s.report();
+        assert_eq!(r.queue_wait_estimate_us, s.queue_wait_estimate_us());
     }
 
     #[test]

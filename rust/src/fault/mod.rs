@@ -1,0 +1,268 @@
+//! Deterministic fault injection ("failpoints").
+//!
+//! A *site* is a named call to [`act`] or [`check`] placed on a failure-prone
+//! path — the worker loop, the spectral driver, the shard merge, the obs
+//! exporter. A *schedule* ([`FaultSpec`]) arms a site with an action, a
+//! trigger probability drawn from the site's own seeded RNG, and an optional
+//! hit cap — so an injection run is a pure function of its specs and the
+//! evaluation order, replayable bit-for-bit. The chaos suite
+//! (`rust/tests/chaos.rs`) floods a pool under such schedules and proves the
+//! resilience contracts: zero lost replies, confined failures, books that
+//! reconcile, and supervisor self-healing.
+//!
+//! Zero-cost when disabled: without the `failpoints` cargo feature, [`act`]
+//! and [`check`] compile to empty `#[inline(always)]` bodies (a constant
+//! `None`), so production builds carry no registry, no lock, and no branch
+//! beyond what the optimizer deletes. With the feature on but nothing armed,
+//! every evaluation is one relaxed atomic load.
+//!
+//! Action semantics at an armed site:
+//! * [`FaultAction::Panic`] and [`FaultAction::Delay`] execute *inside*
+//!   [`check`] (the site needs no handling code for them);
+//! * [`FaultAction::Error`] and [`FaultAction::TruncateSlab`] are returned
+//!   for the site to map onto its local failure path (an `Exec` reply, a
+//!   torn shard part, a 500 response).
+//!
+//! Every firing increments `fcs_faults_injected_total{site=...}` (see
+//! [`crate::obs`]), so a chaos run's injection count is scrapeable next to
+//! the shed/retry/respawn counters it provokes.
+
+use std::time::Duration;
+
+/// What an armed failpoint does when its schedule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// `panic!` at the site — exercises the `catch_unwind` isolation layers
+    /// and (in the worker loop, outside any catch) thread death + respawn.
+    Panic,
+    /// Sleep in place for the given duration, then continue normally —
+    /// manufactures queue backlog and deadline expiry on demand.
+    Delay(Duration),
+    /// Returned to the site, which maps it onto its local error path.
+    Error,
+    /// Returned to the site, which tears one element off a shard part the
+    /// way a corrupted merge reply would arrive (exercises the
+    /// execution-time length assert's confinement contract).
+    TruncateSlab,
+}
+
+/// Injection schedule for one site. The site evaluates its private
+/// `Rng::seed_from_u64(seed)` stream once per [`check`]; it fires when the
+/// draw lands under `prob` and fewer than `max_hits` firings have happened.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub action: FaultAction,
+    /// Trigger probability per evaluation, in `[0, 1]` (`1.0` = always).
+    pub prob: f64,
+    /// Stop firing after this many hits (`None` = unbounded).
+    pub max_hits: Option<u64>,
+    /// Seed of the site's private RNG — the schedule is deterministic in
+    /// `(spec, evaluation order)`.
+    pub seed: u64,
+}
+
+#[cfg(feature = "failpoints")]
+mod armed {
+    use super::{FaultAction, FaultSpec};
+    use crate::util::prng::Rng;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    struct Site {
+        spec: FaultSpec,
+        rng: Rng,
+        hits: u64,
+    }
+
+    /// Count of configured sites — the lock-free "anything armed at all?"
+    /// fast path every [`check`] takes before touching the registry lock.
+    static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+    fn registry() -> &'static Mutex<HashMap<&'static str, Site>> {
+        static REG: OnceLock<Mutex<HashMap<&'static str, Site>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn lock() -> std::sync::MutexGuard<'static, HashMap<&'static str, Site>> {
+        // The injected Panic action fires *after* the lock is released, so
+        // our own panics never poison this mutex — but a test that panics
+        // for unrelated reasons while configuring must not wedge the
+        // registry for the rest of the process.
+        registry().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm (or re-arm, resetting RNG and hit count) a site's schedule.
+    pub fn configure(site: &'static str, spec: FaultSpec) {
+        let fresh = Site { rng: Rng::seed_from_u64(spec.seed), spec, hits: 0 };
+        if lock().insert(site, fresh).is_none() {
+            ARMED.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Disarm one site.
+    pub fn clear(site: &'static str) {
+        if lock().remove(site).is_some() {
+            ARMED.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Disarm every site (chaos tests bracket themselves with this).
+    pub fn clear_all() {
+        let mut g = lock();
+        let n = g.len();
+        g.clear();
+        drop(g);
+        ARMED.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// How many times `site`'s schedule has actually fired.
+    pub fn hits(site: &'static str) -> u64 {
+        lock().get(site).map_or(0, |s| s.hits)
+    }
+
+    /// Evaluate a site. `Panic`/`Delay` execute here; `Error`/`TruncateSlab`
+    /// are returned for the caller to map onto its local failure path.
+    pub fn check(site: &'static str) -> Option<FaultAction> {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let action = {
+            let mut g = lock();
+            let s = g.get_mut(site)?;
+            if s.spec.max_hits.is_some_and(|m| s.hits >= m) {
+                return None;
+            }
+            if s.rng.uniform() >= s.spec.prob {
+                return None;
+            }
+            s.hits += 1;
+            s.spec.action
+            // Lock released here: the panic/sleep below must never hold it.
+        };
+        crate::obs::metrics().fault_injected(site).inc();
+        match action {
+            FaultAction::Panic => panic!("failpoint {site}: injected panic"),
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                None
+            }
+            other => Some(other),
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use armed::{check, clear, clear_all, configure, hits};
+
+/// Evaluate a site, discarding action-carrying results (`Panic`/`Delay`
+/// still execute in place). For sites with no local error mapping.
+#[cfg(feature = "failpoints")]
+#[inline]
+pub fn act(site: &'static str) {
+    let _ = check(site);
+}
+
+/// Failpoints disabled: a constant `None` the optimizer deletes.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn check(_site: &'static str) -> Option<FaultAction> {
+    None
+}
+
+/// Failpoints disabled: an empty body the optimizer deletes.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn act(_site: &'static str) {}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    // Each test arms its own uniquely named sites, so the process-global
+    // registry needs no cross-test serialization here.
+
+    #[test]
+    fn unarmed_site_is_silent() {
+        assert_eq!(check("fault_test_unarmed"), None);
+        assert_eq!(hits("fault_test_unarmed"), 0);
+    }
+
+    #[test]
+    fn max_hits_bounds_the_schedule() {
+        configure(
+            "fault_test_max",
+            FaultSpec { action: FaultAction::Error, prob: 1.0, max_hits: Some(2), seed: 1 },
+        );
+        assert_eq!(check("fault_test_max"), Some(FaultAction::Error));
+        assert_eq!(check("fault_test_max"), Some(FaultAction::Error));
+        assert_eq!(check("fault_test_max"), None);
+        assert_eq!(hits("fault_test_max"), 2);
+        clear("fault_test_max");
+        assert_eq!(check("fault_test_max"), None, "cleared site is unarmed");
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        configure(
+            "fault_test_p0",
+            FaultSpec { action: FaultAction::Error, prob: 0.0, max_hits: None, seed: 7 },
+        );
+        for _ in 0..100 {
+            assert_eq!(check("fault_test_p0"), None);
+        }
+        assert_eq!(hits("fault_test_p0"), 0);
+        clear("fault_test_p0");
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_the_seed() {
+        let run = || -> Vec<bool> {
+            configure(
+                "fault_test_det",
+                FaultSpec { action: FaultAction::Error, prob: 0.5, max_hits: None, seed: 42 },
+            );
+            let v = (0..64).map(|_| check("fault_test_det").is_some()).collect();
+            clear("fault_test_det");
+            v
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed must replay the same schedule");
+        assert!(
+            a.iter().any(|&x| x) && a.iter().any(|&x| !x),
+            "p=0.5 over 64 draws should both fire and skip"
+        );
+    }
+
+    #[test]
+    fn panic_action_panics_at_the_site_and_consumes_a_hit() {
+        configure(
+            "fault_test_panic",
+            FaultSpec { action: FaultAction::Panic, prob: 1.0, max_hits: Some(1), seed: 3 },
+        );
+        let caught = std::panic::catch_unwind(|| act("fault_test_panic"));
+        assert!(caught.is_err(), "Panic action must unwind");
+        assert_eq!(hits("fault_test_panic"), 1);
+        assert_eq!(check("fault_test_panic"), None, "max_hits consumed by the panic");
+        clear("fault_test_panic");
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        configure(
+            "fault_test_delay",
+            FaultSpec {
+                action: FaultAction::Delay(Duration::from_millis(20)),
+                prob: 1.0,
+                max_hits: Some(1),
+                seed: 5,
+            },
+        );
+        let t0 = Instant::now();
+        assert_eq!(check("fault_test_delay"), None, "delay executes in place");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(hits("fault_test_delay"), 1);
+        clear("fault_test_delay");
+    }
+}

@@ -18,6 +18,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod cpd;
 pub mod data;
+pub mod fault;
 pub mod fft;
 pub mod hash;
 pub mod linalg;

@@ -7,14 +7,24 @@
 //! with the real gateway free to absorb it later.
 
 use super::export::render_global;
+use crate::fault::FaultAction;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Spans returned by `GET /traces`.
 const TRACE_DUMP_N: usize = 64;
+
+/// Request-line cap. A peer that sends this much without a newline is not a
+/// scraper — the connection gets a 400 instead of unbounded buffering.
+const MAX_REQUEST_LINE: usize = 1024;
+
+/// Hard wall-clock bound on reading one request line. The per-`read`
+/// timeout alone would let a slowloris peer trickle one byte per 499ms
+/// forever; this caps the *sum*.
+const READ_DEADLINE: Duration = Duration::from_secs(2);
 
 /// Handle to a running exporter thread. Dropping it (or calling
 /// [`Exporter::shutdown`]) stops the accept loop and joins the thread.
@@ -74,16 +84,94 @@ fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
     }
 }
 
+/// Outcome of parsing one request line.
+enum RequestLine {
+    Get(String),
+    NotGet,
+    Malformed,
+}
+
+/// Strict parse of `"GET /path HTTP/x.y"`: exactly three tokens, a
+/// `/`-rooted path, an `HTTP/` version. Anything else — binary garbage, a
+/// proxy CONNECT probe, a request smuggled onto extra tokens — is
+/// `Malformed` and answered 400 without touching the render paths.
+fn parse_request_line(line: &[u8]) -> RequestLine {
+    let Ok(text) = std::str::from_utf8(line) else {
+        return RequestLine::Malformed;
+    };
+    let mut tokens = text.trim_end_matches('\r').split_whitespace();
+    let (Some(method), Some(path), Some(version), None) =
+        (tokens.next(), tokens.next(), tokens.next(), tokens.next())
+    else {
+        return RequestLine::Malformed;
+    };
+    if !path.starts_with('/') || !version.starts_with("HTTP/") {
+        return RequestLine::Malformed;
+    }
+    if method != "GET" {
+        return RequestLine::NotGet;
+    }
+    RequestLine::Get(path.to_string())
+}
+
 fn serve_one(mut stream: TcpStream) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(500)))?;
     stream.set_write_timeout(Some(Duration::from_millis(500)))?;
-    let mut buf = [0u8; 1024];
-    let n = stream.read(&mut buf)?;
-    let head = String::from_utf8_lossy(&buf[..n]);
-    // "GET /path HTTP/1.1" — the path is the second whitespace token.
-    let path = head.split_whitespace().nth(1).unwrap_or("/");
+    // Read until the first LF, bounded in both bytes (MAX_REQUEST_LINE) and
+    // wall clock (READ_DEADLINE). A single `read` is not enough — a
+    // legitimate client's request line may arrive in several segments — but
+    // unbounded buffering would hand a hostile peer our memory and this
+    // (single-threaded) accept loop's time.
+    let started = Instant::now();
+    let mut buf = [0u8; MAX_REQUEST_LINE];
+    let mut n = 0usize;
+    let line_end: Option<usize> = loop {
+        if let Some(pos) = buf[..n].iter().position(|&b| b == b'\n') {
+            break Some(pos);
+        }
+        if n == buf.len() || started.elapsed() >= READ_DEADLINE {
+            break None;
+        }
+        match stream.read(&mut buf[n..]) {
+            Ok(0) | Err(_) => break None,
+            Ok(m) => n += m,
+        }
+    };
 
-    let (status, content_type, body) = match path {
+    let (status, content_type, body) = match line_end.map(|end| parse_request_line(&buf[..end])) {
+        None | Some(RequestLine::Malformed) => (
+            "400 Bad Request",
+            "text/plain; charset=utf-8",
+            "bad request\n".to_string(),
+        ),
+        Some(RequestLine::NotGet) => (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".to_string(),
+        ),
+        Some(RequestLine::Get(path)) => route(&path),
+    };
+
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+fn route(path: &str) -> (&'static str, &'static str, String) {
+    // Failpoint: Error maps onto a 500 (the exporter's local failure path).
+    // This site runs on the accept-loop thread, so schedules must stick to
+    // Error/Delay — an injected Panic would kill the exporter itself.
+    if matches!(crate::fault::check("exporter"), Some(FaultAction::Error)) {
+        return (
+            "500 Internal Server Error",
+            "text/plain; charset=utf-8",
+            "injected fault\n".to_string(),
+        );
+    }
+    match path {
         "/metrics" => (
             "200 OK",
             "text/plain; version=0.0.4; charset=utf-8",
@@ -100,14 +188,7 @@ fn serve_one(mut stream: TcpStream) -> std::io::Result<()> {
             "text/plain; charset=utf-8",
             "not found\n".to_string(),
         ),
-    };
-
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(response.as_bytes())?;
-    stream.flush()
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +227,60 @@ mod tests {
 
         exporter.shutdown();
         // Shut down: new connections must not be served.
+        assert!(
+            TcpStream::connect(addr).map(|mut s| {
+                let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");
+                let mut out = String::new();
+                s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+                s.read_to_string(&mut out).unwrap_or(0) == 0
+            }).unwrap_or(true),
+            "exporter served a request after shutdown"
+        );
+    }
+
+    fn send_raw(addr: SocketAddr, payload: &[u8]) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(payload).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn hardened_against_malformed_and_slow_input() {
+        let mut exporter = Exporter::bind("127.0.0.1:0").unwrap();
+        let addr = exporter.local_addr();
+
+        // Binary garbage on the request line: 400, not a panic or a 404
+        // from a lossy-decoded phantom path.
+        let garbage = send_raw(addr, b"\x00\xffBLARG\r\n");
+        assert!(garbage.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{garbage}");
+
+        // A request line at exactly the cap with no newline: the server
+        // must refuse rather than buffer forever. (Exactly MAX_REQUEST_LINE
+        // bytes, so nothing is left unread to trigger a connection reset.)
+        let oversize = send_raw(addr, &[b'A'; MAX_REQUEST_LINE]);
+        assert!(oversize.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{oversize}");
+
+        // Non-GET methods are refused explicitly.
+        let post = send_raw(addr, b"POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{post}");
+
+        // A request line split across TCP segments must still parse — the
+        // pre-hardening single-read parser would have answered 400 here.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /heal").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        stream.write_all(b"thz HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+
+        // The loop is still healthy after the abuse.
+        let health = get(addr, "/healthz");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        exporter.shutdown();
         assert!(
             TcpStream::connect(addr).map(|mut s| {
                 let _ = s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n");

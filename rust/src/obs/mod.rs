@@ -65,6 +65,34 @@ const STAGE_LABELS: [&str; 4] = [
     "stage=\"inverse\"",
 ];
 
+/// Deadline-shed stages, in `fcs_deadline_shed_total` label order (indexed
+/// by `coordinator::stats::ShedStage as usize`).
+pub const SHED_STAGES: [&str; 3] = ["submit", "dequeue", "flight"];
+
+const SHED_STAGE_LABELS: [&str; 3] = ["stage=\"submit\"", "stage=\"dequeue\"", "stage=\"flight\""];
+
+/// Failpoint sites with a dedicated `fcs_faults_injected_total` series, in
+/// label order. `"other"` is the catch-all for sites added without a label.
+pub const FAULT_SITES: [&str; 7] = [
+    "worker_loop",
+    "worker_job",
+    "spectral_driver",
+    "shard_scatter",
+    "merge_shards",
+    "exporter",
+    "other",
+];
+
+const FAULT_SITE_LABELS: [&str; 7] = [
+    "site=\"worker_loop\"",
+    "site=\"worker_job\"",
+    "site=\"spectral_driver\"",
+    "site=\"shard_scatter\"",
+    "site=\"merge_shards\"",
+    "site=\"exporter\"",
+    "site=\"other\"",
+];
+
 /// Per-operation instruments (one set per entry of [`OPS`]).
 pub struct OpMetrics {
     /// `fcs_requests_completed_total{op=...}`
@@ -123,6 +151,25 @@ pub struct CrateMetrics {
 
     /// `fcs_traces_recorded_total`
     pub traces_recorded: Arc<Counter>,
+
+    /// `fcs_deadline_shed_total{stage="submit"|"dequeue"|"flight"}` — jobs
+    /// refused or shed because their deadline expired (or the admission
+    /// controller's queue-wait estimate exceeded the remaining budget).
+    /// Indexed by `coordinator::stats::ShedStage as usize`.
+    pub deadline_shed: [Arc<Counter>; 3],
+    /// `fcs_retries_total` — client-handle retry attempts actually slept
+    /// for and re-submitted.
+    pub retries: Arc<Counter>,
+    /// `fcs_retry_budget_exhausted_total` — retries refused because the
+    /// shared retry budget was broke (overload anti-amplification).
+    pub retry_budget_exhausted: Arc<Counter>,
+    /// `fcs_worker_respawns_total` — dead (panicked) worker threads
+    /// replaced by the pool supervisor.
+    pub worker_respawns: Arc<Counter>,
+    /// `fcs_faults_injected_total{site=...}` — failpoint firings. Always
+    /// registered (stable names); stays zero unless the `failpoints`
+    /// feature is compiled in and a schedule is armed.
+    faults_injected: [Arc<Counter>; 7],
 }
 
 impl CrateMetrics {
@@ -269,6 +316,36 @@ impl CrateMetrics {
             "",
         );
 
+        let deadline_shed: [Arc<Counter>; 3] = std::array::from_fn(|i| {
+            reg.counter(
+                "fcs_deadline_shed_total",
+                "Jobs refused or shed on an expired/unmeetable deadline, by stage.",
+                SHED_STAGE_LABELS[i],
+            )
+        });
+        let retries = reg.counter(
+            "fcs_retries_total",
+            "Client-handle retry attempts performed (budgeted, jittered).",
+            "",
+        );
+        let retry_budget_exhausted = reg.counter(
+            "fcs_retry_budget_exhausted_total",
+            "Retries refused because the shared retry budget was exhausted.",
+            "",
+        );
+        let worker_respawns = reg.counter(
+            "fcs_worker_respawns_total",
+            "Dead worker threads replaced by the pool supervisor.",
+            "",
+        );
+        let faults_injected: [Arc<Counter>; 7] = std::array::from_fn(|i| {
+            reg.counter(
+                "fcs_faults_injected_total",
+                "Failpoint firings (failpoints feature only), by site.",
+                FAULT_SITE_LABELS[i],
+            )
+        });
+
         CrateMetrics {
             plan_cache_hits_forward,
             plan_cache_hits_real,
@@ -290,6 +367,11 @@ impl CrateMetrics {
             estimator_t_mode,
             estimator_deflate,
             traces_recorded,
+            deadline_shed,
+            retries,
+            retry_budget_exhausted,
+            worker_respawns,
+            faults_injected,
         }
     }
 
@@ -299,6 +381,14 @@ impl CrateMetrics {
     pub fn op(&self, name: &str) -> &OpMetrics {
         let i = OPS.iter().position(|&o| o == name).unwrap_or(OPS.len() - 1);
         &self.ops[i]
+    }
+
+    /// The `fcs_faults_injected_total` series for a failpoint site; sites
+    /// outside [`FAULT_SITES`] fall into the `"other"` series.
+    #[inline]
+    pub fn fault_injected(&self, site: &str) -> &Counter {
+        let i = FAULT_SITES.iter().position(|&s| s == site).unwrap_or(FAULT_SITES.len() - 1);
+        &self.faults_injected[i]
     }
 }
 

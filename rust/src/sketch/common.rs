@@ -128,6 +128,9 @@ impl SpectralDriver {
         mut weight: impl FnMut(usize, usize) -> f64,
         accs: &mut [Vec<C64>],
     ) {
+        // Failpoint: a Panic here unwinds a whole fused flight mid-transform
+        // — the coordinator's fused-abort → serial-retry path.
+        crate::fault::act("spectral_driver");
         debug_assert_eq!(job_groups.len(), accs.len());
         debug_assert!(accs.iter().all(|a| a.len() == self.n));
         let total: usize = job_groups.iter().sum();
@@ -206,6 +209,8 @@ impl SpectralDriver {
         mut weight: impl FnMut(usize) -> f64,
         acc: &mut [C64],
     ) {
+        // Same site as the fused entry point: serial spectral passes share it.
+        crate::fault::act("spectral_driver");
         debug_assert_eq!(acc.len(), self.n);
         if self.lanes == 0 || groups.is_empty() {
             return;

@@ -62,6 +62,9 @@ pub fn scatter_slab(
     modulo: Option<usize>,
     out: &mut [f64],
 ) {
+    // Failpoint: a Panic here poisons exactly one shard's scatter — the
+    // per-job catch_unwind must confine it to that shard's merge group.
+    crate::fault::act("shard_scatter");
     let total: usize = mh.dims.iter().product();
     assert!(
         offset + slab.len() <= total,

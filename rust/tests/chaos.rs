@@ -1,0 +1,281 @@
+//! Chaos suite: deterministic fault injection (the `failpoints` feature)
+//! driven through the public service API. Each scenario arms an explicit
+//! schedule — seeded, probability-gated, hit-capped — and then proves the
+//! resilience contracts: zero lost replies, books that reconcile, failures
+//! confined to exactly the job that hit them, and a pool that heals back to
+//! full width.
+//!
+//! The failpoint registry and the obs counters are process-global, so the
+//! tests serialize on one mutex and start from `clear_all()`; global
+//! counters are asserted as deltas, per-service [`fcs::coordinator::Stats`]
+//! exactly.
+#![cfg(feature = "failpoints")]
+
+use fcs::coordinator::{
+    job_rng, Request, Response, Service, ServiceConfig, ServiceError, SketchMethod, WorkerState,
+};
+use fcs::fault::{clear_all, configure, hits, FaultAction, FaultSpec};
+use fcs::obs::exporter::Exporter;
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Service seed shared by [`start`] and the reference constructions.
+const SEED: u64 = 23;
+
+/// One chaos scenario at a time: the failpoint registry is process-global,
+/// and a schedule armed by one test must not fire in another. Poisoned by a
+/// failing sibling is fine — we clear the registry on entry either way.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    clear_all();
+    g
+}
+
+fn start(workers: usize, cap: usize) -> Service {
+    Service::start(
+        ServiceConfig {
+            workers,
+            queue_capacity: cap,
+            batch_deadline: Duration::from_micros(200),
+            seed: SEED,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn always(action: FaultAction, max_hits: u64, seed: u64) -> FaultSpec {
+    FaultSpec { action, prob: 1.0, max_hits: Some(max_hits), seed }
+}
+
+#[test]
+fn flooded_pool_under_injection_loses_no_replies_and_self_heals() {
+    let _g = lock();
+    // One worker thread dies at its loop top (outside any catch_unwind,
+    // before the queue lock — holding nothing); the first 20 serial jobs
+    // are delayed to manufacture backlog and deadline expiry; the first
+    // merge sees a torn shard.
+    configure("worker_loop", always(FaultAction::Panic, 1, 1));
+    configure("worker_job", always(FaultAction::Delay(Duration::from_micros(300)), 20, 2));
+    configure("merge_shards", always(FaultAction::TruncateSlab, 1, 3));
+
+    let svc = start(3, 2048);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(4);
+    let total = 240usize;
+    let mut rxs = Vec::new();
+    let (mut submit_shed, mut busy) = (0usize, 0usize);
+    for i in 0..total {
+        let dense = |rng: &mut Rng, shape: &[usize], j: usize| Request::SketchDense {
+            tensor: Tensor::randn(rng, shape),
+            method: SketchMethod::Fcs,
+            j,
+        };
+        let (req, deadline) = match i % 6 {
+            0 => (dense(&mut rng, &[4, 4, 4], 8), None),
+            1 => (dense(&mut rng, &[6, 6, 6], 24), None),
+            2 => (Request::SketchCp { cp: CpTensor::randn(&mut rng, &[6, 5, 4], 2), j: 12 }, None),
+            3 => (Request::MergeShards { parts: vec![vec![1.0; 16], vec![2.0; 16]] }, None),
+            4 => (dense(&mut rng, &[5, 5, 5], 16), Some(Instant::now() + Duration::from_millis(2))),
+            // Already expired at submit: a deterministic submit-stage shed.
+            _ => (dense(&mut rng, &[5, 5, 5], 16), Some(Instant::now())),
+        };
+        match h.submit_with_deadline(req, deadline) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServiceError::DeadlineExceeded) => submit_shed += 1,
+            Err(ServiceError::Busy) => busy += 1,
+            Err(e) => panic!("request {i}: unexpected submit error {e}"),
+        }
+    }
+    let accepted = rxs.len();
+    assert_eq!(accepted + submit_shed + busy, total);
+    assert!(submit_shed >= total / 6, "every kind-5 submission must be shed at submit");
+
+    // Zero lost replies: every accepted request resolves exactly once, even
+    // though a worker died and every failure class above fired.
+    let (mut ok, mut exec, mut dl_x) = (0usize, 0usize, 0usize);
+    for rx in rxs {
+        match rx.recv().expect("reply sender dropped — a response was lost") {
+            Ok(_) => ok += 1,
+            Err(ServiceError::Exec(msg)) => {
+                assert!(msg.contains("panicked"), "unexpected exec error: {msg}");
+                exec += 1;
+            }
+            Err(ServiceError::DeadlineExceeded) => dl_x += 1,
+            Err(e) => panic!("unexpected reply error {e}"),
+        }
+    }
+    assert_eq!(ok + exec + dl_x, accepted);
+    assert_eq!(exec, 1, "exactly the torn merge fails, nothing else");
+
+    // The schedules fired exactly as armed.
+    assert_eq!(hits("worker_loop"), 1);
+    assert_eq!(hits("worker_job"), 20);
+    assert_eq!(hits("merge_shards"), 1);
+
+    // The supervisor replaces the dead worker (sweep cadence 10ms — poll).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while svc.stats().worker_respawns < 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let report = svc.stats();
+    assert_eq!(report.worker_respawns, 1, "one injected death, one respawn: {report:?}");
+
+    // Books reconcile across every outcome class.
+    assert_eq!(report.total_completed as usize, ok + exec);
+    assert_eq!(report.shed_submit as usize, submit_shed);
+    assert_eq!(report.shed_dequeue as usize + report.shed_flight as usize, dl_x);
+    assert_eq!(report.rejected_busy as usize, busy);
+
+    // Disarmed, the healed pool serves normally at full width.
+    clear_all();
+    let Response::Sketch(v) = h
+        .call(Request::SketchDense {
+            tensor: Tensor::randn(&mut rng, &[4, 4, 4]),
+            method: SketchMethod::Fcs,
+            j: 8,
+        })
+        .unwrap()
+    else {
+        panic!("wrong response kind")
+    };
+    assert!(v.iter().all(|x| x.is_finite()));
+    svc.shutdown();
+}
+
+#[test]
+fn injected_driver_panic_inside_fused_flight_recovers_bit_identically() {
+    let _g = lock();
+    // A delayed merge blocker (req_id 0) lets six identical CP jobs queue
+    // behind it; they drain as one fused flight whose shared spectral
+    // transform is shot down mid-pass. The abort must fall back to per-job
+    // serial retry with the *original* req_ids — every reply Ok and
+    // bit-identical to its serial reference.
+    configure("worker_job", always(FaultAction::Delay(Duration::from_millis(50)), 1, 1));
+    configure("spectral_driver", always(FaultAction::Panic, 1, 2));
+    let aborts_before = fcs::obs::metrics().fused_flight_aborts.get();
+
+    let svc = start(1, 256);
+    let h = svc.handle();
+    let blocker =
+        h.submit(Request::MergeShards { parts: vec![vec![1.0; 32], vec![2.0; 32]] }).unwrap();
+    // Let the worker dequeue the blocker and park in the injected delay.
+    std::thread::sleep(Duration::from_millis(10));
+
+    let mut rng = Rng::seed_from_u64(5);
+    let cp = CpTensor::randn(&mut rng, &[12, 11, 10], 3);
+    let j = 64usize;
+    let k = 6usize;
+    let rxs: Vec<_> =
+        (0..k).map(|_| h.submit(Request::SketchCp { cp: cp.clone(), j }).unwrap()).collect();
+
+    let mut st = WorkerState::new();
+    let refs: Vec<Vec<f64>> = (1..=(k as u64))
+        .map(|id| {
+            let mut out = Vec::new();
+            st.sketch_cp_into(&cp, j, &mut job_rng(SEED, id), &mut out);
+            out
+        })
+        .collect();
+    let mut used = vec![false; k];
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let Response::Sketch(v) = rx.recv().unwrap().unwrap_or_else(|e| {
+            panic!("job {i}: fused-abort recovery must answer Ok, got {e}")
+        }) else {
+            panic!("job {i}: wrong response kind")
+        };
+        let id = (0..k)
+            .find(|&id| !used[id] && bits_eq(&v, &refs[id]))
+            .unwrap_or_else(|| panic!("job {i}: reply not bit-identical to any serial reference"));
+        used[id] = true;
+    }
+    blocker.recv().unwrap().unwrap();
+
+    assert_eq!(hits("spectral_driver"), 1, "the panic fired inside the fused transform");
+    assert_eq!(hits("worker_job"), 1);
+    assert!(
+        fcs::obs::metrics().fused_flight_aborts.get() > aborts_before,
+        "the fused abort must be visible on fcs_fused_flight_aborts_total"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn truncated_shard_merge_confines_failure_to_its_group() {
+    let _g = lock();
+    configure("merge_shards", always(FaultAction::TruncateSlab, 1, 7));
+    let svc = start(2, 512);
+    let h = svc.handle();
+
+    // Submitted and received serially, so the single armed hit lands on the
+    // first merge deterministically: the torn shard trips the equal-length
+    // assert, and per-job isolation turns it into this group's Exec reply.
+    let torn = h.call(Request::MergeShards { parts: vec![vec![1.0; 16], vec![2.0; 16]] });
+    match torn {
+        Err(ServiceError::Exec(msg)) => {
+            assert!(msg.contains("panicked"), "unexpected exec error: {msg}")
+        }
+        other => panic!("torn merge must fail with Exec, got {other:?}"),
+    }
+
+    // The next merge group is untouched — and exact.
+    let parts = vec![vec![0.5; 24], vec![1.5; 24], vec![2.5; 24]];
+    let Response::Sketch(merged) =
+        h.call(Request::MergeShards { parts: parts.clone() }).unwrap()
+    else {
+        panic!("wrong response kind")
+    };
+    let (want, _) = fcs::sketch::merge::tree_reduce_parts(&parts);
+    assert!(bits_eq(&merged, &want));
+
+    // And unrelated ops never saw the fault.
+    let mut rng = Rng::seed_from_u64(6);
+    h.call(Request::SketchDense {
+        tensor: Tensor::randn(&mut rng, &[5, 5, 5]),
+        method: SketchMethod::Fcs,
+        j: 16,
+    })
+    .unwrap();
+    assert_eq!(hits("merge_shards"), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn exporter_fault_returns_500_and_recovers() {
+    let _g = lock();
+    // The exporter site runs on the accept-loop thread, so its schedule maps
+    // Error onto a 500 — the scrape fails visibly, the loop survives.
+    configure("exporter", always(FaultAction::Error, 1, 9));
+    let mut exporter = Exporter::bind("127.0.0.1:0").unwrap();
+    let addr = exporter.local_addr();
+
+    let get = |path: &str| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let faulted = get("/metrics");
+    assert!(faulted.starts_with("HTTP/1.1 500 Internal Server Error\r\n"), "{faulted}");
+    assert!(faulted.ends_with("injected fault\n"), "{faulted}");
+
+    let healthy = get("/metrics");
+    assert!(healthy.starts_with("HTTP/1.1 200 OK\r\n"), "{healthy}");
+    assert!(healthy.contains("fcs_faults_injected_total"), "{healthy}");
+    assert_eq!(hits("exporter"), 1);
+    exporter.shutdown();
+}

@@ -1,0 +1,307 @@
+//! Deadline semantics and retry budgeting, end to end through the service:
+//! already-expired requests are refused without executing; queue-expired
+//! jobs are shed at dequeue; shedding *inside* a fused flight never
+//! perturbs the survivors' bit-exact outputs; the client-side retry loop
+//! respects its shared anti-amplification budget under a Busy storm; and
+//! the admission controller refuses jobs the queue-wait estimate says
+//! cannot make their deadline.
+
+use fcs::coordinator::{
+    job_rng, BudgetConfig, Request, Response, RetryBudget, RetryPolicy, Service, ServiceConfig,
+    ServiceError, SketchMethod, WorkerState,
+};
+use fcs::tensor::{CpTensor, Tensor};
+use fcs::util::prng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Service seed shared by the start helper and reference constructions.
+const SEED: u64 = 17;
+
+fn start(workers: usize, cap: usize) -> Service {
+    Service::start(
+        ServiceConfig {
+            workers,
+            queue_capacity: cap,
+            batch_deadline: Duration::from_micros(200),
+            seed: SEED,
+        },
+        None,
+    )
+    .unwrap()
+}
+
+/// Bitwise slice equality — the shed-inside-flight contract is bit-identity
+/// for survivors, not approximate agreement.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A CP request heavy enough to occupy a worker for many milliseconds —
+/// the blocker that lets queues build behind it.
+fn heavy_cp(rng: &mut Rng) -> Request {
+    Request::SketchCp { cp: CpTensor::randn(rng, &[40, 40, 40], 64), j: 2048 }
+}
+
+#[test]
+fn already_expired_requests_never_execute() {
+    let svc = start(2, 256);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(1);
+    let expired = Instant::now();
+    let total = 40usize;
+    for i in 0..total {
+        let req = match i % 4 {
+            0 => Request::SketchDense {
+                tensor: Tensor::randn(&mut rng, &[5, 5, 5]),
+                method: SketchMethod::Fcs,
+                j: 16,
+            },
+            1 => Request::SketchCp { cp: CpTensor::randn(&mut rng, &[5, 4, 6], 2), j: 12 },
+            2 => Request::MergeShards { parts: vec![vec![1.0; 8], vec![2.0; 8]] },
+            // The batcher path sheds on an expired deadline too.
+            _ => Request::CsVec { x: vec![0.0; h.cs_in_dim] },
+        };
+        match h.submit_with_deadline(req, Some(expired)) {
+            Err(ServiceError::DeadlineExceeded) => {}
+            other => panic!("request {i}: expired submit must be refused, got {other:?}"),
+        }
+    }
+    let report = svc.stats();
+    assert_eq!(report.shed_submit as usize, total, "every refusal booked at the submit stage");
+    assert_eq!(report.total_completed, 0, "an expired request executed");
+    assert_eq!(report.shed_dequeue + report.shed_flight, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn queue_expired_jobs_are_shed_at_dequeue_without_executing() {
+    // One worker, blocked on a heavy CP job: small jobs whose deadline is a
+    // fraction of the blocker's runtime must come back DeadlineExceeded and
+    // never reach the sketch kernels.
+    let svc = start(1, 256);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(2);
+    let blocker = h.submit(heavy_cp(&mut rng)).unwrap();
+    // Let the worker dequeue the blocker (its fuse window is 100µs).
+    std::thread::sleep(Duration::from_millis(2));
+    let n = 4usize;
+    let mut rxs = Vec::new();
+    let mut submit_shed = 0usize;
+    for _ in 0..n {
+        let req = Request::SketchDense {
+            tensor: Tensor::randn(&mut rng, &[5, 5, 5]),
+            method: SketchMethod::Fcs,
+            j: 16,
+        };
+        match h.submit_with_deadline(req, Some(Instant::now() + Duration::from_micros(500))) {
+            Ok(rx) => rxs.push(rx),
+            // Possible only if an earlier run of this service already
+            // raised the queue-wait estimate — still a correct refusal.
+            Err(ServiceError::DeadlineExceeded) => submit_shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().expect("reply sender dropped — response lost") {
+            Err(ServiceError::DeadlineExceeded) => {}
+            other => panic!("job {i}: expected a shed, got {other:?}"),
+        }
+    }
+    let Response::Sketch(v) = blocker.recv().unwrap().unwrap() else {
+        panic!("wrong blocker response kind")
+    };
+    assert!(v.iter().all(|x| x.is_finite()));
+    let report = svc.stats();
+    assert_eq!(report.shed_submit as usize, submit_shed);
+    assert_eq!(
+        report.shed_submit as usize + report.shed_dequeue as usize + report.shed_flight as usize,
+        n,
+        "every shed booked exactly once: {report:?}"
+    );
+    let dense = report.per_op.iter().find(|o| o.op == "sketch_dense");
+    assert_eq!(
+        dense.map_or(0, |o| o.completed),
+        0,
+        "a queue-expired dense job burned a sketch pass"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn shed_inside_fused_flight_preserves_survivor_bit_identity() {
+    // Two heavy blockers build a backlog; six *identical* small CP jobs
+    // queue behind them, alternating a tight deadline with none. At flight
+    // start the expired half is shed and the survivors execute as a fused
+    // flight — whose outputs must stay bit-identical to serial references,
+    // because every job's RNG is keyed to its up-front req_id, shed or not.
+    let svc = start(1, 256);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(3);
+    let b0 = h.submit(heavy_cp(&mut rng)).unwrap();
+    let b1 = h.submit(heavy_cp(&mut rng)).unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    let cp = CpTensor::randn(&mut rng, &[12, 11, 10], 3);
+    let j = 64usize;
+    let k = 6usize;
+    let mut rxs = Vec::new();
+    let mut submit_shed = 0usize;
+    for i in 0..k {
+        let deadline =
+            if i % 2 == 0 { Some(Instant::now() + Duration::from_micros(500)) } else { None };
+        match h.submit_with_deadline(Request::SketchCp { cp: cp.clone(), j }, deadline) {
+            Ok(rx) => rxs.push((i, rx)),
+            Err(ServiceError::DeadlineExceeded) => submit_shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    // Serial references for every req_id the six jobs could have drawn (the
+    // blockers hold ids 0 and 1; the flight draws ids in 2..2+k, shed jobs
+    // included).
+    let mut st = WorkerState::new();
+    let refs: Vec<Vec<f64>> = (2..(2 + k) as u64)
+        .map(|id| {
+            let mut out = Vec::new();
+            st.sketch_cp_into(&cp, j, &mut job_rng(SEED, id), &mut out);
+            out
+        })
+        .collect();
+    let mut used = vec![false; k];
+    let (mut ok, mut shed) = (0usize, submit_shed);
+    for (i, rx) in rxs {
+        match rx.recv().expect("reply sender dropped — response lost") {
+            Ok(Response::Sketch(v)) => {
+                assert!(i % 2 == 1, "job {i}: tight-deadline job survived a multi-ms backlog");
+                let id = (0..k).find(|&id| !used[id] && bits_eq(&v, &refs[id])).unwrap_or_else(
+                    || panic!("job {i}: survivor not bit-identical to any serial reference"),
+                );
+                used[id] = true;
+                ok += 1;
+            }
+            Err(ServiceError::DeadlineExceeded) => {
+                assert!(i % 2 == 0, "job {i}: no-deadline job was shed");
+                shed += 1;
+            }
+            other => panic!("job {i}: unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(ok, k / 2, "all three no-deadline jobs must survive");
+    assert_eq!(shed, k / 2, "all three tight-deadline jobs must be shed");
+    for b in [b0, b1] {
+        let Response::Sketch(v) = b.recv().unwrap().unwrap() else {
+            panic!("wrong blocker response kind")
+        };
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+    let report = svc.stats();
+    assert!(
+        report.flights.iter().any(|f| f.width > 1),
+        "survivors did not execute as a fused flight: {:?}",
+        report.flights
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn retry_loop_respects_the_shared_budget_under_busy_storm() {
+    // A one-slot queue behind a blocked single worker turns every submit
+    // into Busy; the retry loop may spend at most
+    // (initial + calls·deposit) / withdraw retries on the storm, then must
+    // surface Busy immediately instead of amplifying it.
+    let svc = start(1, 1);
+    let budget = Arc::new(RetryBudget::new(BudgetConfig {
+        initial_m: 2000,
+        deposit_m: 100,
+        withdraw_m: 1000,
+        cap_m: 10_000,
+    }));
+    let h = svc.handle().with_retry_budget(budget.clone());
+    let mut rng = Rng::seed_from_u64(4);
+    let blocker = h.submit(heavy_cp(&mut rng)).unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    // Occupy the single queue slot for the blocker's whole runtime.
+    let filler = h.submit(heavy_cp(&mut rng)).unwrap();
+    // Short backoffs keep the whole storm inside the blocker's runtime.
+    let policy = RetryPolicy {
+        max_retries: 3,
+        base_backoff: Duration::from_micros(50),
+        max_backoff: Duration::from_micros(200),
+        jitter_seed: 0x5EED,
+    };
+    let calls = 40usize;
+    let (mut busy, mut other_ok) = (0usize, 0usize);
+    for _ in 0..calls {
+        let req = Request::SketchDense {
+            tensor: Tensor::randn(&mut rng, &[4, 4, 4]),
+            method: SketchMethod::Fcs,
+            j: 8,
+        };
+        match h.call_with_retry(req, None, &policy) {
+            Err(ServiceError::Busy) => busy += 1,
+            // A call can slip into the queue in the instant the worker
+            // dequeues the filler; rare and harmless to the budget claims.
+            Ok(_) => other_ok += 1,
+            Err(e) => panic!("unexpected retry outcome: {e}"),
+        }
+    }
+    assert_eq!(busy + other_ok, calls);
+    assert!(busy >= 30, "the storm should be mostly Busy ({busy}/{calls})");
+    let report = svc.stats();
+    let max_retries = (2000 + 100 * calls as u64) / 1000;
+    assert!(
+        report.retries <= max_retries,
+        "{} retries exceed the budget's ceiling of {max_retries}",
+        report.retries
+    );
+    assert!(
+        report.retry_budget_exhausted >= 1,
+        "a broke budget must be observed at least once"
+    );
+    assert!(budget.balance_m("sketch_dense") < 2000 + 100 * calls as i64);
+    for b in [blocker, filler] {
+        b.recv().unwrap().unwrap();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn admission_rejects_when_queue_wait_estimate_exceeds_deadline() {
+    // Flood a single worker so completed jobs teach the queue-wait EWMA a
+    // multi-hundred-µs wait, then ask for a deadline far below it: the
+    // admission controller must refuse at submit, before the queue grows.
+    let svc = start(1, 4096);
+    let h = svc.handle();
+    let mut rng = Rng::seed_from_u64(5);
+    let cp = CpTensor::randn(&mut rng, &[10, 10, 10], 4);
+    let mut rxs = Vec::new();
+    for _ in 0..60 {
+        rxs.push(h.submit(Request::SketchCp { cp: cp.clone(), j: 256 }).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let report = svc.stats();
+    let est = report.queue_wait_estimate_us;
+    assert!(est > 100, "the flood must leave a visible queue-wait estimate, got {est}µs");
+    let before = report.total_completed;
+    match h.call_with_deadline(
+        Request::SketchCp { cp: cp.clone(), j: 256 },
+        Instant::now() + Duration::from_micros(100),
+    ) {
+        Err(ServiceError::DeadlineExceeded) => {}
+        other => panic!("admission must refuse an unmeetable deadline, got {other:?}"),
+    }
+    let report = svc.stats();
+    assert!(report.shed_submit >= 1, "refusal must be booked at the submit stage");
+    assert_eq!(report.total_completed, before, "the refused job must not execute");
+    // A generous deadline sails through the same controller.
+    let resp = h
+        .call_with_deadline(
+            Request::SketchCp { cp, j: 256 },
+            Instant::now() + Duration::from_secs(30),
+        )
+        .expect("a generous deadline must be admitted");
+    let Response::Sketch(v) = resp else { panic!("wrong response kind") };
+    assert!(v.iter().all(|x| x.is_finite()));
+    svc.shutdown();
+}

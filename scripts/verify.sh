@@ -35,6 +35,16 @@ echo "== merge conformance + linearity suites =="
 cargo test -q --test merge_conformance
 cargo test -q --lib sketch::merge::
 
+echo "== resilience suites (deadlines + failpoints chaos) =="
+# Deadline/admission/retry semantics run in tier-1 above; the chaos suite
+# needs the failpoints feature (compiled out of default builds), so it gets
+# its own pass here along with the fault-registry unit tests. Named for the
+# same reason as the merge gate: a log grep must show the overload-resilience
+# contracts ran.
+cargo test -q --test deadlines
+cargo test -q -p fcs --features failpoints --test chaos
+cargo test -q -p fcs --features failpoints --lib fault::
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== bench smoke (FCS_BENCH_QUICK=1) =="
     for bench in perf_hotpath ablation_hash fig1_rtpm_synthetic fig2_watercolors \
