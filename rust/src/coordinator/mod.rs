@@ -47,5 +47,7 @@ pub mod stats;
 
 pub use msg::{Request, Response, ServiceError, SketchMethod};
 pub use retry::{BudgetConfig, RetryBudget, RetryPolicy};
-pub use service::{job_rng, Service, ServiceConfig, ServiceHandle, WorkerState};
+pub use service::{
+    job_rng, should_respawn, Service, ServiceConfig, ServiceHandle, WorkerState,
+};
 pub use stats::{FlightReport, PlanCacheReport, ShedStage, Stats, StatsReport};

@@ -21,8 +21,8 @@
 //! per *service*, not per caller — see
 //! [`ServiceHandle::call_with_retry`](super::service::ServiceHandle::call_with_retry).
 
+use crate::sync::atomic::{AtomicI64, Ordering};
 use crate::util::prng::Rng;
-use std::sync::atomic::{AtomicI64, Ordering};
 use std::time::Duration;
 
 /// Bounded, jittered exponential backoff schedule.
@@ -116,8 +116,11 @@ impl RetryBudget {
     /// may briefly overshoot); it bounds banked burst, not correctness.
     pub fn deposit(&self, op: &str) {
         let slot = self.slot(op);
+        // ordering: Relaxed — RMW keeps the balance books exact; no other
+        // memory is published alongside (loom model: `retry_budget_books`).
         let after = slot.fetch_add(self.cfg.deposit_m, Ordering::Relaxed) + self.cfg.deposit_m;
         if after > self.cfg.cap_m {
+            // ordering: Relaxed — clamp correction on the same counter.
             slot.fetch_sub(after - self.cfg.cap_m, Ordering::Relaxed);
         }
     }
@@ -127,8 +130,13 @@ impl RetryBudget {
     /// of amplifying the overload.
     pub fn try_withdraw(&self, op: &str) -> bool {
         let slot = self.slot(op);
+        // ordering: Relaxed — debit-then-refund keeps the net effect of a
+        // refused withdraw exactly zero under any interleaving; transient
+        // negative balances between the two RMWs are part of the contract
+        // (loom model: `retry_budget_books`).
         let prev = slot.fetch_sub(self.cfg.withdraw_m, Ordering::Relaxed);
         if prev < self.cfg.withdraw_m {
+            // ordering: Relaxed — exact refund on the same counter.
             slot.fetch_add(self.cfg.withdraw_m, Ordering::Relaxed);
             return false;
         }
@@ -137,6 +145,8 @@ impl RetryBudget {
 
     /// Current balance for an op class, in millitokens.
     pub fn balance_m(&self, op: &str) -> i64 {
+        // ordering: Relaxed — advisory snapshot; may observe a transient
+        // mid-withdraw debit, which only underreports the balance.
         self.slot(op).load(Ordering::Relaxed)
     }
 }

@@ -72,9 +72,9 @@ use crate::sketch::common::{apply_cp_fused, sketch_dense_into, FusedCpJob};
 use crate::sketch::{CountSketch, SpectralSketchCore};
 use crate::tensor::{CpTensor, Tensor};
 use crate::util::prng::Rng;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{Arc, Mutex};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -526,6 +526,11 @@ impl Service {
     /// and respawn a thread into a draining pool.
     pub fn shutdown(self) {
         let Service { handle, batcher, supervisor, stop, workers } = self;
+        // ordering: SeqCst — the latch must be globally visible before the
+        // stop sentinels below can be consumed: a worker that exits on a
+        // sentinel is joined by the supervisor, whose post-join
+        // `should_respawn` re-check must already see the latch raised
+        // (loom model: `supervisor_latch_no_respawn_after_stop`).
         stop.store(true, Ordering::SeqCst);
         let _ = handle.batch_tx.send(QueueMsg::Stop);
         for _ in 0..workers {
@@ -550,12 +555,28 @@ const SUPERVISE_INTERVAL: Duration = Duration::from_millis(10);
 /// exited *cleanly* (stop sentinel, closed queue) is joined and its slot
 /// retired: clean exits are lifecycle, not failures. Returns when the stop
 /// latch is raised (joining every survivor) or when every slot has retired.
+/// The supervisor's respawn decision for one finished slot, factored out so
+/// the loom suite (`tests/loom_models.rs`) model-checks the exact predicate
+/// the supervisor runs: respawn only a *crashed* worker, and never once the
+/// stop latch is raised — a crash racing shutdown must not spawn a thread
+/// into a pool being torn down.
+pub fn should_respawn(crashed: bool, stop: &AtomicBool) -> bool {
+    // ordering: SeqCst — pairs with the SeqCst latch store in
+    // `Service::shutdown`; because the worker's exit (sentinel consumption)
+    // happens after that store, the join that reported `crashed` cannot
+    // complete before the latch became visible, so this load can never miss
+    // a raised latch for a sentinel-triggered exit.
+    crashed && !stop.load(Ordering::SeqCst)
+}
+
 fn supervisor_loop(
     ctx: WorkerCtx,
     mut slots: Vec<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
 ) {
     loop {
+        // ordering: SeqCst — pairs with the shutdown latch store; see
+        // `should_respawn`.
         if stop.load(Ordering::SeqCst) {
             for h in slots.iter_mut().filter_map(Option::take) {
                 let _ = h.join();
@@ -570,7 +591,7 @@ fn supervisor_loop(
                     slots[w].take().expect("slot checked Some above").join().is_err();
                 // Re-check the latch after the join: a crash racing shutdown
                 // must not respawn a worker into a pool being torn down.
-                if crashed && !stop.load(Ordering::SeqCst) {
+                if should_respawn(crashed, &stop) {
                     slots[w] = Some(ctx.spawn(w));
                     ctx.stats.record_respawn();
                     alive += 1;
@@ -1085,6 +1106,8 @@ fn worker_loop(
             // draining at the first sentinel — it is *this* worker's; eating
             // further ones could leave a sibling running.
             let flush_at = Instant::now() + FUSE_MAX_WAIT;
+            // ordering: Relaxed — advisory saturation signal, re-read every
+            // iteration; a stale value only mis-sizes one drain decision.
             while busy.load(Ordering::Relaxed) + 1 >= pool_size
                 && batch.len() < WORKER_DRAIN
                 && !stopping
@@ -1119,6 +1142,9 @@ fn worker_loop(
         // correctness (every job gets its own hash draw), so use the
         // in-place unstable sort — no allocation in the drain loop.
         batch.sort_unstable_by_key(|job| job.req.shape_key());
+        // ordering: Relaxed — advisory saturation counter (see drain loop);
+        // the RMW pairs exactly with BusyGuard's decrement, so the count
+        // can sag or lag but never drift.
         busy.fetch_add(1, Ordering::Relaxed);
         // Drop guard: if anything below panics mid-batch, the unwind must
         // still decrement the busy counter, or every surviving worker would
@@ -1173,6 +1199,8 @@ fn execute_flight(
     debug_assert!((1..=WORKER_DRAIN).contains(&width));
     let mut req_ids = [0u64; WORKER_DRAIN];
     for slot in req_ids.iter_mut().take(width) {
+        // ordering: Relaxed — RMW uniqueness is all `job_rng` keying needs;
+        // cross-worker draw order is inherently racy and meaningless.
         *slot = counter.fetch_add(1, Ordering::Relaxed);
     }
     let exec_start = Instant::now();
@@ -1376,6 +1404,9 @@ struct BusyGuard<'a>(&'a AtomicUsize);
 
 impl Drop for BusyGuard<'_> {
     fn drop(&mut self) {
+        // ordering: Relaxed — pairs with the worker loop's increment on the
+        // advisory saturation counter; exactness comes from the RMW pair,
+        // not from publication order.
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }

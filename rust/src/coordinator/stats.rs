@@ -8,9 +8,9 @@
 //! ([`crate::obs::metrics`]). Single-sourcing the recording points is what
 //! keeps [`StatsReport`] and a scrape from ever disagreeing about counts.
 
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Mutex;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 /// Where a deadline violation was caught — the index into the
@@ -32,7 +32,10 @@ pub enum ShedStage {
 /// newest sample overwrites the oldest, so percentiles always describe the
 /// most recent `RESERVOIR_CAP` samples instead of freezing on the first
 /// 100k a long-running service ever saw.
-const RESERVOIR_CAP: usize = 100_000;
+/// (Under `--cfg loom` the cap shrinks so the wraparound models in
+/// `tests/loom_models.rs` can overwrite slots within a tractable schedule
+/// budget; the ring arithmetic is cap-independent.)
+const RESERVOIR_CAP: usize = if cfg!(loom) { 64 } else { 100_000 };
 
 /// Fixed-capacity ring of `f64` samples. `push` is O(1) and allocation-free
 /// once the ring has filled; `samples` returns the retained window in
@@ -252,9 +255,14 @@ impl Stats {
         // delta stalls for |diff| < 8, so a signum step keeps the estimate
         // converging all the way instead of plateauing a few µs off.
         let sample = as_u64(queue_us) as i64;
+        // ordering: Relaxed — advisory estimate; an unsynchronized
+        // load/store pair may drop a concurrent update (slower convergence),
+        // but `(prev + step).max(0)` keeps any interleaving in range
+        // (loom model: `stats_ewma_bounded_and_decays`).
         let prev = self.queue_ewma_us.load(Ordering::Relaxed) as i64;
         let delta = (sample - prev) / 8;
         let step = if delta != 0 { delta } else { (sample - prev).signum() };
+        // ordering: Relaxed — see load above; value is self-contained.
         self.queue_ewma_us.store((prev + step).max(0) as u64, Ordering::Relaxed);
     }
 
@@ -264,6 +272,8 @@ impl Stats {
     /// read-modify-write pairs may drop updates, which only slows
     /// convergence, never corrupts the value.
     pub fn queue_wait_estimate_us(&self) -> u64 {
+        // ordering: Relaxed — single self-contained value; staleness by one
+        // sample only delays admission-control reaction by one job.
         self.queue_ewma_us.load(Ordering::Relaxed)
     }
 
@@ -457,6 +467,59 @@ mod tests {
             op.p50_us
         );
         assert!(op.p99_us > 108_000.0, "p99 {} must see the newest samples", op.p99_us);
+    }
+
+    /// Concurrent companion to `reservoir_overfill_reports_recent_window`:
+    /// 8 writers push the ring past `RESERVOIR_CAP` (forcing wraparound
+    /// overwrites) while a reader snapshots percentiles mid-wrap. Every
+    /// writer only ever records values from a known lattice, so a torn
+    /// window — a snapshot exposing a partially-written slot or an
+    /// out-of-range artifact — would surface as a percentile outside the
+    /// lattice's hull or an inverted p50/p95/p99 ladder.
+    #[test]
+    fn reservoir_concurrent_wraparound_never_tears_window() {
+        use std::sync::Arc;
+        const WRITERS: usize = 8;
+        let total = RESERVOIR_CAP + 40_000; // well past one full wrap
+        let per_writer = total / WRITERS;
+        let s = Arc::new(Stats::new());
+        s.mark_started();
+        let handles: Vec<_> = (0..WRITERS)
+            .map(|w| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let v = (w + 1) as f64 * 1000.0; // lattice: 1000..=8000
+                    for _ in 0..per_writer {
+                        s.record("cs_vec", v);
+                    }
+                })
+            })
+            .collect();
+        // Snapshot mid-wrap, repeatedly, while writers are overwriting slots.
+        for _ in 0..50 {
+            let r = s.report();
+            if let Some(op) = r.per_op.iter().find(|o| o.op == "cs_vec") {
+                if op.completed == 0 {
+                    continue;
+                }
+                for (name, p) in
+                    [("p50", op.p50_us), ("p95", op.p95_us), ("p99", op.p99_us)]
+                {
+                    assert!(
+                        (1000.0..=8000.0).contains(&p),
+                        "{name} {p} escaped the written lattice — torn window"
+                    );
+                }
+                assert!(op.p50_us <= op.p95_us && op.p95_us <= op.p99_us);
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let r = s.report();
+        let op = r.per_op.iter().find(|o| o.op == "cs_vec").unwrap();
+        assert_eq!(op.completed, (per_writer * WRITERS) as u64);
+        assert!((1000.0..=8000.0).contains(&op.p50_us));
     }
 
     #[test]

@@ -64,10 +64,10 @@ pub struct FaultSpec {
 #[cfg(feature = "failpoints")]
 mod armed {
     use super::{FaultAction, FaultSpec};
+    use crate::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::{Mutex, MutexGuard, OnceLock};
     use crate::util::prng::Rng;
     use std::collections::HashMap;
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::{Mutex, OnceLock};
 
     struct Site {
         spec: FaultSpec,
@@ -77,6 +77,14 @@ mod armed {
 
     /// Count of configured sites — the lock-free "anything armed at all?"
     /// fast path every [`check`] takes before touching the registry lock.
+    ///
+    /// ARMED is purely advisory: the registry mutex is the real
+    /// synchronization, and a stale zero read only means a site armed
+    /// concurrently is first observed one evaluation later (the chaos
+    /// suites arm sites before spawning load, so nothing depends on
+    /// same-instant visibility). All operations are therefore Relaxed —
+    /// PR 10 normalized the previous unexplained SeqCst/Relaxed mix
+    /// (loom model: `fault_armed_counter_consistent`).
     static ARMED: AtomicUsize = AtomicUsize::new(0);
 
     fn registry() -> &'static Mutex<HashMap<&'static str, Site>> {
@@ -84,7 +92,7 @@ mod armed {
         REG.get_or_init(|| Mutex::new(HashMap::new()))
     }
 
-    fn lock() -> std::sync::MutexGuard<'static, HashMap<&'static str, Site>> {
+    fn lock() -> MutexGuard<'static, HashMap<&'static str, Site>> {
         // The injected Panic action fires *after* the lock is released, so
         // our own panics never poison this mutex — but a test that panics
         // for unrelated reasons while configuring must not wedge the
@@ -96,14 +104,17 @@ mod armed {
     pub fn configure(site: &'static str, spec: FaultSpec) {
         let fresh = Site { rng: Rng::seed_from_u64(spec.seed), spec, hits: 0 };
         if lock().insert(site, fresh).is_none() {
-            ARMED.fetch_add(1, Ordering::SeqCst);
+            // ordering: Relaxed — advisory fast-path count; the registry
+            // mutex (held here) is the real synchronization. See ARMED doc.
+            ARMED.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// Disarm one site.
     pub fn clear(site: &'static str) {
         if lock().remove(site).is_some() {
-            ARMED.fetch_sub(1, Ordering::SeqCst);
+            // ordering: Relaxed — advisory fast-path count. See ARMED doc.
+            ARMED.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
@@ -113,7 +124,8 @@ mod armed {
         let n = g.len();
         g.clear();
         drop(g);
-        ARMED.fetch_sub(n, Ordering::SeqCst);
+        // ordering: Relaxed — advisory fast-path count. See ARMED doc.
+        ARMED.fetch_sub(n, Ordering::Relaxed);
     }
 
     /// How many times `site`'s schedule has actually fired.
@@ -124,6 +136,9 @@ mod armed {
     /// Evaluate a site. `Panic`/`Delay` execute here; `Error`/`TruncateSlab`
     /// are returned for the caller to map onto its local failure path.
     pub fn check(site: &'static str) -> Option<FaultAction> {
+        // ordering: Relaxed — advisory fast path; a stale zero defers the
+        // first observation of a concurrent arm by one evaluation, and any
+        // nonzero read falls through to the mutex for the real answer.
         if ARMED.load(Ordering::Relaxed) == 0 {
             return None;
         }

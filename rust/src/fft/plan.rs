@@ -16,8 +16,8 @@
 
 use super::complex::{C64, ONE, ZERO};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
 
 /// Direction of the transform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -678,10 +678,16 @@ impl Planner {
             ),
         };
         if let Some(p) = map.lock().unwrap().get(&n) {
+            // ordering: Relaxed — pure tally; the cache itself is guarded by
+            // the map mutex, so the counter orders nothing (PR 10 audit:
+            // counters were already weakest-correct, now documented).
             hits.fetch_add(1, Ordering::Relaxed);
             obs_hits.inc();
             return p.clone();
         }
+        // ordering: Relaxed — pure tally; see hit counter above. Two racing
+        // builders of one length each book a miss (both did build), even
+        // though `or_insert` keeps only one plan.
         misses.fetch_add(1, Ordering::Relaxed);
         obs_misses.inc();
         let built = Arc::new(build(n));
@@ -711,6 +717,9 @@ impl Planner {
 
     /// Per-cache `(hits, misses)`, forward vs real.
     pub fn cache_counters_by_cache(&self) -> PlanCacheCounters {
+        // ordering: Relaxed (all four) — snapshot of independent tallies; a
+        // scrape racing a lookup may skew hits/misses by one, acceptable
+        // for rate reporting.
         PlanCacheCounters {
             forward: (
                 self.fwd_hits.load(Ordering::Relaxed),
@@ -726,7 +735,7 @@ impl Planner {
 
 /// Global planner instance.
 pub fn global_planner() -> &'static Planner {
-    static PLANNER: std::sync::OnceLock<Planner> = std::sync::OnceLock::new();
+    static PLANNER: crate::sync::OnceLock<Planner> = crate::sync::OnceLock::new();
     PLANNER.get_or_init(Planner::new)
 }
 

@@ -13,6 +13,13 @@
 //!   compression pipelines, PJRT runtime, and the serving coordinator —
 //!   Python is never on the request path.
 
+// The serving stack's concurrency story is machine-checked (loom models,
+// Miri, TSan — see EXPERIMENTS.md §Static analysis); both locks hold today
+// with zero fallout and `scripts/lint_invariants.py` fails CI if the forbid
+// ever disappears.
+#![forbid(unsafe_code)]
+#![deny(unreachable_pub)]
+
 pub mod bench;
 pub mod compress;
 pub mod coordinator;
@@ -27,5 +34,6 @@ pub mod metrics;
 pub mod obs;
 pub mod runtime;
 pub mod sketch;
+pub mod sync;
 pub mod trn;
 pub mod util;

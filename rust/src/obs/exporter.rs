@@ -10,8 +10,8 @@ use super::export::render_global;
 use crate::fault::FaultAction;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Spans returned by `GET /traces`.
@@ -57,6 +57,9 @@ impl Exporter {
     /// Stop the accept loop and join the serving thread. Idempotent.
     pub fn shutdown(&mut self) {
         if let Some(handle) = self.handle.take() {
+            // ordering: SeqCst — must be globally visible before the wakeup
+            // connection below lands, or the accept loop could consume the
+            // wakeup, miss the flag, and block on accept forever.
             self.stop.store(true, Ordering::SeqCst);
             // Unblock the (blocking) accept with a throwaway connection.
             let _ = TcpStream::connect(self.addr);
@@ -73,6 +76,8 @@ impl Drop for Exporter {
 
 fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
     for conn in listener.incoming() {
+        // ordering: SeqCst — pairs with the shutdown store; the accept that
+        // delivered the wakeup connection must observe the flag set.
         if stop.load(Ordering::SeqCst) {
             return;
         }

@@ -21,8 +21,8 @@ pub mod registry;
 pub mod trace;
 
 use registry::{Counter, Gauge, Histogram};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 /// Known coordinator operations, in registration order. `"other"` is the
@@ -417,6 +417,8 @@ static STAGE_FORCE: AtomicBool = AtomicBool::new(false);
 /// Force the next [`StageTimer::sample`] to be live regardless of the
 /// sampling tick — test hook for deterministic coverage.
 pub fn force_next_stage_sample() {
+    // ordering: Relaxed — advisory test hook; the consuming swap is atomic,
+    // and it is fine for the forced sample to land on any nearby dispatch.
     STAGE_FORCE.store(true, Ordering::Relaxed);
 }
 
@@ -436,7 +438,11 @@ impl StageTimer {
     /// forced by [`force_next_stage_sample`]).
     #[inline]
     pub fn sample() -> StageTimer {
+        // ordering: Relaxed — atomic swap guarantees exactly one timer
+        // consumes a force; which dispatch wins is deliberately unspecified.
         let forced = STAGE_FORCE.swap(false, Ordering::Relaxed);
+        // ordering: Relaxed — sampling tick; exact interleaving of ticks
+        // across threads only perturbs which dispatches are sampled.
         let tick = STAGE_TICK.fetch_add(1, Ordering::Relaxed);
         if forced || tick % STAGE_SAMPLE_EVERY == 0 {
             StageTimer { acc: Some([0; 4]) }

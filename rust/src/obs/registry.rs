@@ -13,8 +13,8 @@
 //! array, which keeps `observe` branch-free apart from the leading-zeros
 //! bucket index.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex, OnceLock};
 
 /// Number of histogram buckets: 27 finite power-of-two bounds plus `+Inf`.
 pub const HIST_BUCKETS: usize = 28;
@@ -48,16 +48,19 @@ impl Counter {
 
     #[inline]
     pub fn inc(&self) {
+        // ordering: Relaxed — independent monotone tally; scrapes tolerate lag.
         self.value.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add(&self, n: u64) {
+        // ordering: Relaxed — independent monotone tally; scrapes tolerate lag.
         self.value.fetch_add(n, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — point-in-time read; no cross-metric consistency claimed.
         self.value.load(Ordering::Relaxed)
     }
 }
@@ -75,11 +78,13 @@ impl Gauge {
 
     #[inline]
     pub fn set(&self, v: i64) {
+        // ordering: Relaxed — last-writer-wins snapshot value; no ordering consumers.
         self.value.store(v, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add(&self, d: i64) {
+        // ordering: Relaxed — atomic RMW keeps the sum exact; publication order irrelevant.
         self.value.fetch_add(d, Ordering::Relaxed);
     }
 
@@ -95,6 +100,7 @@ impl Gauge {
 
     #[inline]
     pub fn get(&self) -> i64 {
+        // ordering: Relaxed — point-in-time read; no cross-metric consistency claimed.
         self.value.load(Ordering::Relaxed)
     }
 }
@@ -122,16 +128,22 @@ impl Histogram {
 
     #[inline]
     pub fn observe(&self, v: u64) {
+        // ordering: Relaxed — bucket and sum are each exact under RMW; a scrape
+        // between the two updates sees count/sum skewed by one observation,
+        // which Prometheus semantics explicitly permit.
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — see bucket update above.
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
     /// Non-cumulative per-bucket counts (index 27 is `+Inf`).
     pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        // ordering: Relaxed — render-time sample; buckets are independently exact.
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 
     pub fn sum(&self) -> u64 {
+        // ordering: Relaxed — render-time sample.
         self.sum.load(Ordering::Relaxed)
     }
 

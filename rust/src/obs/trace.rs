@@ -14,15 +14,17 @@
 //! after the ring's first fill, and contention only between workers that
 //! share a shard.
 
+use crate::sync::{Mutex, OnceLock};
 use crate::util::json::Json;
-use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 /// Number of ring shards; workers map onto shards by `worker % TRACE_SHARDS`.
 pub const TRACE_SHARDS: usize = 8;
 
-/// Spans retained per shard (newest overwrite oldest).
-pub const TRACE_RING_CAP: usize = 512;
+/// Spans retained per shard (newest overwrite oldest). Under `--cfg loom`
+/// the ring shrinks so `tests/loom_models.rs` exercises wraparound within a
+/// tractable schedule budget; the ring arithmetic is cap-independent.
+pub const TRACE_RING_CAP: usize = if cfg!(loom) { 8 } else { 512 };
 
 /// One completed request, as seen from the worker that replied to it.
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,37 @@
+//! Concurrency-primitive switchboard for the lock-free serving stack.
+//!
+//! Every lock-free component in the crate (`obs::registry`, `obs::trace`,
+//! `coordinator::stats`, `coordinator::retry`, `fault`, the `fft` plan-cache
+//! counters, and the service's queue-depth/stop-latch atomics) imports its
+//! primitives from here instead of `std::sync`:
+//!
+//! * Normal builds re-export `std::sync` — zero-cost, identical codegen.
+//! * Under `RUSTFLAGS="--cfg loom"` the same names resolve to the vendored
+//!   loom facade (`rust/vendor/loom`), whose atomics and mutexes insert
+//!   scheduling points so `tests/loom_models.rs` can replay each component's
+//!   critical interleavings across many explored schedules. On a networked
+//!   host the facade can be swapped for the real `loom = "0.7"` model checker
+//!   without touching this module's consumers.
+//!
+//! Only the types the crate actually uses are re-exported; additions should
+//! land in both arms so the loom build never drifts from the std one.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering,
+    };
+}

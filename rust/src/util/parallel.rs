@@ -3,8 +3,8 @@
 //! Used for the D independent sketch repetitions, the rank fan-out of the
 //! spectral CP paths, and embarrassingly-parallel bench sweeps.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
 
 /// Number of worker threads to use by default (logical cores, capped).
 pub fn default_threads() -> usize {
@@ -35,6 +35,9 @@ where
             scope.spawn(|| {
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
+                    // ordering: Relaxed — work distribution only: RMW makes
+                    // each index unique, and `scope` joins (a full barrier)
+                    // before any result is read.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;

@@ -1,0 +1,413 @@
+//! Model-checked interleavings for the lock-free serving stack.
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (the CI `analysis` job runs
+//! `cargo test --features failpoints --test loom_models` with that flag); a
+//! normal `cargo test` builds this target empty. Every component below pulls
+//! its primitives from `fcs::sync`, which under `--cfg loom` resolves to the
+//! vendored loom facade: each atomic op and mutex acquisition is a possible
+//! preemption point, and `loom::model` replays every closure across many
+//! seeded schedules (`FCS_LOOM_ITERS` tunes the budget). On a networked
+//! host the facade swaps for the real `loom = "0.7"` exhaustive checker
+//! without touching this file.
+//!
+//! Model matrix (component × property) — see EXPERIMENTS.md §Static
+//! analysis for the prose version:
+//!
+//! | component              | property under concurrency                     |
+//! |------------------------|------------------------------------------------|
+//! | `obs::registry`        | render never sees a half-registered family     |
+//! | `obs::trace`           | record vs dump stays structurally ordered      |
+//! | `coordinator::stats`   | EWMA never negative, decays to zero            |
+//! | `coordinator::stats`   | reservoir wraparound never tears a window      |
+//! | `coordinator::retry`   | deposit/withdraw books exact, refusals refund  |
+//! | `fault`                | ARMED fast path consistent with the registry   |
+//! | `coordinator::service` | stop latch: no respawn after shutdown, one per crash |
+
+#![cfg(loom)]
+
+use fcs::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use fcs::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------------
+// obs::registry — registration vs render
+// ---------------------------------------------------------------------------
+
+/// Two threads register counter families while a third renders. A render
+/// must only ever observe fully-formed entries (name/help/labels all
+/// consistent with one of the two writers), in registration order, and the
+/// final state must contain every family exactly once.
+#[test]
+fn registry_render_never_sees_half_registered_family() {
+    loom::model(|| {
+        let reg = Arc::new(fcs::obs::registry::Registry::new());
+        let r1 = Arc::clone(&reg);
+        let r2 = Arc::clone(&reg);
+        let r3 = Arc::clone(&reg);
+        let t1 = loom::thread::spawn(move || {
+            let c = r1.counter("fcs_model_a_total", "help a", "op=\"a\"");
+            c.inc();
+        });
+        let t2 = loom::thread::spawn(move || {
+            let c = r2.counter("fcs_model_b_total", "help b", "");
+            c.add(2);
+        });
+        let reader = loom::thread::spawn(move || {
+            r3.with_entries(|entries| {
+                for e in entries {
+                    match e.name {
+                        "fcs_model_a_total" => {
+                            assert_eq!(e.help, "help a");
+                            assert_eq!(e.labels, "op=\"a\"");
+                        }
+                        "fcs_model_b_total" => {
+                            assert_eq!(e.help, "help b");
+                            assert_eq!(e.labels, "");
+                        }
+                        other => panic!("torn registry entry: {other:?}"),
+                    }
+                }
+            });
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        reader.join().unwrap();
+        reg.with_entries(|entries| {
+            assert_eq!(entries.len(), 2, "each family registered exactly once");
+            let mut names: Vec<_> = entries.iter().map(|e| e.name).collect();
+            names.sort_unstable();
+            assert_eq!(names, ["fcs_model_a_total", "fcs_model_b_total"]);
+        });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// obs::trace — record vs dump
+// ---------------------------------------------------------------------------
+
+/// Two workers record spans (wrapping their shared ring: span count exceeds
+/// the loom-shrunk `TRACE_RING_CAP`) while a reader dumps. Every span a
+/// dump observes must be structurally ordered (submit ≤ queue ≤ flight ≤
+/// reply — the record-time clamp invariant) and `recent` must come back
+/// reply-sorted; no interleaving may expose a torn span.
+#[test]
+fn trace_ring_record_vs_dump_structurally_ordered() {
+    use fcs::obs::trace::{TraceBook, TraceSpan, TRACE_RING_CAP};
+    fn span(req_id: u64, base: u64) -> TraceSpan {
+        TraceSpan {
+            req_id,
+            op: "sketch_cp",
+            submit_us: base,
+            queue_us: base + 1,
+            flight_start_us: base + 2,
+            reply_us: base + 3,
+            width: 1,
+            ok: true,
+        }
+    }
+    loom::model(|| {
+        let book = Arc::new(TraceBook::new());
+        let writers: Vec<_> = (0..2u64)
+            .map(|w| {
+                let book = Arc::clone(&book);
+                loom::thread::spawn(move || {
+                    // Both land on shard 0 (worker 0 and TRACE_SHARDS), so the
+                    // shared ring wraps: 2 * (CAP/2 + 2) > CAP.
+                    for i in 0..(TRACE_RING_CAP as u64 / 2 + 2) {
+                        book.record(
+                            (w as usize) * fcs::obs::trace::TRACE_SHARDS,
+                            span(w * 1000 + i, 10 * i),
+                        );
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let book = Arc::clone(&book);
+            loom::thread::spawn(move || {
+                let spans = book.recent(TRACE_RING_CAP);
+                for s in &spans {
+                    assert!(
+                        s.submit_us <= s.queue_us
+                            && s.queue_us <= s.flight_start_us
+                            && s.flight_start_us <= s.reply_us,
+                        "torn span: {s:?}"
+                    );
+                }
+                for w in spans.windows(2) {
+                    assert!(w[0].reply_us <= w[1].reply_us, "recent() not reply-sorted");
+                }
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        reader.join().unwrap();
+        // Post-join: ring holds at most CAP spans, all structurally ordered.
+        let final_spans = book.recent(2 * TRACE_RING_CAP);
+        assert!(final_spans.len() <= TRACE_RING_CAP);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator::stats — EWMA bounds + decay
+// ---------------------------------------------------------------------------
+
+/// Concurrent `record_job` streams never drive the queue-wait EWMA negative
+/// (it is stored as `u64`; the model asserts it also never exceeds the max
+/// sample ever offered), and once both streams go quiet at zero queue-wait,
+/// the signum step decays the estimate all the way to zero — dropped
+/// updates from racing read-modify-write pairs may slow convergence but
+/// must never corrupt the value.
+#[test]
+fn stats_ewma_bounded_and_decays() {
+    loom::model(|| {
+        let stats = Arc::new(fcs::coordinator::Stats::new());
+        const MAX_SAMPLE: u64 = 800;
+        let writers: Vec<_> = (0..2)
+            .map(|w| {
+                let stats = Arc::clone(&stats);
+                loom::thread::spawn(move || {
+                    let q = if w == 0 { 500.0 } else { MAX_SAMPLE as f64 };
+                    for _ in 0..4 {
+                        stats.record_job("sketch_cp", q + 100.0, q, 100.0);
+                    }
+                })
+            })
+            .collect();
+        let observer = {
+            let stats = Arc::clone(&stats);
+            loom::thread::spawn(move || {
+                for _ in 0..4 {
+                    let est = stats.queue_wait_estimate_us();
+                    assert!(est <= MAX_SAMPLE, "EWMA {est} overshot the max sample");
+                }
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        observer.join().unwrap();
+        assert!(stats.queue_wait_estimate_us() <= MAX_SAMPLE);
+        // Quiet stream at zero queue-wait: the signum step must reach 0
+        // exactly (the α=1/8 truncated step alone would plateau near 7).
+        for _ in 0..2000 {
+            stats.record_job("sketch_cp", 100.0, 0.0, 100.0);
+        }
+        assert_eq!(stats.queue_wait_estimate_us(), 0, "EWMA must decay to zero when idle");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator::stats — reservoir ring wraparound
+// ---------------------------------------------------------------------------
+
+/// Writers push a latticed value stream past `RESERVOIR_CAP` (loom-shrunk,
+/// so slots get overwritten) while a reader snapshots percentiles mid-wrap.
+/// A torn window would surface as a percentile outside the lattice hull or
+/// an inverted p50/p95/p99 ladder.
+#[test]
+fn stats_reservoir_wraparound_never_tears_window() {
+    loom::model(|| {
+        let stats = Arc::new(fcs::coordinator::Stats::new());
+        stats.mark_started();
+        let writers: Vec<_> = (0..2)
+            .map(|w| {
+                let stats = Arc::clone(&stats);
+                loom::thread::spawn(move || {
+                    let v = (w + 1) as f64 * 1000.0; // lattice: {1000, 2000}
+                    for _ in 0..48 {
+                        // 2 × 48 > loom RESERVOIR_CAP (64): the ring wraps.
+                        stats.record("cs_vec", v);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let stats = Arc::clone(&stats);
+            loom::thread::spawn(move || {
+                for _ in 0..3 {
+                    let r = stats.report();
+                    if let Some(op) = r.per_op.iter().find(|o| o.op == "cs_vec") {
+                        if op.completed == 0 {
+                            continue;
+                        }
+                        for p in [op.p50_us, op.p95_us, op.p99_us] {
+                            assert!(
+                                (1000.0..=2000.0).contains(&p),
+                                "percentile {p} escaped the lattice — torn window"
+                            );
+                        }
+                        assert!(op.p50_us <= op.p95_us && op.p95_us <= op.p99_us);
+                    }
+                }
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        reader.join().unwrap();
+        let r = stats.report();
+        let op = r.per_op.iter().find(|o| o.op == "cs_vec").unwrap();
+        assert_eq!(op.completed, 96);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator::retry — budget books
+// ---------------------------------------------------------------------------
+
+/// Depositors and withdrawers race on one op-class bucket. The books must
+/// balance exactly: final = initial + deposit_m·deposits − withdraw_m·grants
+/// (every refusal refunds its debit in full), under any interleaving. The
+/// cap is set unreachably high so the clamp path cannot blur the equation.
+#[test]
+fn retry_budget_books() {
+    use fcs::coordinator::retry::{BudgetConfig, RetryBudget};
+    loom::model(|| {
+        let cfg = BudgetConfig {
+            initial_m: 2_000,
+            deposit_m: 100,
+            withdraw_m: 1_000,
+            cap_m: 1_000_000,
+        };
+        let budget = Arc::new(RetryBudget::new(cfg));
+        const DEPOSITS: i64 = 6;
+        let depositor = {
+            let budget = Arc::clone(&budget);
+            loom::thread::spawn(move || {
+                for _ in 0..DEPOSITS {
+                    budget.deposit("sketch_dense");
+                }
+            })
+        };
+        let withdrawers: Vec<_> = (0..2)
+            .map(|_| {
+                let budget = Arc::clone(&budget);
+                loom::thread::spawn(move || {
+                    let mut granted = 0i64;
+                    for _ in 0..3 {
+                        if budget.try_withdraw("sketch_dense") {
+                            granted += 1;
+                        }
+                    }
+                    granted
+                })
+            })
+            .collect();
+        depositor.join().unwrap();
+        let granted: i64 = withdrawers.into_iter().map(|t| t.join().unwrap()).sum();
+        let expected = cfg.initial_m + cfg.deposit_m * DEPOSITS - cfg.withdraw_m * granted;
+        assert_eq!(
+            budget.balance_m("sketch_dense"),
+            expected,
+            "books must balance: refusals refund exactly"
+        );
+        // Isolation: a different op class was never touched.
+        assert_eq!(budget.balance_m("cs_vec"), cfg.initial_m);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fault — ARMED fast path vs registry
+// ---------------------------------------------------------------------------
+
+/// Arm/disarm races against hot-path checks: the advisory ARMED counter
+/// must end exactly consistent with the registry contents, checks on
+/// unarmed sites must never fire, and checks on an armed always-fire site
+/// must fire whenever the registry lock shows it armed. The fault registry
+/// is process-global, so the model brackets itself with `clear_all` and
+/// uses sites no other test touches.
+#[cfg(feature = "failpoints")]
+#[test]
+fn fault_armed_counter_consistent() {
+    use fcs::fault::{self, FaultAction, FaultSpec};
+    const SPEC: FaultSpec =
+        FaultSpec { action: FaultAction::Error, prob: 1.0, max_hits: None, seed: 7 };
+    loom::model(|| {
+        fault::clear_all();
+        let armer = loom::thread::spawn(move || {
+            fault::configure("loom_site_a", SPEC);
+            fault::configure("loom_site_b", SPEC);
+            fault::clear("loom_site_b");
+        });
+        let checker = loom::thread::spawn(move || {
+            for _ in 0..4 {
+                // Never configured: must never fire, armed or not.
+                assert!(fault::check("loom_site_never").is_none());
+                // May race the arm: allowed to be None (not yet visible) or
+                // the configured Error — anything else is a torn schedule.
+                match fault::check("loom_site_a") {
+                    None | Some(FaultAction::Error) => {}
+                    other => panic!("unexpected action {other:?}"),
+                }
+            }
+        });
+        armer.join().unwrap();
+        checker.join().unwrap();
+        // Post-join quiescence: site a armed, site b cleared; an armed
+        // always-fire site must now fire every evaluation.
+        assert!(matches!(fault::check("loom_site_a"), Some(FaultAction::Error)));
+        assert!(fault::check("loom_site_b").is_none());
+        let before = fault::hits("loom_site_a");
+        let _ = fault::check("loom_site_a");
+        assert_eq!(fault::hits("loom_site_a"), before + 1);
+        fault::clear_all();
+        // ARMED drained to zero: the fast path must short-circuit again
+        // (an armed-count leak would keep routing checks to the registry).
+        assert!(fault::check("loom_site_a").is_none());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator::service — stop latch vs respawn
+// ---------------------------------------------------------------------------
+
+/// The supervisor's `should_respawn` predicate racing shutdown: a crashed
+/// slot is claimed (taken) at most once, so at most one respawn can ever
+/// happen per crash; once the stop latch is raised and observed, no
+/// further respawn is possible (the latch is sticky); and a sentinel-clean
+/// exit (crashed = false) never respawns regardless of the latch.
+#[test]
+fn supervisor_latch_no_respawn_after_stop() {
+    use fcs::coordinator::should_respawn;
+    loom::model(|| {
+        let stop = Arc::new(AtomicBool::new(false));
+        // One crashed worker slot, swept by two racing supervisor passes —
+        // `take` models `slots[w].take()` claiming the dead thread's join.
+        let crashed_slot = Arc::new(Mutex::new(Some(())));
+        let spawns = Arc::new(AtomicUsize::new(0));
+        let sweeps: Vec<_> = (0..2)
+            .map(|_| {
+                let stop = Arc::clone(&stop);
+                let slot = Arc::clone(&crashed_slot);
+                let spawns = Arc::clone(&spawns);
+                loom::thread::spawn(move || {
+                    let crashed = slot.lock().unwrap().take().is_some();
+                    if should_respawn(crashed, &stop) {
+                        // ordering: Relaxed — model bookkeeping; read after join.
+                        spawns.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Clean exits never respawn, latched or not.
+                    assert!(!should_respawn(false, &stop));
+                })
+            })
+            .collect();
+        let shutdown = {
+            let stop = Arc::clone(&stop);
+            loom::thread::spawn(move || {
+                // ordering: SeqCst — mirrors `Service::shutdown`'s latch store.
+                stop.store(true, Ordering::SeqCst);
+            })
+        };
+        for t in sweeps {
+            t.join().unwrap();
+        }
+        shutdown.join().unwrap();
+        // At most one sweep claimed the crash, so at most one respawn —
+        // and possibly zero, when the latch won the race.
+        // ordering: Relaxed — all writers joined above; no concurrency left.
+        assert!(spawns.load(Ordering::Relaxed) <= 1, "double-spawned one crash");
+        // Sticky latch: after shutdown joined, a crash can never respawn.
+        assert!(!should_respawn(true, &stop));
+    });
+}

@@ -1,0 +1,258 @@
+//! Offline, API-compatible subset of the [`loom`] model checker.
+//!
+//! The real loom crate exhaustively enumerates thread interleavings under the
+//! C11 memory model. This container builds fully offline, so the crate cannot
+//! be fetched; this facade keeps the *same API surface* (`loom::model`,
+//! `loom::thread`, `loom::sync::*`, `loom::sync::atomic::*`) backed by std
+//! primitives plus a **randomized-preemption explorer**: every atomic
+//! operation and every `Mutex::lock` passes through [`sched::point`], which —
+//! while a `model()` run is active — yields the OS scheduler with a
+//! seed-derived probability. Each `model()` invocation replays the closure
+//! across many seeds (default 64, `FCS_LOOM_ITERS` overrides), so a suite run
+//! explores a broad sample of interleavings rather than the single lucky one
+//! an unperturbed std run would see.
+//!
+//! Divergences from real loom, chosen deliberately:
+//!
+//! * Exploration is probabilistic, not exhaustive — assertions hold over the
+//!   sampled schedules, not a proof over all of them. Swapping this facade
+//!   for `loom = "0.7"` on a networked host upgrades the same test file to a
+//!   real exhaustive check with zero source changes.
+//! * Atomic constructors are `const fn` (real loom's are not), so the crate's
+//!   `static` atomics keep working untouched under `--cfg loom`.
+//! * There is no modeled memory order — operations execute with the ordering
+//!   the caller requested on real hardware. TSan (see CI `analysis` jobs)
+//!   covers the ordering-bug class this facade cannot.
+
+/// Maximum threads a single model may spawn (matches real loom's default).
+pub const MAX_THREADS: usize = 4;
+
+pub mod sched {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+    /// Nonzero while a `model()` run is active (count of live models; models
+    /// never nest, but keeping a count makes the facade panic-safe).
+    pub(crate) static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+    /// Seed for the current model iteration; mixed into every thread's local
+    /// preemption stream so different iterations explore different schedules.
+    pub(crate) static ITER_SEED: AtomicU32 = AtomicU32::new(0);
+
+    thread_local! {
+        static LOCAL_RNG: Cell<u32> = const { Cell::new(0) };
+    }
+
+    /// A possible preemption point. Called before every facade atomic op and
+    /// mutex acquisition. No-op unless a model is running.
+    pub fn point() {
+        if ACTIVE.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let yielded = LOCAL_RNG.with(|cell| {
+            let mut x = cell.get();
+            if x == 0 {
+                // Lazily mix the iteration seed with a per-thread component so
+                // sibling threads in one iteration don't preempt in lockstep.
+                let tid = std::thread::current().id();
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                std::hash::Hash::hash(&tid, &mut h);
+                x = ((std::hash::Hasher::finish(&h) as u32)
+                    ^ ITER_SEED.load(Ordering::Relaxed))
+                    | 1;
+            }
+            // xorshift32 keeps this dependency-free and deterministic per seed.
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            cell.set(x);
+            // Preempt roughly 1-in-4 points: frequent enough to shake out
+            // windows a straight run never opens, rare enough to keep a
+            // 64-iteration model suite fast.
+            x % 4 == 0
+        });
+        if yielded {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Run `f` under the explorer. The closure is executed once per iteration
+/// (default 64; `FCS_LOOM_ITERS` overrides) with a fresh preemption seed, so
+/// spawned threads interleave differently every pass. Panics propagate,
+/// failing the surrounding `#[test]` exactly as real loom does.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let iters: u32 = std::env::var("FCS_LOOM_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    for iter in 0..iters.max(1) {
+        sched::ITER_SEED.store(0x9E37_79B9_u32.wrapping_mul(iter + 1), std::sync::atomic::Ordering::Relaxed);
+        sched::ACTIVE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&f));
+        sched::ACTIVE.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        if let Err(payload) = result {
+            eprintln!("loom facade: model failed on iteration {iter}/{iters}");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+pub mod thread {
+    //! Thread spawning inside a model. Re-exports std; `spawn` adds a
+    //! preemption point at thread start so child bodies don't all begin with
+    //! the same phase relative to the parent.
+    pub use std::thread::{current, park, sleep, yield_now, JoinHandle, Thread, ThreadId};
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::spawn(move || {
+            super::sched::point();
+            f()
+        })
+    }
+}
+
+pub mod sync {
+    use std::fmt;
+    use std::sync::LockResult;
+    pub use std::sync::{Arc, MutexGuard, OnceLock};
+
+    /// Mutex with a preemption point before every acquisition, so lock
+    /// hand-off order varies across model iterations. API-compatible with
+    /// `std::sync::Mutex` for the subset the crate uses (`new`, `lock`,
+    /// `into_inner`, poisoning via `LockResult`).
+    pub struct Mutex<T: ?Sized> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Self { inner: std::sync::Mutex::new(t) }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> Mutex<T> {
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            super::sched::point();
+            self.inner.lock()
+        }
+
+        pub fn try_lock(&self) -> std::sync::TryLockResult<MutexGuard<'_, T>> {
+            super::sched::point();
+            self.inner.try_lock()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Self::new(T::default())
+        }
+    }
+
+    impl<T: ?Sized + fmt::Debug> fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            self.inner.fmt(f)
+        }
+    }
+
+    pub mod atomic {
+        //! Atomic newtypes: every operation is bracketed by a scheduling
+        //! point. Constructors stay `const fn` (unlike real loom) so the
+        //! crate's `static` atomics compile unchanged under `--cfg loom`.
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! atomic_facade {
+            ($name:ident, $std:ty, $val:ty) => {
+                #[derive(Default)]
+                pub struct $name {
+                    inner: $std,
+                }
+
+                impl $name {
+                    pub const fn new(v: $val) -> Self {
+                        Self { inner: <$std>::new(v) }
+                    }
+
+                    pub fn load(&self, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        self.inner.load(order)
+                    }
+
+                    pub fn store(&self, v: $val, order: Ordering) {
+                        super::super::sched::point();
+                        self.inner.store(v, order);
+                    }
+
+                    pub fn swap(&self, v: $val, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        self.inner.swap(v, order)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        current: $val,
+                        new: $val,
+                        success: Ordering,
+                        failure: Ordering,
+                    ) -> Result<$val, $val> {
+                        super::super::sched::point();
+                        self.inner.compare_exchange(current, new, success, failure)
+                    }
+                }
+
+                impl std::fmt::Debug for $name {
+                    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                        self.inner.fmt(f)
+                    }
+                }
+            };
+        }
+
+        macro_rules! atomic_facade_int {
+            ($name:ident, $std:ty, $val:ty) => {
+                atomic_facade!($name, $std, $val);
+
+                impl $name {
+                    pub fn fetch_add(&self, v: $val, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        let prev = self.inner.fetch_add(v, order);
+                        super::super::sched::point();
+                        prev
+                    }
+
+                    pub fn fetch_sub(&self, v: $val, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        let prev = self.inner.fetch_sub(v, order);
+                        super::super::sched::point();
+                        prev
+                    }
+
+                    pub fn fetch_max(&self, v: $val, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        self.inner.fetch_max(v, order)
+                    }
+
+                    pub fn fetch_min(&self, v: $val, order: Ordering) -> $val {
+                        super::super::sched::point();
+                        self.inner.fetch_min(v, order)
+                    }
+                }
+            };
+        }
+
+        atomic_facade!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        atomic_facade_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        atomic_facade_int!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+        atomic_facade_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    }
+}

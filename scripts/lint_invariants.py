@@ -1,0 +1,397 @@
+#!/usr/bin/env python3
+"""Invariant linter: fail CI when the crate's documented contracts drift.
+
+The fcs serving stack carries several cross-file invariants that the Rust
+compiler cannot see — stable metric names promised to dashboards, failpoint
+site labels, the coordinator op tables, and the PR 10 atomic-ordering audit.
+This linter parses the sources and docs statically and exits nonzero on any
+drift:
+
+  R1  metrics-code-to-doc   every metric family registered in
+                            rust/src/obs/mod.rs appears in an EXPERIMENTS.md
+                            stable-name table row
+  R2  metrics-doc-to-code   every `fcs_*` family named in an EXPERIMENTS.md
+                            table row is registered in code
+  R3  fault-sites           `obs::FAULT_SITES` labels and the string
+                            literals at `crate::fault::act(..)` /
+                            `crate::fault::check(..)` call sites match in
+                            both directions (catch-all "other" excepted)
+  R4  request-variants      every `Request` enum variant is covered by
+                            `op_name` with an op string from `obs::OPS`,
+                            every non-catch-all op is produced by some
+                            variant, and `fuses_with` stays exhaustive
+                            (wildcard arm present)
+  R5  ordering-comments     every `Ordering::` use site in rust/src and
+                            rust/tests carries a `// ordering:`
+                            justification comment on the same line or
+                            within the preceding few lines
+  R6  forbid-unsafe         rust/src/lib.rs keeps `#![forbid(unsafe_code)]`
+                            and `#![deny(unreachable_pub)]`
+
+`--self-test` copies the tree, injects one drift of each class, and asserts
+the linter catches every one (and still passes on the pristine copy).
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+# Lines above an `Ordering::` site searched for a `// ordering:` comment
+# (covers a block comment shared by a handful of adjacent loads).
+ORDERING_COMMENT_WINDOW = 12
+
+# Vendored crates are third-party facades, not audited serving code.
+EXCLUDED_PARTS = {"vendor", "target"}
+
+
+def rust_files(root: Path) -> list[Path]:
+    files = []
+    for base in (root / "rust" / "src", root / "rust" / "tests"):
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.rs")):
+            if EXCLUDED_PARTS.isdisjoint(p.parts):
+                files.append(p)
+    return files
+
+
+def parse_registered_metrics(obs_mod: str) -> set[str]:
+    """Family names from reg.counter/gauge/histogram(...) registration calls.
+
+    The first string literal after the call token is the family name; it may
+    sit on the following line (rustfmt wraps long calls).
+    """
+    names = set()
+    for m in re.finditer(r"reg\s*\.\s*(?:counter|gauge|histogram)\s*\(", obs_mod):
+        tail = obs_mod[m.end() : m.end() + 200]
+        lit = re.search(r'"([^"]+)"', tail)
+        if lit:
+            names.add(lit.group(1))
+    return names
+
+
+def parse_doc_table_metrics(experiments: str) -> set[str]:
+    """`fcs_*` families named in markdown table rows of EXPERIMENTS.md."""
+    names = set()
+    for line in experiments.splitlines():
+        if not line.lstrip().startswith("|"):
+            continue
+        for m in re.finditer(r"`(fcs_[a-z0-9_]+)`", line):
+            names.add(m.group(1))
+    return names
+
+
+def parse_str_array(source: str, array_name: str) -> list[str]:
+    """String literals of a `pub const NAME: [&str; N] = [ ... ];` block."""
+    m = re.search(
+        rf"const\s+{array_name}\s*:\s*\[&str;\s*\d+\]\s*=\s*\[(.*?)\];",
+        source,
+        re.DOTALL,
+    )
+    if not m:
+        return []
+    return re.findall(r'"([^"]+)"', m.group(1))
+
+
+def parse_fault_call_sites(root: Path) -> dict[str, list[str]]:
+    """site-label -> [file:line] for qualified fault::act / fault::check calls.
+
+    Only path-qualified calls count: bare `check("...")` inside
+    `fault/mod.rs` tests exercises the registry, it is not an injection site.
+    """
+    sites: dict[str, list[str]] = {}
+    for p in rust_files(root):
+        if "tests" in p.parts:
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            for m in re.finditer(r"fault::(?:act|check)\(\s*\"([^\"]+)\"", line):
+                sites.setdefault(m.group(1), []).append(f"{p}:{i}")
+    return sites
+
+
+def extract_fn_body(source: str, fn_name: str) -> str:
+    """Brace-matched body of `fn <fn_name>` (best effort, comment-naive)."""
+    m = re.search(rf"fn\s+{fn_name}\s*\(", source)
+    if not m:
+        return ""
+    start = source.find("{", m.end())
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(source)):
+        if source[i] == "{":
+            depth += 1
+        elif source[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return source[start : i + 1]
+    return source[start:]
+
+
+def parse_request_variants(msg: str) -> list[str]:
+    m = re.search(r"pub enum Request\s*\{(.*?)\n\}", msg, re.DOTALL)
+    if not m:
+        return []
+    variants = []
+    for line in m.group(1).splitlines():
+        vm = re.match(r"\s*([A-Z][A-Za-z0-9]*)\s*\{", line)
+        if vm:
+            variants.append(vm.group(1))
+    return variants
+
+
+def check(root: Path) -> list[str]:
+    errors: list[str] = []
+    obs_path = root / "rust" / "src" / "obs" / "mod.rs"
+    msg_path = root / "rust" / "src" / "coordinator" / "msg.rs"
+    lib_path = root / "rust" / "src" / "lib.rs"
+    doc_path = root / "EXPERIMENTS.md"
+    for p in (obs_path, msg_path, lib_path, doc_path):
+        if not p.is_file():
+            return [f"missing expected file: {p}"]
+    obs_mod = obs_path.read_text()
+    msg = msg_path.read_text()
+
+    # R1/R2 — metric families, both directions.
+    code_metrics = parse_registered_metrics(obs_mod)
+    doc_metrics = parse_doc_table_metrics(doc_path.read_text())
+    if not code_metrics:
+        errors.append("R1: found no metric registrations in obs/mod.rs (parser drift?)")
+    for name in sorted(code_metrics - doc_metrics):
+        errors.append(
+            f"R1 metrics-code-to-doc: `{name}` is registered in obs/mod.rs but "
+            "appears in no EXPERIMENTS.md stable-name table row"
+        )
+    for name in sorted(doc_metrics - code_metrics):
+        errors.append(
+            f"R2 metrics-doc-to-code: `{name}` is documented in an EXPERIMENTS.md "
+            "table but no code registers it"
+        )
+
+    # R3 — fault sites vs call-site literals.
+    fault_sites = set(parse_str_array(obs_mod, "FAULT_SITES"))
+    if not fault_sites:
+        errors.append("R3: could not parse obs::FAULT_SITES (parser drift?)")
+    call_sites = parse_fault_call_sites(root)
+    for label, locs in sorted(call_sites.items()):
+        if label not in fault_sites:
+            errors.append(
+                f"R3 fault-sites: call site label \"{label}\" ({locs[0]}) is not in "
+                "obs::FAULT_SITES — its firings would land in the `other` series"
+            )
+    for label in sorted(fault_sites - set(call_sites) - {"other"}):
+        errors.append(
+            f"R3 fault-sites: obs::FAULT_SITES lists \"{label}\" but no "
+            "fault::act/check call site uses it"
+        )
+
+    # R4 — Request variant exhaustiveness vs op tables and fuses_with.
+    variants = parse_request_variants(msg)
+    if not variants:
+        errors.append("R4: could not parse `pub enum Request` (parser drift?)")
+    ops = parse_str_array(obs_mod, "OPS")
+    op_name_body = extract_fn_body(msg, "op_name")
+    covered_ops = set()
+    for v in variants:
+        arm = re.search(rf"Request::{v}\s*{{[^}}]*}}\s*=>\s*\"([a-z_]+)\"", op_name_body)
+        if not arm:
+            errors.append(
+                f"R4 request-variants: variant `{v}` has no arm in Request::op_name"
+            )
+            continue
+        op = arm.group(1)
+        covered_ops.add(op)
+        if op not in ops:
+            errors.append(
+                f"R4 request-variants: op_name maps `{v}` to \"{op}\", which is "
+                "missing from obs::OPS"
+            )
+    for op in ops:
+        if op != "other" and op not in covered_ops:
+            errors.append(
+                f"R4 request-variants: obs::OPS lists \"{op}\" but no Request "
+                "variant produces it"
+            )
+    fuses_body = extract_fn_body(msg, "fuses_with")
+    if fuses_body and not re.search(r"\n\s*_\s*=>", fuses_body):
+        errors.append(
+            "R4 request-variants: fuses_with lost its wildcard arm — new variants "
+            "would no longer default to non-fusing"
+        )
+
+    # R5 — ordering justification comments.
+    for p in rust_files(root):
+        lines = p.read_text().splitlines()
+        for i, line in enumerate(lines):
+            stripped = line.strip()
+            if "Ordering::" not in line or stripped.startswith("//"):
+                continue
+            window = lines[max(0, i - ORDERING_COMMENT_WINDOW) : i + 1]
+            if not any("// ordering:" in w for w in window):
+                errors.append(
+                    f"R5 ordering-comments: {p}:{i + 1} uses Ordering:: without a "
+                    "`// ordering:` justification comment"
+                )
+
+    # R6 — lint attributes present.
+    lib = lib_path.read_text()
+    for attr in ("#![forbid(unsafe_code)]", "#![deny(unreachable_pub)]"):
+        if attr not in lib:
+            errors.append(f"R6 forbid-unsafe: rust/src/lib.rs lost `{attr}`")
+    return errors
+
+
+def run(root: Path) -> int:
+    errors = check(root)
+    if errors:
+        for e in errors:
+            print(f"lint_invariants: {e}", file=sys.stderr)
+        print(f"lint_invariants: FAILED ({len(errors)} violation(s))", file=sys.stderr)
+        return 1
+    print("lint_invariants: OK (R1-R6 clean)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# self-test: inject each drift class, assert detection
+# ---------------------------------------------------------------------------
+
+
+def copy_tree(src_root: Path, dst_root: Path) -> None:
+    for rel in ("rust/src", "rust/tests"):
+        shutil.copytree(
+            src_root / rel,
+            dst_root / rel,
+            ignore=shutil.ignore_patterns("vendor", "target"),
+        )
+    shutil.copy(src_root / "EXPERIMENTS.md", dst_root / "EXPERIMENTS.md")
+
+
+def mutate(path: Path, old: str, new: str, *, append: bool = False) -> None:
+    text = path.read_text()
+    if append:
+        path.write_text(text + new)
+        return
+    assert old in text, f"self-test fixture drift: {old!r} not found in {path}"
+    path.write_text(text.replace(old, new, 1))
+
+
+def self_test(repo_root: Path) -> int:
+    cases = [
+        (
+            "R1 unregistered-in-docs metric",
+            "rust/src/obs/mod.rs",
+            lambda p: mutate(
+                p,
+                'reg.counter(\n            "fcs_retries_total"',
+                'reg.counter(\n            "fcs_bogus_total"',
+            ),
+            "R1",
+        ),
+        (
+            "R2 phantom doc metric",
+            "EXPERIMENTS.md",
+            lambda p: mutate(
+                p,
+                "",
+                "\n| `fcs_phantom_total` | counter | — | does not exist |\n",
+                append=True,
+            ),
+            "R2",
+        ),
+        (
+            "R3 unknown fault-site label",
+            "rust/src/obs/exporter.rs",
+            lambda p: mutate(
+                p, 'crate::fault::check("exporter")', 'crate::fault::check("exporterr")'
+            ),
+            "R3",
+        ),
+        (
+            "R4 uncovered Request variant",
+            "rust/src/coordinator/msg.rs",
+            lambda p: mutate(
+                p,
+                "pub enum Request {",
+                "pub enum Request {\n    Bogus { marker: usize },",
+            ),
+            "R4",
+        ),
+        (
+            "R5 stripped ordering comment",
+            "rust/src/coordinator/retry.rs",
+            lambda p: p.write_text(
+                "\n".join(
+                    l
+                    for l in p.read_text().splitlines()
+                    if "// ordering:" not in l
+                )
+                + "\n"
+            ),
+            "R5",
+        ),
+        (
+            "R6 dropped forbid(unsafe_code)",
+            "rust/src/lib.rs",
+            lambda p: mutate(p, "#![forbid(unsafe_code)]", ""),
+            "R6",
+        ),
+    ]
+    failures = 0
+    with tempfile.TemporaryDirectory(prefix="lint_inv_selftest_") as td:
+        pristine = Path(td) / "pristine"
+        copy_tree(repo_root, pristine)
+        base_errors = check(pristine)
+        if base_errors:
+            print("self-test: pristine copy must lint clean, got:", file=sys.stderr)
+            for e in base_errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        print("self-test: pristine copy lints clean")
+        for name, rel, inject, want_rule in cases:
+            case_root = Path(td) / want_rule
+            copy_tree(repo_root, case_root)
+            inject(case_root / rel)
+            errors = check(case_root)
+            hits = [e for e in errors if e.startswith(want_rule)]
+            if hits:
+                print(f"self-test: {name}: caught ({hits[0][:100]}...)")
+            else:
+                failures += 1
+                print(
+                    f"self-test: {name}: NOT CAUGHT (errors: {errors})",
+                    file=sys.stderr,
+                )
+    if failures:
+        print(f"self-test: FAILED ({failures} drift class(es) escaped)", file=sys.stderr)
+        return 1
+    print("self-test: OK — every drift class detected")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repository root (default: this script's parent's parent)",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="inject each drift class into a temp copy and assert detection",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test(args.root)
+    return run(args.root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

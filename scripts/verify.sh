@@ -11,6 +11,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== invariant lint (self-test + repo scan) =="
+# Static drift gate: stable metric names ↔ EXPERIMENTS.md tables, failpoint
+# site labels ↔ call sites, Request variant exhaustiveness, atomic-ordering
+# justification comments, forbid(unsafe_code). The self-test proves each
+# drift class is actually detectable before the clean run is trusted.
+python3 scripts/lint_invariants.py --self-test
+python3 scripts/lint_invariants.py
+
 echo "== cargo fmt --check =="
 # Advisory: the offline image may carry a different rustfmt (or none); style
 # drift should be visible in CI logs but must not mask real build failures.
